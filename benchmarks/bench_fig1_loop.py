@@ -1,0 +1,87 @@
+"""Fig. 1: naive (keras.train_on_batch) vs fused (custom tf.function loop).
+
+The paper's bottleneck: generator-input initialisation runs SEQUENTIALLY on
+the host, so its cost grows with the global batch (= replicas x per-replica
+batch) while the fused loop keeps everything on-device.  We measure both
+step implementations across global batch sizes and report the host-init
+share — the quantity that blows up in the paper's left/right panels.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import calo3dgan
+from repro.core import adversarial
+from repro.data.calo import CaloSimulator, CaloSpec
+from repro.optim import optimizers as opt_lib
+
+
+def run(batches=(8, 16, 32), steps=2, reduced=True):
+    cfg = calo3dgan.bench() if reduced else calo3dgan.config()
+    g_opt = opt_lib.rmsprop(1e-4)
+    d_opt = opt_lib.rmsprop(1e-4)
+    sim = CaloSimulator(CaloSpec(image_shape=cfg.image_shape), seed=0)
+    rows = []
+    for B in batches:
+        state = adversarial.init_state(jax.random.key(0), cfg, g_opt, d_opt)
+        batch_np = next(sim.batches(B))
+        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+
+        naive = adversarial.NaiveStep(cfg, g_opt, d_opt, seed=1)
+        fused = jax.jit(adversarial.make_fused_step(cfg, g_opt, d_opt))
+
+        # warmup (compile) then measure
+        naive(state, batch_np)
+        s2, _ = fused(state, batch, jax.random.key(1))
+        jax.block_until_ready(s2.g_params)
+
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            naive(state, batch_np)
+        t_naive = (time.perf_counter() - t0) / steps
+
+        # host-side generator-input init alone (the sequential part)
+        t0 = time.perf_counter()
+        for _ in range(steps * 3):          # 1 D-fake + 2 G inits per step
+            naive.host_generator_inputs(B)
+        t_host = (time.perf_counter() - t0) / steps
+
+        rng = jax.random.key(2)
+        t0 = time.perf_counter()
+        for i in range(steps):
+            rng, k = jax.random.split(rng)
+            s2, m = fused(state, batch, k)
+        jax.block_until_ready(s2.g_params)
+        t_fused = (time.perf_counter() - t0) / steps
+
+        rows.append({"global_batch": B,
+                     "naive_ms": 1e3 * t_naive,
+                     "fused_ms": 1e3 * t_fused,
+                     "host_init_ms": 1e3 * t_host,
+                     "speedup": t_naive / t_fused})
+    return rows
+
+
+def main():
+    rows = run()
+    print("bench_fig1_loop: naive vs fused adversarial step")
+    print(f"{'B':>5} {'naive_ms':>10} {'fused_ms':>10} {'host_ms':>9} "
+          f"{'speedup':>8}")
+    for r in rows:
+        print(f"{r['global_batch']:>5} {r['naive_ms']:>10.1f} "
+              f"{r['fused_ms']:>10.1f} {r['host_init_ms']:>9.2f} "
+              f"{r['speedup']:>8.2f}")
+    # the paper's claim: host-init time grows ~linearly with global batch
+    h = [r["host_init_ms"] for r in rows]
+    growth = h[-1] / max(h[0], 1e-9)
+    print(f"host-init growth x{growth:.1f} over batch x{rows[-1]['global_batch'] // rows[0]['global_batch']}"
+          f" (paper Fig.1-right: linear in replicas)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

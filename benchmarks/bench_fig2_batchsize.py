@@ -1,0 +1,72 @@
+"""Fig. 2 (left/center): batch-size impact on time-per-epoch + the MXU
+alignment argument.
+
+Measured: fused-step throughput (samples/s) on CPU for BS in {32, 64, 128}.
+Derived: v5e MXU-utilisation model — a (B, K) @ (K, N) matmul issues
+ceil(B/128) systolic passes, so BS=64 wastes half the array exactly as the
+paper observed on v3 (BS=64 took the same time as BS=128).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import calo3dgan
+from repro.core import adversarial
+from repro.data.calo import CaloSimulator, CaloSpec
+from repro.optim import optimizers as opt_lib
+
+
+def mxu_passes(batch: int, mxu: int = 128) -> int:
+    return -(-batch // mxu)
+
+
+def run(batch_sizes=(16, 32, 64), steps=2):
+    cfg = calo3dgan.bench()
+    g_opt = opt_lib.rmsprop(1e-4)
+    d_opt = opt_lib.rmsprop(1e-4)
+    sim = CaloSimulator(CaloSpec(image_shape=cfg.image_shape), seed=0)
+    fused = jax.jit(adversarial.make_fused_step(cfg, g_opt, d_opt))
+    rows = []
+    for B in batch_sizes:
+        state = adversarial.init_state(jax.random.key(0), cfg, g_opt, d_opt)
+        batch = {k: jnp.asarray(v) for k, v in next(sim.batches(B)).items()}
+        s2, _ = fused(state, batch, jax.random.key(1))
+        jax.block_until_ready(s2.g_params)
+        rng = jax.random.key(2)
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            rng, k = jax.random.split(rng)
+            s2, _ = fused(state, batch, k)
+        jax.block_until_ready(s2.g_params)
+        dt = (time.perf_counter() - t0) / steps
+        rows.append({
+            "batch": B,
+            "step_ms": 1e3 * dt,
+            "samples_per_s": B / dt,
+            # derived MXU model: time per step ∝ systolic passes
+            "mxu_passes": mxu_passes(B),
+            "mxu_time_rel": mxu_passes(B) / mxu_passes(128),
+        })
+    return rows
+
+
+def main():
+    rows = run()
+    print("bench_fig2_batchsize: fused-step throughput vs batch size")
+    print(f"{'BS':>5} {'step_ms':>9} {'samples/s':>10} "
+          f"{'mxu_passes':>11} {'v5e_rel_time':>12}")
+    for r in rows:
+        print(f"{r['batch']:>5} {r['step_ms']:>9.1f} "
+              f"{r['samples_per_s']:>10.1f} {r['mxu_passes']:>11} "
+              f"{r['mxu_time_rel']:>12.2f}")
+    print("derived: BS=64 and BS=128 take the SAME number of MXU passes "
+          "(1) -> same step time on TPU (paper Fig.2-center); BS=256 takes "
+          "2 passes -> 2x time")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

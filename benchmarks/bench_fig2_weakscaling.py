@@ -1,0 +1,77 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=128 "
+                           "--xla_backend_optimization_level=0 "
+                           "--xla_llvm_disable_expensive_passes=true")
+"""Fig. 2 (right): weak scaling 8 -> 128 TPU cores for the 3DGAN.
+
+Runs in its OWN process (sets a 128-device pool before importing jax).
+For each core count we compile the fused GAN step with the paper's
+per-core BS=128 (global batch grows with cores: weak scaling), derive the
+roofline-bound step time and the epoch time for the paper's dataset, and
+compare with the ideal linear-scaling line — the quantities in Fig. 2-right.
+"""
+import time
+
+import numpy as np
+
+EPOCH_SAMPLES = 180_000       # paper-era 3DGAN training-set scale
+
+
+def run(core_counts=(8, 16, 32, 64, 128)):
+    import jax
+    from jax.sharding import Mesh
+    from repro.launch import build as build_lib
+    from repro.launch.mesh import HARDWARE
+    from repro.parallel import collectives, jaxpr_cost
+    from benchmarks.roofline import ici_per_chip_bytes
+
+    devs = np.array(jax.devices())
+    rows = []
+    for n in core_counts:
+        mesh = Mesh(devs[:n].reshape(n, 1), ("data", "model"))
+        with mesh:
+            built = build_lib.build_gan_train(mesh, policy_name="bf16")
+            lowered = built.lower()
+            compiled = lowered.compile()
+        jc = jaxpr_cost.cost_of(built.fn, *built.args)
+        coll = collectives.collective_stats(compiled.as_text())
+        compute_s = jc["flops"] / (n * HARDWARE["peak_flops_bf16"])
+        memory_s = jc["bytes"] / (n * HARDWARE["hbm_bw"])
+        coll_s = ici_per_chip_bytes(coll, n) / HARDWARE["ici_bw"]
+        step_s = max(compute_s, memory_s, coll_s)
+        global_batch = 128 * n
+        steps_per_epoch = EPOCH_SAMPLES / global_batch
+        rows.append({
+            "cores": n,
+            "global_batch": global_batch,
+            "step_s_bound": step_s,
+            "epoch_s": step_s * steps_per_epoch,
+            "compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": coll_s,
+            "dominant": max(("compute", compute_s), ("memory", memory_s),
+                            ("collective", coll_s), key=lambda kv: kv[1])[0],
+        })
+        jax.clear_caches()
+    ideal0 = rows[0]["epoch_s"] * rows[0]["cores"]
+    for r in rows:
+        r["ideal_epoch_s"] = ideal0 / r["cores"]
+        r["efficiency"] = r["ideal_epoch_s"] / r["epoch_s"]
+    return rows
+
+
+def main():
+    rows = run()
+    print("bench_fig2_weakscaling: 3DGAN roofline-derived epoch time "
+          "(BS=128/core, weak scaling)")
+    print(f"{'cores':>6} {'epoch_s':>9} {'ideal_s':>9} {'eff':>6} "
+          f"{'dominant':>11}")
+    for r in rows:
+        print(f"{r['cores']:>6} {r['epoch_s']:>9.1f} "
+              f"{r['ideal_epoch_s']:>9.1f} {r['efficiency']:>6.2f} "
+              f"{r['dominant']:>11}")
+    print("paper Fig.2-right: linear to 128 cores, epoch ~30s at v3-128")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Fig. 5: scaling + cost-per-epoch on GCP (V100 reserved/preemptible, TPU).
+
+Reproduces the paper's cost table: epoch time drops ~linearly with GPUs
+while cost/epoch stays ~flat; preemptible TPU v3-8 is ~2.4x cheaper than
+the GPU-equivalent epoch.  Epoch times follow the paper's measured scaling
+efficiencies; prices are the paper-era GCP europe-west4 list.
+"""
+from __future__ import annotations
+
+from repro.cloud import costs as cost_lib
+
+# paper: one epoch on 2 V100s (BS=96/GPU) — anchor point, seconds
+BASE_EPOCH_S_2GPU = 5200.0
+# TPU comparison anchors (paper Fig. 2/5): v3-8 epoch and v3-32 epoch
+TPU_V3_8_EPOCH_S = 480.0
+TPU_V3_32_EPOCH_S = 120.0
+
+
+def run():
+    rows = []
+    for pre in (False, True):
+        for ec in cost_lib.scaling_cost_table(BASE_EPOCH_S_2GPU,
+                                              preemptible=pre):
+            rows.append({"device": ec.device, "n": ec.n_devices,
+                         "epoch_s": ec.epoch_time_s, "cost_usd": ec.cost})
+    for ver, cores, t, pre in (("v3", 8, TPU_V3_8_EPOCH_S, True),
+                               ("v3", 8, TPU_V3_8_EPOCH_S, False),
+                               ("v3", 32, TPU_V3_32_EPOCH_S, False)):
+        ec = cost_lib.tpu_epoch_cost(ver, cores, t, preemptible=pre)
+        rows.append({"device": ec.device, "n": ec.n_devices,
+                     "epoch_s": ec.epoch_time_s, "cost_usd": ec.cost})
+    return rows
+
+
+def main():
+    rows = run()
+    print("bench_fig5_cost: cost per epoch (GCP europe-west4, paper-era)")
+    print(f"{'device':>16} {'n':>4} {'epoch_s':>9} {'cost_usd':>9}")
+    for r in rows:
+        print(f"{r['device']:>16} {r['n']:>4} {r['epoch_s']:>9.0f} "
+              f"{r['cost_usd']:>9.2f}")
+    # paper claims
+    pre = [r for r in rows if r["device"] == "V100-pre"]
+    flat = max(r["cost_usd"] for r in pre) / min(r["cost_usd"] for r in pre)
+    print(f"cost/epoch spread across 2..128 preemptible GPUs: x{flat:.2f} "
+          "(paper: ~flat)")
+    v100_64 = next(r for r in pre if r["n"] == 64)
+    tpu8 = next(r for r in rows if r["device"] == "TPU-v3-8-pre")
+    print(f"preemptible TPU v3-8 vs 64 preemptible V100: "
+          f"{v100_64['cost_usd'] / tpu8['cost_usd']:.1f}x cheaper "
+          "(paper: 2.4x vs GPU-equivalent)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

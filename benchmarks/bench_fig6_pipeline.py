@@ -1,0 +1,90 @@
+"""Fig. 6 (right): data-pipeline optimisation — prefetch/caching vs naive.
+
+The paper verified that Azure ML's automatic dataset management (caching,
+prefetching, parallel loading) matches a hand-tuned tf.data pipeline.  The
+JAX analogue measured here: the double-buffered host->device ``prefetch``
+iterator (data/pipeline.py) overlapping host batch prep with device
+compute, vs. a naive synchronous iterator that prepares each batch on the
+host while the device idles.
+
+On a 1-core CPU container the overlap win is bounded by the shared core;
+on a real TPU host (many cores, device compute off-CPU) the naive loop's
+host time adds ~fully to step time — the derived column models that.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import calo3dgan
+from repro.core import adversarial
+from repro.data.calo import CaloSimulator, CaloSpec
+from repro.data.pipeline import prefetch
+from repro.optim import optimizers as opt_lib
+
+
+def run(steps=6, batch=16):
+    cfg = calo3dgan.bench()
+    g_opt = opt_lib.rmsprop(1e-4)
+    d_opt = opt_lib.rmsprop(1e-4)
+    state = adversarial.init_state(jax.random.key(0), cfg, g_opt, d_opt)
+    fused = jax.jit(adversarial.make_fused_step(cfg, g_opt, d_opt))
+    sim = CaloSimulator(CaloSpec(image_shape=cfg.image_shape), seed=0)
+
+    # warmup / compile
+    b0 = {k: jnp.asarray(v) for k, v in next(sim.batches(batch)).items()}
+    s, _ = fused(state, b0, jax.random.key(1))
+    jax.block_until_ready(s.g_params)
+
+    # host-side data-prep cost alone
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        next(sim.batches(batch))
+    t_host = (time.perf_counter() - t0) / steps
+
+    # naive: synchronous host prep each step
+    it = sim.batches(batch)
+    rng = jax.random.key(2)
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        b = {k: jnp.asarray(v) for k, v in next(it).items()}
+        rng, k = jax.random.split(rng)
+        s, _ = fused(state, b, k)
+    jax.block_until_ready(s.g_params)
+    t_naive = (time.perf_counter() - t0) / steps
+
+    # prefetched: host prep overlaps device compute
+    rng = jax.random.key(2)
+    pf = prefetch(sim.batches(batch), size=2)
+    t0 = time.perf_counter()
+    for _, b in zip(range(steps), pf):
+        rng, k = jax.random.split(rng)
+        s, _ = fused(state, b, k)
+    jax.block_until_ready(s.g_params)
+    t_pf = (time.perf_counter() - t0) / steps
+
+    return {
+        "host_prep_ms": 1e3 * t_host,
+        "naive_ms": 1e3 * t_naive,
+        "prefetch_ms": 1e3 * t_pf,
+        # derived: on a TPU host the device step does not occupy the host
+        # cores, so prefetch hides min(host, device) fully
+        "derived_tpu_hidden_frac": min(t_host, t_naive - t_host)
+        / max(t_naive, 1e-9),
+    }
+
+
+def main():
+    r = run()
+    print("bench_fig6_pipeline: prefetch overlap vs naive host prep")
+    for k, v in r.items():
+        print(f"  {k:24s} {v:.2f}")
+    print("paper Fig.6-right: managed pipeline == hand-tuned cache/prefetch;"
+          " the win is hiding host prep behind device compute")
+    return r
+
+
+if __name__ == "__main__":
+    main()

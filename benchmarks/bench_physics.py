@@ -1,0 +1,65 @@
+"""Fig. 3 / Fig. 7: calorimeter energy response — GAN vs Monte Carlo.
+
+Trains the reduced 3DGAN for a short burst (CPU-sized stand-in for the
+paper's convergence run) and reports the longitudinal/transverse profile
+divergences and the edge-region error — the quantities the paper tracks
+when checking that distributed training preserves physics fidelity.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import calo3dgan
+from repro.core import adversarial, gan, validation
+from repro.data.calo import CaloSimulator, CaloSpec
+from repro.optim import optimizers as opt_lib
+
+
+def run(steps=30, batch=16, seed=0):
+    cfg = calo3dgan.bench()
+    g_opt = opt_lib.rmsprop(2e-4)
+    d_opt = opt_lib.rmsprop(2e-4)
+    state = adversarial.init_state(jax.random.key(seed), cfg, g_opt, d_opt)
+    fused = jax.jit(adversarial.make_fused_step(cfg, g_opt, d_opt),
+                    donate_argnums=(0,))
+    sim = CaloSimulator(CaloSpec(image_shape=cfg.image_shape), seed=seed)
+    rng = jax.random.key(seed + 1)
+    it = sim.batches(batch)
+    t0 = time.time()
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in next(it).items()}
+        rng, k = jax.random.split(rng)
+        state, m = fused(state, b, k)
+    train_s = time.time() - t0
+
+    # GAN samples vs fresh MC at matched labels
+    mc = next(sim.batches(256))
+    noise = jax.random.normal(jax.random.key(99), (256, cfg.latent_dim))
+    fake = gan.generate(state.g_params, noise, jnp.asarray(mc["e_p"]),
+                        jnp.asarray(mc["theta"]), cfg)
+    rep = validation.validation_report(np.asarray(fake), mc["image"],
+                                       mc["e_p"], mc["e_p"])
+    rep["train_s"] = train_s
+    rep["steps"] = steps
+    return rep
+
+
+def main():
+    rep = run()
+    print("bench_physics: GAN vs MC energy response "
+          f"({rep['steps']} steps, {rep['train_s']:.0f}s train)")
+    for k in ("longitudinal_kl", "transverse_x_kl", "transverse_y_kl",
+              "longitudinal_edge_err", "transverse_x_edge_err",
+              "response_mean_gan", "response_mean_mc", "response_rel_err"):
+        print(f"  {k:26s} {rep[k]:.4f}")
+    print("paper Fig.3: profiles agree in bulk; edges degrade first at "
+          "scale — edge_err is the early-warning metric")
+    return rep
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Benchmark harness: one benchmark per paper table/figure.
+
+In-process (1 CPU device): fig1 loop, fig2 batch-size, physics, fig5 cost.
+Subprocess (own device pool): fig2 weak scaling (128 devs), fig4 layout
+(32 devs), and the §Roofline report (reads results/dryrun_baseline.json
+produced by repro.launch.dryrun).
+
+  PYTHONPATH=src python -m benchmarks.run [--skip-subprocess]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+
+HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _banner(name):
+    print("\n" + "=" * 72)
+    print(f"== {name}")
+    print("=" * 72, flush=True)
+
+
+def _sub(mod):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(HERE, "src")
+    env.pop("XLA_FLAGS", None)          # each module sets its own
+    t0 = time.time()
+    r = subprocess.run([sys.executable, "-m", mod], cwd=HERE, env=env)
+    print(f"[{mod}: {'ok' if r.returncode == 0 else 'FAILED'} "
+          f"in {time.time() - t0:.0f}s]")
+    return r.returncode
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-subprocess", action="store_true",
+                    help="only the in-process benches (single device)")
+    args = ap.parse_args()
+
+    failures = []
+
+    _banner("Fig.1 — naive vs fused adversarial loop")
+    from benchmarks import bench_fig1_loop
+    bench_fig1_loop.main()
+
+    _banner("Fig.2 (left/center) — batch-size impact")
+    from benchmarks import bench_fig2_batchsize
+    bench_fig2_batchsize.main()
+
+    _banner("Fig.3/7 — physics validation (GAN vs MC)")
+    from benchmarks import bench_physics
+    bench_physics.main()
+
+    _banner("Fig.5 — cloud cost per epoch")
+    from benchmarks import bench_fig5_cost
+    bench_fig5_cost.main()
+
+    _banner("Fig.6 — data-pipeline prefetch overlap")
+    from benchmarks import bench_fig6_pipeline
+    bench_fig6_pipeline.main()
+
+    if not args.skip_subprocess:
+        _banner("Fig.2 (right) — weak scaling 8..128 cores [subprocess]")
+        if _sub("benchmarks.bench_fig2_weakscaling"):
+            failures.append("weakscaling")
+
+        _banner("Fig.4 — worker/mesh layout sweep [subprocess]")
+        if _sub("benchmarks.bench_fig4_layout"):
+            failures.append("layout")
+
+        _banner("§Roofline — per (arch x shape x mesh) [reads dry-run JSON]")
+        dj = os.path.join(HERE, "results", "dryrun_baseline.json")
+        if os.path.exists(dj):
+            if _sub("benchmarks.roofline"):
+                failures.append("roofline")
+        else:
+            print(f"skipped: {dj} not found — run "
+                  "`python -m repro.launch.dryrun --all --both-meshes "
+                  "--out results/dryrun_baseline.json` first")
+
+    print("\nbenchmarks done" + (f"; FAILURES: {failures}" if failures else ""))
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Quickstart: the paper's technique in 60 lines.
+
+Trains the (reduced) 3DGAN with the FUSED adversarial step — the paper's
+custom-training-loop optimisation — on synthetic calorimeter Monte Carlo,
+then validates the generated showers against fresh MC.
+
+  PYTHONPATH=src python examples/quickstart.py [--steps 40]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import calo3dgan
+from repro.core import adversarial, gan, validation
+from repro.data.calo import CaloSimulator, CaloSpec
+from repro.optim import optimizers as opt_lib
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--batch", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = calo3dgan.reduced()
+    g_opt = opt_lib.rmsprop(2e-4)
+    d_opt = opt_lib.rmsprop(2e-4)
+
+    # ---- the paper's contribution: ONE compiled program for Algorithm 1
+    state = adversarial.init_state(jax.random.key(0), cfg, g_opt, d_opt)
+    fused_step = jax.jit(adversarial.make_fused_step(cfg, g_opt, d_opt),
+                         donate_argnums=(0,))
+
+    # ---- synthetic Geant4 stand-in ------------------------------------
+    sim = CaloSimulator(CaloSpec(image_shape=cfg.image_shape), seed=0)
+    batches = sim.batches(args.batch)
+
+    rng = jax.random.key(1)
+    for i, batch in zip(range(args.steps), batches):
+        b = {k: jnp.asarray(v) for k, v in batch.items()}
+        rng, k = jax.random.split(rng)
+        state, metrics = fused_step(state, b, k)
+        if i % 10 == 0:
+            print(f"step {i:4d}  d_real={float(metrics['d_loss_real']):.3f} "
+                  f"d_fake={float(metrics['d_loss_fake']):.3f} "
+                  f"g={float(metrics['g_loss']):.3f}")
+
+    # ---- physics validation (paper Fig. 3) ------------------------------
+    mc = next(sim.batches(128))
+    noise = jax.random.normal(jax.random.key(2), (128, cfg.latent_dim))
+    fake = gan.generate(state.g_params, noise, jnp.asarray(mc["e_p"]),
+                        jnp.asarray(mc["theta"]), cfg)
+    rep = validation.validation_report(np.asarray(fake), mc["image"],
+                                       mc["e_p"], mc["e_p"])
+    print("\nGAN vs Monte Carlo:")
+    for k, v in rep.items():
+        print(f"  {k:24s} {v:.4f}")
+
+
+if __name__ == "__main__":
+    main()

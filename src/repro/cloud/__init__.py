@@ -1,0 +1,3 @@
+from repro.cloud.costs import EpochCost, PRICES, gpu_epoch_cost, scaling_cost_table, tpu_epoch_cost
+
+__all__ = ["EpochCost", "PRICES", "gpu_epoch_cost", "scaling_cost_table", "tpu_epoch_cost"]

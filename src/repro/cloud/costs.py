@@ -1,0 +1,77 @@
+"""Cloud cost model (paper §5.1.2, Fig. 5-right).
+
+Reproduces the paper's cost-per-epoch analysis: GCP europe-west4 hourly
+prices (2020/2021 era, as in the paper) for V100 GPUs (reserved vs.
+preemptible) and TPU v2/v3 slices, plus the v5e pricing used for the
+roofline target.  The paper's headline numbers this model reproduces:
+
+- cost/epoch stays ~flat as GPUs scale 2 -> 128 while epoch time drops
+  ~linearly (Fig. 5);
+- preemptible V100s are >3x cheaper than reserved;
+- preemptible TPU v3-8 is ~2.4x cheaper than the GPU-equivalent epoch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+# $/hour, GCP europe-west4 (paper-era list prices)
+PRICES = {
+    "v100_reserved": 2.55,          # per GPU
+    "v100_preemptible": 0.77,       # per GPU (>3x cheaper, paper §5.1)
+    "n1_vm_per_8gpu": 1.52,         # VM share per 8-GPU node (<5% of total)
+    "tpu_v2_8_preemptible": 1.35,   # per 8-core slice
+    "tpu_v3_8_preemptible": 2.40,
+    "tpu_v2_8_reserved": 4.50,
+    "tpu_v3_8_reserved": 8.00,
+    "tpu_v3_32_reserved": 32.00,
+    "tpu_v5e_reserved": 1.20,       # per chip (roofline target hardware)
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class EpochCost:
+    device: str
+    n_devices: int
+    epoch_time_s: float
+    price_per_hour: float
+
+    @property
+    def cost(self) -> float:
+        return self.price_per_hour * self.epoch_time_s / 3600.0
+
+
+def gpu_epoch_cost(n_gpus: int, epoch_time_s: float,
+                   preemptible: bool = True) -> EpochCost:
+    gpu = PRICES["v100_preemptible" if preemptible else "v100_reserved"]
+    vms = -(-n_gpus // 8) * PRICES["n1_vm_per_8gpu"]
+    return EpochCost("V100" + ("-pre" if preemptible else ""), n_gpus,
+                     epoch_time_s, n_gpus * gpu + vms)
+
+
+def tpu_epoch_cost(version: str, cores: int, epoch_time_s: float,
+                   preemptible: bool = True) -> EpochCost:
+    kind = "preemptible" if preemptible else "reserved"
+    key = f"tpu_{version}_8_{kind}"
+    if f"tpu_{version}_{cores}_{kind}" in PRICES:
+        hourly = PRICES[f"tpu_{version}_{cores}_{kind}"]
+    else:
+        hourly = PRICES[key] * cores / 8          # linear slice pricing
+    return EpochCost(f"TPU-{version}-{cores}" + ("-pre" if preemptible else ""),
+                     cores, epoch_time_s, hourly)
+
+
+def scaling_cost_table(base_epoch_s: float, base_gpus: int = 2,
+                       efficiencies: Dict[int, float] = None,
+                       preemptible: bool = True):
+    """Fig. 5: epoch time + cost across GPU counts.
+
+    ``efficiencies``: measured parallel efficiency per GPU count (1.0 =
+    perfectly linear; the paper reports ~linear to 64, a drop at 128)."""
+    eff = efficiencies or {2: 1.0, 4: 0.99, 8: 0.97, 16: 0.95, 32: 0.93,
+                           64: 0.90, 128: 0.81}
+    rows = []
+    for n, e in sorted(eff.items()):
+        t = base_epoch_s * base_gpus / (n * e)
+        rows.append(gpu_epoch_cost(n, t, preemptible))
+    return rows

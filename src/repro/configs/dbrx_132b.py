@@ -1,0 +1,19 @@
+"""dbrx-132b [moe]: 16 experts top-4, fine-grained. [hf:databricks/dbrx-base]"""
+from repro.configs.base import ArchConfig, MoEConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        arch_id="dbrx-132b",
+        family="moe",
+        n_layers=40,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=8,
+        d_ff=10_752,
+        vocab=100_352,
+        source="hf:databricks/dbrx-base",
+        ffn_type="swiglu",
+        rope_theta=500_000.0,
+        moe=MoEConfig(n_experts=16, top_k=4, d_ff_expert=10_752),
+    )

@@ -1,0 +1,20 @@
+"""granite-20b [dense]: llama-arch code model, MQA (kv=1). [arXiv:2405.04324]"""
+from repro.configs.base import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        arch_id="granite-20b",
+        family="dense",
+        n_layers=52,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=1,               # multi-query attention
+        d_ff=24_576,
+        vocab=49_152,
+        source="arXiv:2405.04324",
+        ffn_type="gelu",            # granite-20b-code uses gelu MLP
+        norm_type="layernorm",
+        qkv_bias=True,
+        rope_theta=10_000.0,
+    )

@@ -1,0 +1,19 @@
+"""nemotron-4-15b [dense]: GQA, squared-ReLU MLP. [arXiv:2402.16819]"""
+from repro.configs.base import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        arch_id="nemotron-4-15b",
+        family="dense",
+        n_layers=32,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=8,
+        d_ff=24_576,
+        vocab=256_000,
+        source="arXiv:2402.16819",
+        ffn_type="relu2",           # squared ReLU, no gating
+        norm_type="layernorm",
+        rope_theta=10_000.0,
+    )

@@ -1,0 +1,20 @@
+"""olmoe-1b-7b [moe]: 64 experts top-8, fine-grained. [arXiv:2409.02060]"""
+from repro.configs.base import ArchConfig, MoEConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        arch_id="olmoe-1b-7b",
+        family="moe",
+        n_layers=16,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=1024,                  # per-expert width (fine-grained)
+        vocab=50_304,
+        source="arXiv:2409.02060",
+        ffn_type="swiglu",
+        qkv_bias=False,
+        rope_theta=10_000.0,
+        moe=MoEConfig(n_experts=64, top_k=8, d_ff_expert=1024),
+    )

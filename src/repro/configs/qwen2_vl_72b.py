@@ -1,0 +1,22 @@
+"""qwen2-vl-72b [vlm]: M-RoPE, dynamic resolution; ViT frontend stubbed.
+[arXiv:2409.12191]"""
+from repro.configs.base import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        arch_id="qwen2-vl-72b",
+        family="vlm",
+        n_layers=80,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=29_568,
+        vocab=152_064,
+        source="arXiv:2409.12191",
+        ffn_type="swiglu",
+        qkv_bias=True,
+        rope_theta=1_000_000.0,
+        mrope=True,
+        mrope_sections=(16, 24, 24),   # t/h/w split of rotary half-dim (=64)
+    )

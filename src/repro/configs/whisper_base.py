@@ -1,0 +1,26 @@
+"""whisper-base [audio]: enc-dec, conv frontend stubbed. [arXiv:2212.04356]"""
+from repro.configs.base import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        arch_id="whisper-base",
+        family="audio",
+        n_layers=6,                 # decoder layers
+        n_encoder_layers=6,
+        d_model=512,
+        n_heads=8,
+        n_kv_heads=8,
+        d_ff=2048,
+        vocab=51_865,
+        source="arXiv:2212.04356",
+        ffn_type="gelu",
+        norm_type="layernorm",
+        qkv_bias=True,              # whisper uses bias on q/v
+        rope_theta=0.0,             # learned absolute positions, not rope
+        is_encoder_decoder=True,
+        max_source_positions=1500,
+        max_target_positions=448,
+        tie_embeddings=True,
+        subquadratic=False,
+    )

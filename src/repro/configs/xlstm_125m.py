@@ -1,0 +1,32 @@
+"""xlstm-125m [ssm]: alternating sLSTM + mLSTM blocks, no separate FFN.
+[arXiv:2405.04517]"""
+from repro.configs.base import ArchConfig, SSMConfig
+
+
+def config() -> ArchConfig:
+    # pattern: mostly mLSTM with sLSTM at positions 3 and 9 (paper's 1:3-ish mix)
+    pattern = "".join("s" if i in (3, 9) else "x" for i in range(12))
+    return ArchConfig(
+        arch_id="xlstm-125m",
+        family="ssm",
+        n_layers=12,
+        d_model=768,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=0,                     # block-internal projection instead of FFN
+        vocab=50_304,
+        source="arXiv:2405.04517",
+        norm_type="layernorm",
+        ssm=SSMConfig(state_dim=192, head_dim=192, expand=2, chunk=256),
+        layer_pattern=pattern,
+        subquadratic=True,          # recurrent-state decode
+    )
+
+
+def reduced() -> ArchConfig:
+    import dataclasses
+    c = config()
+    return dataclasses.replace(
+        c, n_layers=2, d_model=256, n_heads=2, n_kv_heads=2, vocab=512,
+        ssm=SSMConfig(state_dim=64, head_dim=64, expand=2, chunk=64),
+        layer_pattern="xs")

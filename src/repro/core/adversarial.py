@@ -1,0 +1,228 @@
+"""The paper's contribution: accelerating the adversarial training process.
+
+Two implementations of Algorithm 1 (§3):
+
+``naive_step`` — the ``keras.train_on_batch`` baseline.  The generator-input
+initialisation (latent sampling + label concat) and the fake-image round trip
+run SEQUENTIALLY ON THE HOST between separately-compiled device calls.  With
+N replicas the host work grows with the global batch => the linear bottleneck
+of Fig. 1.
+
+``fused_step`` — the custom-training-loop rewrite.  The ENTIRE Algorithm-1
+body is one compiled function: on-device RNG (jax.random), fake generation,
+both discriminator updates and both generator updates.  Nothing sequential
+remains on the host; under pjit the per-replica noise is generated on each
+device's own batch shard, which is exactly the paper's "tf.function includes
+all previously sequential steps".
+
+Both follow Algorithm 1 faithfully: D on real, D on fake, then G twice.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gan
+from repro.optim import optimizers as opt_lib
+
+
+class GANState(NamedTuple):
+    g_params: dict
+    d_params: dict
+    g_opt: dict
+    d_opt: dict
+    step: jax.Array
+
+
+def init_state(rng, cfg, g_optimizer, d_optimizer) -> GANState:
+    kg, kd = jax.random.split(rng)
+    g_params = gan.init_generator(kg, cfg)
+    d_params = gan.init_discriminator(kd, cfg)
+    return GANState(g_params, d_params, g_optimizer.init(g_params),
+                    d_optimizer.init(d_params), jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Naive (keras.train_on_batch analogue)
+# ---------------------------------------------------------------------------
+
+
+class NaiveStep:
+    """Host-orchestrated adversarial step with per-call compiled pieces.
+
+    The host work (`_host_generator_inputs`) and device round trips between
+    the pieces are intentional — they ARE the measured baseline.
+    """
+
+    def __init__(self, cfg, g_optimizer, d_optimizer, seed=0):
+        self.cfg = cfg
+        self.g_opt_lib = g_optimizer
+        self.d_opt_lib = d_optimizer
+        self.np_rng = np.random.default_rng(seed)
+
+        @jax.jit
+        def d_update(d_params, d_opt, img, e_p, theta, ecal, real_flag):
+            def loss(dp):
+                return gan.disc_loss(dp, img, (e_p, theta, ecal), cfg,
+                                     real=True)[0] * real_flag + \
+                       gan.disc_loss(dp, img, (e_p, theta, ecal), cfg,
+                                     real=False)[0] * (1 - real_flag)
+            l, grads = jax.value_and_grad(loss)(d_params)
+            upd, d_opt = d_optimizer.update(grads, d_opt, d_params)
+            return opt_lib.apply_updates(d_params, upd), d_opt, l
+
+        @jax.jit
+        def g_update(g_params, g_opt, d_params, noise, e_p, theta, ecal):
+            def loss(gp):
+                return gan.gen_loss(gp, d_params, noise,
+                                    (e_p, theta, ecal), cfg)[0]
+            l, grads = jax.value_and_grad(loss)(g_params)
+            upd, g_opt = g_optimizer.update(grads, g_opt, g_params)
+            return opt_lib.apply_updates(g_params, upd), g_opt, l
+
+        @jax.jit
+        def predict(g_params, noise, e_p, theta):
+            return gan.generate(g_params, noise, e_p, theta, cfg)
+
+        self._d_update, self._g_update, self._predict = d_update, g_update, predict
+
+    def host_generator_inputs(self, batch_size):
+        """The sequential host-side init the paper identifies as the
+        bottleneck: numpy RNG + label concat, once per replica batch."""
+        cfg = self.cfg
+        noise = self.np_rng.normal(0, 1, (batch_size, cfg.latent_dim)) \
+            .astype(np.float32)
+        e_p = self.np_rng.uniform(10.0, 500.0, batch_size).astype(np.float32)
+        theta = self.np_rng.uniform(np.deg2rad(60), np.deg2rad(120),
+                                    batch_size).astype(np.float32)
+        return noise, e_p, theta
+
+    def __call__(self, state: GANState, batch) -> tuple:
+        cfg = self.cfg
+        img, e_p, theta, ecal = (batch["image"], batch["e_p"],
+                                 batch["theta"], batch["ecal"])
+        bs = img.shape[0]
+        ecal_frac = float(np.mean(np.asarray(ecal) / np.asarray(e_p)))
+
+        # -- generator input init: HOST, sequential --------------------
+        noise, f_ep, f_th = self.host_generator_inputs(bs)
+        fake_ecal = f_ep * ecal_frac
+        # -- generate fakes; round-trip through host (train_on_batch) --
+        fake = np.asarray(self._predict(state.g_params, noise, f_ep, f_th))
+        # -- D on real, D on fake --------------------------------------
+        d_params, d_opt, d_lr = self._d_update(
+            state.d_params, state.d_opt, img, e_p, theta, ecal,
+            jnp.float32(1.0))
+        d_params, d_opt, d_lf = self._d_update(
+            d_params, d_opt, fake, f_ep, f_th, fake_ecal, jnp.float32(0.0))
+        # -- G twice (fresh host-side inputs each time: Algorithm 1) ---
+        g_params, g_opt = state.g_params, state.g_opt
+        g_ls = []
+        for _ in range(cfg.gen_steps_per_disc):
+            noise, f_ep, f_th = self.host_generator_inputs(bs)
+            g_params, g_opt, g_l = self._g_update(
+                g_params, g_opt, d_params, noise, f_ep, f_th,
+                f_ep * ecal_frac)
+            g_ls.append(float(g_l))
+        new = GANState(g_params, d_params, g_opt, d_opt, state.step + 1)
+        return new, {"d_loss_real": float(d_lr), "d_loss_fake": float(d_lf),
+                     "g_loss": float(np.mean(g_ls))}
+
+
+# ---------------------------------------------------------------------------
+# Fused custom loop (the paper's optimisation)
+# ---------------------------------------------------------------------------
+
+
+def make_fused_step(cfg, g_optimizer, d_optimizer, mesh=None, policy=None):
+    """One compiled program for the full Algorithm-1 body.
+
+    ``mesh``: when given, the on-device generator inputs (noise + labels)
+    are sharding-constrained over ALL mesh axes — each replica samples its
+    own shard (the paper's "every replica initialises its own inputs"),
+    and GSPMD keeps the whole fake-image path batch-sharded.
+
+    ``policy``: mixed-precision policy (paper §4: bf16 on the MXU).  The
+    conv stacks run in ``policy.compute_dtype``; losses, gradients and
+    optimizer state stay f32 (§Perf G1: halves the memory-bound term).
+    """
+    compute_dtype = policy.compute_dtype if policy is not None else None
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        _axes = tuple(mesh.axis_names)
+
+        def _shard_batchdim(x):
+            spec = P(_axes, *([None] * (x.ndim - 1)))
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, spec))
+    else:
+        def _shard_batchdim(x):
+            return x
+
+    def fused_step(state: GANState, batch, rng):
+        img, e_p, theta, ecal = (batch["image"], batch["e_p"],
+                                 batch["theta"], batch["ecal"])
+        if compute_dtype is not None:
+            img = img.astype(compute_dtype)      # G1: bf16 conv stacks
+        bs = img.shape[0]
+        ecal_frac = jnp.mean(ecal / e_p)
+        keys = jax.random.split(rng, 2 + cfg.gen_steps_per_disc * 3)
+
+        def sample_inputs(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            noise = jax.random.normal(k1, (bs, cfg.latent_dim),
+                                      compute_dtype or jnp.float32)
+            f_ep = jax.random.uniform(k2, (bs,), jnp.float32, 10.0, 500.0)
+            f_th = jax.random.uniform(k3, (bs,), jnp.float32,
+                                      jnp.deg2rad(60.0), jnp.deg2rad(120.0))
+            return (_shard_batchdim(noise), _shard_batchdim(f_ep),
+                    _shard_batchdim(f_th))
+
+        # ---- D on real ------------------------------------------------
+        def d_loss_real(dp):
+            return gan.disc_loss(dp, img, (e_p, theta, ecal), cfg, real=True)
+        (d_lr, d_mr), grads = jax.value_and_grad(d_loss_real, has_aux=True)(
+            state.d_params)
+        upd, d_opt = d_optimizer.update(grads, state.d_opt, state.d_params)
+        d_params = opt_lib.apply_updates(state.d_params, upd)
+
+        # ---- D on fake (generation INSIDE the compiled program) -------
+        noise, f_ep, f_th = sample_inputs(keys[0])
+        fake = gan.generate(state.g_params, noise, f_ep, f_th, cfg)
+        fake_labels = (f_ep, f_th, f_ep * ecal_frac)
+
+        def d_loss_fake(dp):
+            return gan.disc_loss(dp, jax.lax.stop_gradient(fake),
+                                 fake_labels, cfg, real=False)
+        (d_lf, d_mf), grads = jax.value_and_grad(d_loss_fake, has_aux=True)(
+            d_params)
+        upd, d_opt = d_optimizer.update(grads, d_opt, d_params)
+        d_params = opt_lib.apply_updates(d_params, upd)
+
+        # ---- G twice ---------------------------------------------------
+        def one_g(carry, k):
+            g_params, g_opt = carry
+            noise, f_ep, f_th = sample_inputs(k)
+
+            def loss(gp):
+                return gan.gen_loss(gp, d_params, noise,
+                                    (f_ep, f_th, f_ep * ecal_frac), cfg)
+            (g_l, _), grads = jax.value_and_grad(loss, has_aux=True)(g_params)
+            upd, g_opt = g_optimizer.update(grads, g_opt, g_params)
+            return (opt_lib.apply_updates(g_params, upd), g_opt), g_l
+
+        (g_params, g_opt), g_ls = jax.lax.scan(
+            one_g, (state.g_params, state.g_opt),
+            keys[1:1 + cfg.gen_steps_per_disc])
+
+        new = GANState(g_params, d_params, g_opt, d_opt, state.step + 1)
+        metrics = {"d_loss_real": d_lr, "d_loss_fake": d_lf,
+                   "g_loss": jnp.mean(g_ls), "d_acc_real": d_mr["acc"],
+                   "d_acc_fake": d_mf["acc"]}
+        return new, metrics
+
+    return fused_step

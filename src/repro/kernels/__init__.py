@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+- flash_attention: tiled online-softmax attention (GQA-folded MXU matmuls)
+- conv3d:          the 3DGAN hot-spot as implicit GEMM
+- ssm_scan:        Mamba2/SSD chunked scan with VMEM state carry
+
+All validated against pure-jnp oracles (ref.py) with interpret=True on CPU.
+"""

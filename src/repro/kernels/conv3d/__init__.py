@@ -1,0 +1,5 @@
+from repro.kernels.conv3d.ops import conv3d, conv3d_transpose
+from repro.kernels.conv3d.ref import conv3d_ref, conv3d_transpose_ref
+from repro.kernels.conv3d.conv3d import gemm
+
+__all__ = ["conv3d", "conv3d_transpose", "conv3d_ref", "conv3d_transpose_ref", "gemm"]

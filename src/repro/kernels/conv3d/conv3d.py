@@ -1,0 +1,140 @@
+"""Pallas TPU conv3d as implicit GEMM — the 3DGAN hot-spot.
+
+TPU adaptation of the paper's 3-D convolutions (the GAN's compute bottleneck
+on V100s):  a CUDA direct conv relies on per-thread scalar accumulation;
+the TPU version reformulates each conv as a GEMM over gathered patches so
+the MXU's 128x128 systolic array does the work:
+
+    out[p, co] = sum_k patches[p, k] * w2[k, co]
+    p = (n, od, oh, ow) output position,  k = (kd, kh, kw, ci) tap
+
+- Patch gathering (the "im2col" staging) happens in jnp at trace time by
+  stacking KD*KH*KW shifted, stride-sampled views of the padded input —
+  XLA fuses those slices; the GEMM itself is the Pallas kernel below with
+  (bm, bk, bn) VMEM tiles and an f32 accumulator carried across the
+  sequential k grid dimension.
+- Transposed conv (generator upsampling) = input dilation + spatially
+  flipped weights + the same stride-1 path, so BOTH GAN networks hit the
+  same GEMM kernel.
+- Tile sizes default to the MXU-native 128; m/k/n are padded up to tile
+  multiples (the roofline counts real FLOPs; padding waste shows up in the
+  MODEL_FLOPS / HLO_FLOPs ratio tracked in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemm_kernel(x_ref, w_ref, o_ref, acc_ref):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def gemm(x, w, *, bm: int = 128, bk: int = 128, bn: int = 128,
+         interpret: bool = True, out_dtype=None):
+    """Tiled MXU matmul: (M, K) @ (K, N) with f32 accumulation."""
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2
+    out_dtype = out_dtype or x.dtype
+    bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
+    gm, gk, gn = -(-M // bm), -(-K // bk), -(-N // bn)
+    xp = jnp.pad(x, ((0, gm * bm - M), (0, gk * bk - K)))
+    wp = jnp.pad(w, ((0, gk * bk - K), (0, gn * bn - N)))
+    out = pl.pallas_call(
+        _gemm_kernel,
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((gm * bm, gn * bn), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(xp, wp)
+    return out[:M, :N]
+
+
+def _same_pads(size: int, k: int, stride: int):
+    """TF-style SAME padding for one spatial dim."""
+    out = -(-size // stride)
+    pad = max((out - 1) * stride + k - size, 0)
+    return pad // 2, pad - pad // 2, out
+
+
+def conv3d_gemm(x, w, stride: int = 1, *, interpret: bool = True,
+                bm: int = 128, bn: int = 128):
+    """SAME conv via implicit GEMM.  x: (N,D,H,W,Ci); w: (KD,KH,KW,Ci,Co)."""
+    N, D, H, W, Ci = x.shape
+    KD, KH, KW, _, Co = w.shape
+    (pd0, pd1, OD) = _same_pads(D, KD, stride)
+    (ph0, ph1, OH) = _same_pads(H, KH, stride)
+    (pw0, pw1, OW) = _same_pads(W, KW, stride)
+    xp = jnp.pad(x, ((0, 0), (pd0, pd1), (ph0, ph1), (pw0, pw1), (0, 0)))
+
+    # implicit-GEMM patch matrix: KD*KH*KW stride-sampled shifted views
+    cols = []
+    for kd in range(KD):
+        for kh in range(KH):
+            for kw in range(KW):
+                sl = xp[:, kd:kd + (OD - 1) * stride + 1:stride,
+                        kh:kh + (OH - 1) * stride + 1:stride,
+                        kw:kw + (OW - 1) * stride + 1:stride, :]
+                cols.append(sl.reshape(N * OD * OH * OW, Ci))
+    patches = jnp.concatenate(cols, axis=-1)          # (P, KD*KH*KW*Ci)
+    w2 = w.reshape(KD * KH * KW * Ci, Co)
+    out = gemm(patches, w2.astype(patches.dtype), bm=bm, bn=bn,
+               interpret=interpret)
+    return out.reshape(N, OD, OH, OW, Co)
+
+
+def conv3d_transpose_gemm(x, w, stride: int = 2, *, interpret: bool = True):
+    """SAME transposed conv = input dilation + stride-1 implicit GEMM.
+
+    Matches jax.lax.conv_transpose(..., 'SAME') exactly: the kernel is used
+    UNFLIPPED (conv_transpose's transpose_kernel=False default) and the
+    fractionally-strided input is padded with lax's SAME-transpose rule
+    (pad_a = k-1 if s > k-1 else ceil((k+s-2)/2)); output = input * stride.
+    """
+    N, D, H, W, Ci = x.shape
+    KD, KH, KW, _, Co = w.shape
+    s = stride
+    # dilate input with (s-1) zeros between elements
+    xd = jnp.zeros((N, (D - 1) * s + 1, (H - 1) * s + 1, (W - 1) * s + 1, Ci),
+                   x.dtype)
+    xd = xd.at[:, ::s, ::s, ::s].set(x)
+    outs = (D * s, H * s, W * s)
+    pads = []
+    for k in (KD, KH, KW):
+        pad_len = k + s - 2
+        pad_a = k - 1 if s > k - 1 else -(-pad_len // 2)
+        pads.append((pad_a, pad_len - pad_a))
+    xp = jnp.pad(xd, ((0, 0), pads[0], pads[1], pads[2], (0, 0)))
+
+    cols = []
+    for kd in range(KD):
+        for kh in range(KH):
+            for kw in range(KW):
+                sl = xp[:, kd:kd + outs[0], kh:kh + outs[1], kw:kw + outs[2], :]
+                cols.append(sl.reshape(N * outs[0] * outs[1] * outs[2], Ci))
+    patches = jnp.concatenate(cols, axis=-1)
+    w2 = w.reshape(KD * KH * KW * Ci, Co)
+    out = gemm(patches, w2.astype(patches.dtype), interpret=interpret)
+    return out.reshape(N, *outs, Co)

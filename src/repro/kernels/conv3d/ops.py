@@ -1,0 +1,49 @@
+"""jit'd public wrappers for the conv3d implicit-GEMM kernel.
+
+Forward = Pallas kernel; backward differentiates the ref oracle (identical
+math) so the ops are usable inside the adversarial training step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.conv3d.conv3d import conv3d_gemm, conv3d_transpose_gemm
+from repro.kernels.conv3d.ref import conv3d_ref, conv3d_transpose_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def conv3d(x, w, stride: int = 1, interpret: bool = True):
+    return conv3d_gemm(x, w, stride, interpret=interpret)
+
+
+def _c_fwd(x, w, stride, interpret):
+    return conv3d_gemm(x, w, stride, interpret=interpret), (x, w)
+
+
+def _c_bwd(stride, interpret, res, g):
+    x, w = res
+    _, vjp = jax.vjp(lambda x_, w_: conv3d_ref(x_, w_, stride), x, w)
+    return vjp(g)
+
+
+conv3d.defvjp(_c_fwd, _c_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def conv3d_transpose(x, w, stride: int = 2, interpret: bool = True):
+    return conv3d_transpose_gemm(x, w, stride, interpret=interpret)
+
+
+def _t_fwd(x, w, stride, interpret):
+    return conv3d_transpose_gemm(x, w, stride, interpret=interpret), (x, w)
+
+
+def _t_bwd(stride, interpret, res, g):
+    x, w = res
+    _, vjp = jax.vjp(lambda x_, w_: conv3d_transpose_ref(x_, w_, stride), x, w)
+    return vjp(g)
+
+
+conv3d_transpose.defvjp(_t_fwd, _t_bwd)

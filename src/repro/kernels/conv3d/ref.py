@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the conv3d kernel: lax.conv in NDHWC/DHWIO layout."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DN = ("NDHWC", "DHWIO", "NDHWC")
+
+
+def conv3d_ref(x, w, stride: int = 1, padding: str = "SAME"):
+    """x: (N, D, H, W, Ci); w: (KD, KH, KW, Ci, Co)."""
+    return jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), (stride,) * 3, padding, dimension_numbers=DN)
+
+
+def conv3d_transpose_ref(x, w, stride: int = 2):
+    """SAME-padded stride-s transposed conv (the 3DGAN generator op)."""
+    return jax.lax.conv_transpose(
+        x, w.astype(x.dtype), (stride,) * 3, "SAME", dimension_numbers=DN)

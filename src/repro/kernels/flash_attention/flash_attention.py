@@ -1,0 +1,135 @@
+"""Pallas TPU flash attention: tiled online-softmax with GQA folding.
+
+TPU adaptation (vs. the CUDA algorithm):
+
+- tiles live in VMEM via BlockSpec; the kv loop is the innermost grid
+  dimension, which TPU executes SEQUENTIALLY per core — the running
+  (acc, m, l) online-softmax state is carried in VMEM scratch across kv
+  steps (no atomics / shared-memory reductions as on GPU);
+- all G query heads of one kv head are FOLDED into the score matmul's row
+  dimension: (bq*G, D) @ (D, bk).  For GQA models (G=6..48) this turns many
+  skinny matmuls into one MXU-shaped (>=128 rows) matmul per tile;
+- score math is f32 (MXU accumulates bf16 inputs into f32).
+
+Grid: (B, KH, n_q_blocks, n_kv_blocks), kv innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: int,
+                  block_q: int, block_kv: int, seq_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    n_kv = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_kv
+
+    # skip kv blocks entirely above the causal diagonal / below the window
+    run = True
+    if causal:
+        run = k_start <= q_start + block_q - 1
+    if window:
+        run = jnp.logical_and(run, k_start + block_kv > q_start - window + 1)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0]                                   # (bq, G, D)
+        bq, G, D = q.shape
+        q2 = q.reshape(bq * G, D)
+        k = k_ref[0, :, 0, :]                          # (bk, D)
+        v = v_ref[0, :, 0, :]                          # (bk, D)
+        s = jax.lax.dot_general(
+            q2, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq*G, bk)
+
+        rows = jax.lax.broadcasted_iota(jnp.int32, (bq * G, block_kv), 0)
+        qpos = q_start + rows // G
+        kpos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (bq * G, block_kv), 1)
+        mask = kpos < seq_k                            # guard padded tail
+        if causal:
+            mask &= qpos >= kpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                            # (bq*G, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        e = jnp.exp(s - m_new)
+        e = jnp.where(mask, e, 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(e, axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            e.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)        # (bq*G, D)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        bq, G, D = q_ref[0].shape
+        o = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = o.reshape(1, bq, G, D).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
+                        block_q: int = 128, block_kv: int = 128,
+                        interpret: bool = True):
+    """q: (B, S, H, D); k/v: (B, T, KH, D). Returns (B, S, H, D)."""
+    B, S, H, D = q.shape
+    T, KH = k.shape[1], k.shape[2]
+    assert H % KH == 0, (H, KH)
+    G = H // KH
+    block_q = min(block_q, S)
+    block_kv = min(block_kv, T)
+    n_q = -(-S // block_q)
+    n_kv = -(-T // block_kv)
+    pad_s = n_q * block_q - S
+    pad_t = n_kv * block_kv - T
+    if pad_s:
+        q = jnp.pad(q, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+    if pad_t:
+        k = jnp.pad(k, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+
+    kernel = functools.partial(
+        _flash_kernel, scale=1.0 / (D ** 0.5), causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv, seq_k=T)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KH, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, G, D), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, block_kv, 1, D), lambda b, h, qi, ki: (b, ki, h, 0)),
+            pl.BlockSpec((1, block_kv, 1, D), lambda b, h, qi, ki: (b, ki, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, G, D),
+                               lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, n_q * block_q, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q * G, D), jnp.float32),
+            pltpu.VMEM((block_q * G, 1), jnp.float32),
+            pltpu.VMEM((block_q * G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :S]

@@ -1,0 +1,39 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+Forward runs the Pallas kernel; backward differentiates the ref oracle
+(numerically identical math), so ``flash_attention`` is safe to use inside
+training code while the fused backward kernel is future work.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    interpret: bool = True):
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               interpret=interpret)
+
+
+def _fwd(q, k, v, causal, window, interpret):
+    out = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                              interpret=interpret)
+    return out, (q, k, v)
+
+
+def _bwd(causal, window, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: attention_ref(q_, k_, v_, causal=causal,
+                                         window=window), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

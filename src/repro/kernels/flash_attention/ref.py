@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Plain materialised-scores attention with causal / sliding-window masking and
+GQA head grouping — numerically the ground truth the Pallas kernel must match
+(f32 score math, softmax over the full row).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, S, H, D); k/v: (B, T, KH, D) with H % KH == 0.
+
+    Returns (B, S, H, D) in q.dtype.  Scores and softmax in f32.
+    """
+    B, S, H, D = q.shape
+    T, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    qg = q.reshape(B, S, KH, G, D)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (D ** 0.5)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    w = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    w = jnp.where(mask[None, None, None], w, 0.0)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bkgqt,btkd->bqkgd", w, v.astype(jnp.float32))
+    return o.reshape(B, S, H, D).astype(q.dtype)

@@ -1,0 +1,31 @@
+"""jit'd public wrapper for the SSD scan kernel (ref-backed backward)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+from repro.kernels.ssm_scan.ssm_scan import ssm_scan as _ssm_scan_fwd
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def ssm_scan(x, B, C, dt, A, chunk: int = 128, interpret: bool = True):
+    y, _ = _ssm_scan_fwd(x, B, C, dt, A, chunk=chunk, interpret=interpret)
+    return y
+
+
+def _fwd(x, B, C, dt, A, chunk, interpret):
+    y, _ = _ssm_scan_fwd(x, B, C, dt, A, chunk=chunk, interpret=interpret)
+    return y, (x, B, C, dt, A)
+
+
+def _bwd(chunk, interpret, res, g):
+    x, B, C, dt, A = res
+    _, vjp = jax.vjp(
+        lambda x_, B_, C_, dt_, A_: ssm_scan_ref(x_, B_, C_, dt_, A_)[0],
+        x, B, C, dt, A)
+    return vjp(g)
+
+
+ssm_scan.defvjp(_fwd, _bwd)

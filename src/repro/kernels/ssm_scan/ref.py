@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the Mamba2 (SSD) scan kernel.
+
+Naive SEQUENTIAL recurrence — one timestep at a time — which is the
+definition of the selective-state-space update:
+
+    s_t = exp(dt_t * A_h) * s_{t-1} + dt_t * x_t B_t^T      (per head h)
+    y_t = C_t . s_t
+
+Deliberately independent of the chunked formulations in substrate/ssm.py
+and in the Pallas kernel, so it validates BOTH.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(x, B, C, dt, A, init_state=None):
+    """x: (Bt, S, H, P); B/C: (Bt, S, N); dt: (Bt, S, H); A: (H,) negative.
+
+    Returns (y (Bt, S, H, P), final_state (Bt, H, P, N)).  All math f32.
+    """
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    x = x.astype(jnp.float32)
+    B = B.astype(jnp.float32)
+    C = C.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    s0 = (init_state.astype(jnp.float32) if init_state is not None
+          else jnp.zeros((Bt, H, P, N), jnp.float32))
+
+    def step(s, inp):
+        xt, Bt_, Ct_, dtt = inp                        # (B,H,P),(B,N),(B,N),(B,H)
+        decay = jnp.exp(dtt * A)                       # (B,H)
+        s = s * decay[:, :, None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dtt, xt, Bt_)
+        y = jnp.einsum("bn,bhpn->bhp", Ct_, s)
+        return s, y
+
+    inputs = (x.transpose(1, 0, 2, 3), B.transpose(1, 0, 2),
+              C.transpose(1, 0, 2), dt.transpose(1, 0, 2))
+    s, ys = jax.lax.scan(step, s0, inputs)
+    return ys.transpose(1, 0, 2, 3), s

@@ -1,0 +1,118 @@
+"""Pallas TPU Mamba2 (SSD) chunked scan kernel.
+
+TPU adaptation of the Mamba2 CUDA kernel's split into "intra-chunk" and
+"inter-chunk" work:
+
+- the sequence is blocked into chunks of length L; within a chunk the
+  recurrence unrolls into three DENSE matmuls (MXU work):
+      cb       = C @ B^T                  (L, L)
+      y_intra  = (cb * decay * dt) @ x    (L, L) @ (L, P)
+      dstate   = (w * x)^T @ B            (P, L) @ (L, N)
+- the inter-chunk state (P, N) is carried in VMEM scratch across the
+  SEQUENTIAL innermost grid dimension (TPU grid order replaces the GPU
+  kernel's block-level carry),
+- decay factors are computed from the in-chunk cumsum of log-decay; all
+  state math is f32.
+
+Grid: (B, H, n_chunks) — chunks innermost (sequential carry).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, b_ref, c_ref, dt_ref, a_ref, s0_ref,
+                y_ref, sf_ref, state_ref, *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)            # (L, P)
+    B = b_ref[0, 0].astype(jnp.float32)               # (L, N)
+    C = c_ref[0, 0].astype(jnp.float32)               # (L, N)
+    dt = dt_ref[0, 0, 0, :, 0].astype(jnp.float32)    # (L,)
+    A = a_ref[0, 0]                                   # scalar (negative)
+
+    la = dt * A                                       # (L,) log-decay
+    F = jnp.cumsum(la)                                # inclusive cumsum
+    Ftot = F[-1]
+    state = state_ref[...]                            # (P, N)
+
+    # ---- inter-chunk: y_t += exp(F_t) * C_t . state
+    y_inter = jax.lax.dot_general(
+        C, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * jnp.exp(F)[:, None]  # (L, P)
+
+    # ---- intra-chunk: M[t, s] = (C_t.B_s) exp(F_t - F_s) dt_s,  s <= t
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (L, L)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    dec = F[:, None] - F[None, :]
+    M = jnp.where(rows >= cols, cb * jnp.exp(dec) * dt[None, :], 0.0)
+    y_intra = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    y_ref[0, 0, 0] = (y_inter + y_intra).astype(y_ref.dtype)
+
+    # ---- state update: s' = exp(Ftot) s + sum_t exp(Ftot - F_t) dt_t x_t B_t^T
+    wgt = jnp.exp(Ftot - F) * dt                      # (L,)
+    dstate = jax.lax.dot_general(
+        x * wgt[:, None], B, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)           # (P, N)
+    state_ref[...] = state * jnp.exp(Ftot) + dstate
+
+    @pl.when(ci == pl.num_programs(2) - 1)
+    def _final():
+        sf_ref[0, 0] = state_ref[...]
+
+
+def ssm_scan(x, B, C, dt, A, init_state=None, *, chunk: int = 128,
+             interpret: bool = True):
+    """Chunked SSD scan.  x: (Bt,S,H,P); B/C: (Bt,S,N); dt: (Bt,S,H);
+    A: (H,).  Returns (y (Bt,S,H,P) f32, final_state (Bt,H,P,N) f32)."""
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    nC = S // L
+
+    xc = x.reshape(Bt, nC, L, H, P).transpose(0, 3, 1, 2, 4)   # (B,H,nC,L,P)
+    dtc = dt.reshape(Bt, nC, L, H).transpose(0, 3, 1, 2)[..., None]
+    bc = B.reshape(Bt, nC, L, N)
+    cc = C.reshape(Bt, nC, L, N)
+    a2 = jnp.broadcast_to(A.astype(jnp.float32)[None], (Bt, H))
+    s0 = (init_state.astype(jnp.float32) if init_state is not None
+          else jnp.zeros((Bt, H, P, N), jnp.float32))
+
+    y, sf = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=L),
+        grid=(Bt, H, nC),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, L, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, L, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, L, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, L, 1), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, c: (b, h)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, L, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bt, H, nC, L, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bt, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xc, bc, cc, dtc, a2, s0)
+    y = y.transpose(0, 2, 3, 1, 4).reshape(Bt, S, H, P)
+    return y, sf

@@ -1,0 +1,40 @@
+"""Production mesh definitions (TPU v5e target).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import; tests see 1 CPU).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False, data: int = 16,
+                         model: int = 16):
+    """Single pod: (data=16, model=16) = 256 chips (default).
+    Multi-pod: (pod=2, data, model) = 512 chips; the ``pod`` axis is pure
+    data parallelism (the paper's multi-worker mirrored analogue).
+
+    ``data``/``model`` re-factorize the 256 chips per pod — the §Perf
+    hillclimb's layout lever (paper Fig. 4): data*model must equal 256."""
+    assert data * model == 256, (data, model)
+    shape = (2, data, model) if multi_pod else (data, model)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_dev_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many real devices exist (tests/examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, max(n // data, 1))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+HARDWARE = {
+    # TPU v5e per-chip constants used by the roofline report
+    "peak_flops_bf16": 197e12,     # FLOP/s
+    "hbm_bw": 819e9,               # B/s
+    "ici_bw": 50e9,                # B/s per link
+    "chips_single_pod": 256,
+    "chips_multi_pod": 512,
+}

@@ -1,0 +1,149 @@
+"""Training launcher: GAN (the paper's workload) or any assigned LM arch.
+
+Runs on whatever devices exist (CPU in this container, TPU pod in prod —
+the same build path the dry-run compiles for 256/512 chips).
+
+Usage:
+  python -m repro.launch.train --arch calo3dgan --steps 200 --loop fused
+  python -m repro.launch.train --arch qwen2-1.5b --reduced --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base as config_base
+from repro.data.calo import CaloSimulator, CaloSpec
+from repro.data.pipeline import prefetch
+from repro.data.tokens import MarkovTokens
+from repro.launch.mesh import make_dev_mesh
+from repro.models import api
+from repro.optim import optimizers as opt_lib
+from repro.parallel import sharding
+from repro.substrate.precision import get_policy
+from repro.train import checkpoint as ckpt_lib
+from repro.train import steps as steps_lib
+from repro.train.metrics import MetricLog
+
+
+def train_gan(args, mesh, log: MetricLog):
+    from repro.configs import calo3dgan
+    from repro.core import adversarial, validation
+
+    cfg = calo3dgan.reduced() if args.reduced else calo3dgan.config()
+    g_opt = opt_lib.rmsprop(args.lr)
+    d_opt = opt_lib.rmsprop(args.lr)
+    state = adversarial.init_state(jax.random.key(args.seed), cfg, g_opt, d_opt)
+
+    sim = CaloSimulator(CaloSpec(image_shape=cfg.image_shape), seed=args.seed)
+    batches = prefetch(sim.batches(args.batch or cfg.batch_size))
+
+    if args.loop == "fused":
+        step = jax.jit(adversarial.make_fused_step(cfg, g_opt, d_opt),
+                       donate_argnums=(0,))
+        rng = jax.random.key(args.seed + 1)
+        for i, batch in zip(range(args.steps), batches):
+            rng, k = jax.random.split(rng)
+            state, m = step(state, batch, k)
+            log.log(i, **{k_: float(v) for k_, v in m.items()})
+    else:
+        step = adversarial.NaiveStep(cfg, g_opt, d_opt, seed=args.seed)
+        for i, batch in zip(range(args.steps), batches):
+            state, m = step(state, batch)
+            log.log(i, **m)
+
+    # physics validation vs fresh Monte Carlo
+    mc = next(sim.batches(256))
+    noise = jax.random.normal(jax.random.key(7), (256, cfg.latent_dim))
+    from repro.core import gan
+    fake = gan.generate(state.g_params, noise, jnp.asarray(mc["e_p"]),
+                        jnp.asarray(mc["theta"]), cfg)
+    rep = validation.validation_report(np.asarray(fake), mc["image"],
+                                       mc["e_p"], mc["e_p"])
+    print("physics validation:", {k: round(v, 4) for k, v in rep.items()})
+    if args.ckpt:
+        ckpt_lib.save(args.ckpt, state.g_params, step=args.steps,
+                      extra={"kind": "gan_generator"})
+        print(f"saved generator to {args.ckpt}")
+    return state
+
+
+def train_lm(args, mesh, log: MetricLog):
+    cfg = (config_base.reduced_config(args.arch) if args.reduced
+           else config_base.get_config(args.arch))
+    model = api.get_model(cfg)
+    policy = get_policy(args.policy)
+    optimizer = opt_lib.adamw(opt_lib.warmup_cosine(args.lr, 20, args.steps))
+
+    params = model.init(jax.random.key(args.seed), cfg)
+    opt_state = optimizer.init(params)
+    print(f"{args.arch}: {sharding.count_params(params):,} params "
+          f"({'reduced' if args.reduced else 'full'})")
+
+    step = jax.jit(steps_lib.make_train_step(model, cfg, optimizer, policy,
+                                             mesh=mesh),
+                   donate_argnums=(0, 1))
+    B, S = args.batch or 8, args.seq or 256
+    data = MarkovTokens(cfg.vocab, seed=args.seed)
+
+    def gen():
+        if cfg.family == "audio":
+            while True:
+                yield {"audio_emb": np.random.default_rng(0).normal(
+                           0, 1, (B, S, cfg.d_model)).astype(np.float32),
+                       "tokens": data.sample(B, min(S, cfg.max_target_positions))}
+        elif cfg.family == "vlm":
+            n_patch = 16
+            while True:
+                pos = np.broadcast_to(np.arange(S, dtype=np.int32),
+                                      (3, B, S)).copy()
+                yield {"tokens": data.sample(B, S - n_patch),
+                       "embeds": np.zeros((B, n_patch, cfg.d_model), np.float32),
+                       "positions": pos}
+        else:
+            while True:
+                yield {"tokens": data.sample(B, S)}
+
+    t0 = time.time()
+    for i, batch in zip(range(args.steps), prefetch(gen())):
+        params, opt_state, m = step(params, opt_state, batch)
+        log.log(i, loss=float(m["loss"]), grad_norm=float(m["grad_norm"]))
+    dt = time.time() - t0
+    print(f"{args.steps} steps in {dt:.1f}s "
+          f"({args.steps * B * S / dt:.0f} tok/s)")
+    if args.ckpt:
+        ckpt_lib.save(args.ckpt, params, step=args.steps,
+                      extra={"arch": args.arch})
+    return params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="calo3dgan",
+                    choices=config_base.ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=0)
+    ap.add_argument("--seq", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=1e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--loop", default="fused", choices=("fused", "naive"))
+    ap.add_argument("--policy", default="f32")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--log", default="")
+    args = ap.parse_args()
+
+    mesh = make_dev_mesh(data=len(jax.devices()))
+    log = MetricLog(args.log or None, print_every=max(args.steps // 20, 1))
+    if args.arch == "calo3dgan":
+        train_gan(args, mesh, log)
+    else:
+        train_lm(args, mesh, log)
+
+
+if __name__ == "__main__":
+    main()

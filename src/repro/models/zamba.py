@@ -1,0 +1,285 @@
+"""Zamba2 hybrid LM: Mamba2 backbone + ONE shared attention block.
+
+The shared block (its params are reused at every application — zamba2's
+parameter-sharing trick) runs on concat(hidden, initial_embedding) (2*d) and
+projects back to d.  Mamba2 layers are stacked and scanned; the shared block
+fires every ``cfg.shared_attn_every`` layers via lax.cond inside the scan, so
+HLO contains exactly one mamba block + one attention block regardless of
+depth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import sharding
+from repro.substrate import attention as attn_lib
+from repro.substrate import layers, ssm
+
+
+def _shared_cfg(cfg):
+    """Attention geometry of the shared block: runs at width 2*d_model."""
+    return dataclasses.replace(
+        cfg, d_model=2 * cfg.d_model, d_head=2 * cfg.d_model // cfg.n_heads,
+        qkv_bias=False)
+
+
+def init(rng, cfg):
+    ks = jax.random.split(rng, 6)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    scfg = _shared_cfg(cfg)
+    d2 = 2 * cfg.d_model
+    return {
+        "embed": layers.init_embed(ks[1], cfg.vocab, cfg.d_model),
+        "mamba": jax.vmap(
+            lambda k: {"ln": layers.init_norm(cfg.d_model, "rmsnorm"),
+                       "m": ssm.init_mamba2(k, cfg.d_model, cfg.ssm)})(layer_keys),
+        "shared": {
+            "ln": layers.init_norm(d2, "rmsnorm"),
+            "attn": attn_lib.init_attn(ks[2], scfg),
+            "out": layers.init_dense(ks[3], d2, cfg.d_model),
+            "ln2": layers.init_norm(cfg.d_model, "rmsnorm"),
+            "ffn": layers.init_ffn(ks[4], cfg.d_model, cfg.d_ff, cfg.ffn_type),
+        },
+        "ln_f": layers.init_norm(cfg.d_model, "rmsnorm"),
+        "head": {"w": layers.normal_init(ks[5], (cfg.d_model, cfg.vocab))},
+    }
+
+
+def logical_axes(cfg):
+    scfg = _shared_cfg(cfg)
+    return {
+        "embed": layers.embed_axes(),
+        "mamba": sharding.stacked({"ln": layers.norm_axes("rmsnorm"),
+                                   "m": ssm.mamba2_axes()}),
+        "shared": {
+            "ln": layers.norm_axes("rmsnorm"),
+            "attn": attn_lib.attn_axes(scfg),
+            "out": layers.dense_axes("heads", "embed"),
+            "ln2": layers.norm_axes("rmsnorm"),
+            "ffn": layers.ffn_axes(cfg.ffn_type),
+        },
+        "ln_f": layers.norm_axes("rmsnorm"),
+        "head": {"w": ("embed", "vocab")},
+    }
+
+
+def _apply_shared(sp, x, x0, cfg, cos, sin, cache=None, pos=None):
+    """Shared attention block on concat(x, x0); returns (delta, new kv)."""
+    scfg = _shared_cfg(cfg)
+    B, S, _ = x.shape
+    h = jnp.concatenate([x, x0], axis=-1)
+    h = layers.apply_norm(sp["ln"], h, "rmsnorm")
+    q, k, v = attn_lib.project_qkv(sp["attn"], h, scfg)
+    if cos is not None:
+        q, k = attn_lib.apply_rope(q, cos, sin), attn_lib.apply_rope(k, cos, sin)
+    if cache is None:
+        if S <= 1024:
+            o = attn_lib.dot_attention(q, k, v, causal=True)
+        else:
+            o = attn_lib.blockwise_attention(q, k, v, causal=True)
+        new_kv = (k, v)
+    else:
+        kc, vc, kv_len = cache
+        idx = jnp.broadcast_to(jnp.asarray(pos), (B,))       # per-row slots
+        kc = jax.vmap(lambda cb, nb, i: jax.lax.dynamic_update_slice_in_dim(
+            cb, nb, i, axis=0))(kc, k.astype(kc.dtype), idx)
+        vc = jax.vmap(lambda cb, nb, i: jax.lax.dynamic_update_slice_in_dim(
+            cb, nb, i, axis=0))(vc, v.astype(vc.dtype), idx)
+        o = attn_lib.dot_attention(q, kc.astype(q.dtype), vc.astype(q.dtype),
+                                   causal=False,
+                                   kv_len=jnp.broadcast_to(kv_len, (B,)))
+        new_kv = (kc, vc)
+    o = layers.apply_dense(sp["out"], o.reshape(B, S, scfg.q_dim))
+    x = x + o
+    hn = layers.apply_norm(sp["ln2"], x, "rmsnorm")
+    x = x + layers.apply_ffn(sp["ffn"], hn, cfg.ffn_type)
+    return x, new_kv
+
+
+def forward(params, tokens, cfg, *, policy, mesh=None, remat=True, **_):
+    cparams = policy.cast_to_compute(params)
+    x = layers.apply_embed(cparams["embed"], tokens, policy.compute_dtype)
+    x = sharding.constrain_batch(x, mesh, seq_dim=1)
+    x0 = x
+    B, S, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    cos, sin = attn_lib.rope_cos_sin(pos, _shared_cfg(cfg).d_head,
+                                     cfg.rope_theta, x.dtype)
+    every = max(cfg.shared_attn_every, 1)
+    shared = cparams["shared"]
+
+    def body(carry, xs):
+        h, idx = carry
+        block = xs
+        hn = layers.apply_norm(block["ln"], h, "rmsnorm")
+        h = h + ssm.apply_mamba2(block["m"], hn, cfg.d_model, cfg.ssm)
+        h = jax.lax.cond(
+            idx % every == 0,
+            lambda hh: _apply_shared(shared, hh, x0, cfg, cos, sin)[0],
+            lambda hh: hh, h)
+        h = sharding.constrain_batch(h, mesh, seq_dim=1)
+        return (h, idx + 1), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, _), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.int32)),
+                             cparams["mamba"])
+    h = layers.apply_norm(cparams["ln_f"], x, "rmsnorm")
+    return h, jnp.zeros((), jnp.float32), cparams
+
+
+def loss_fn(params, batch, cfg, *, policy, mesh=None, remat=True):
+    from repro.models.lm import chunked_softmax_xent
+    tokens = batch["tokens"]
+    h, aux, cparams = forward(params, tokens, cfg, policy=policy, mesh=mesh,
+                              remat=remat)
+    targets = tokens[:, 1:]
+    valid = jnp.ones_like(targets, jnp.float32)
+    ce = chunked_softmax_xent(h[:, :-1], cparams["head"]["w"], targets, valid)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: mamba states + shared-block KV ring buffer
+# ---------------------------------------------------------------------------
+
+_SHARED_WINDOW = 4096   # the shared block attends over a sliding window when
+                        # serving beyond-context lengths (long_500k)
+
+
+def init_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    n_shared = len(_shared_idx(cfg))
+    win = min(max_len, _SHARED_WINDOW)
+    scfg = _shared_cfg(cfg)
+    kv_shape = (n_shared, batch, win, scfg.n_kv_heads, scfg.d_head)
+    st = ssm.mamba2_init_state(cfg.d_model, cfg.ssm, batch)
+    return {
+        "mamba": ssm.Mamba2State(
+            ssm=jnp.zeros((cfg.n_layers,) + st.ssm.shape, jnp.float32),
+            conv=jnp.zeros((cfg.n_layers,) + st.conv.shape, dtype)),
+        "shared_k": jnp.zeros(kv_shape, dtype),
+        "shared_v": jnp.zeros(kv_shape, dtype),
+    }
+
+
+def cache_logical_axes(cfg):
+    return {
+        "mamba": ssm.Mamba2State(
+            ssm=(None, "batch", "inner", None, None),
+            conv=(None, "batch", None, "inner")),
+        "shared_k": (None, "batch", "cache_seq", "kv_heads", None),
+        "shared_v": (None, "batch", "cache_seq", "kv_heads", None),
+    }
+
+
+def _shared_idx(cfg):
+    every = max(cfg.shared_attn_every, 1)
+    return [i for i in range(cfg.n_layers) if i % every == 0]
+
+
+def decode_step(params, tokens1, cache, pos, cfg, *, policy, mesh=None, **_):
+    """pos: scalar OR (B,) per-sequence positions (ragged batching)."""
+    cparams = policy.cast_to_compute(params)
+    x = layers.apply_embed(cparams["embed"], tokens1, policy.compute_dtype)
+    x0 = x
+    B = x.shape[0]
+    win = cache["shared_k"].shape[2]
+    pos_vec = jnp.broadcast_to(jnp.asarray(pos), (B,))
+    write_idx = pos_vec % win                                # (B,)
+    kv_len = jnp.minimum(pos_vec + 1, win)
+    pos_b = pos_vec[:, None]
+    cos, sin = attn_lib.rope_cos_sin(pos_b, _shared_cfg(cfg).d_head,
+                                     cfg.rope_theta, x.dtype)
+    shared_ids = _shared_idx(cfg)
+    new_m_ssm, new_m_conv = [], []
+    sk, sv = cache["shared_k"], cache["shared_v"]
+    si = 0
+    for i in range(cfg.n_layers):
+        block = jax.tree.map(lambda t: t[i], cparams["mamba"])
+        st = ssm.Mamba2State(ssm=cache["mamba"].ssm[i],
+                             conv=cache["mamba"].conv[i])
+        hn = layers.apply_norm(block["ln"], x, "rmsnorm")
+        y, st2 = ssm.mamba2_step(block["m"], hn, st, cfg.d_model, cfg.ssm)
+        x = x + y
+        new_m_ssm.append(st2.ssm)
+        new_m_conv.append(st2.conv)
+        if i in shared_ids:
+            x, (kc, vc) = _apply_shared(
+                cparams["shared"], x, x0, cfg, cos, sin,
+                cache=(sk[si], sv[si], kv_len), pos=write_idx)
+            sk = sk.at[si].set(kc)
+            sv = sv.at[si].set(vc)
+            si += 1
+    h = layers.apply_norm(cparams["ln_f"], x, "rmsnorm")
+    logits = h @ cparams["head"]["w"].astype(h.dtype)
+    new_cache = {
+        "mamba": ssm.Mamba2State(ssm=jnp.stack(new_m_ssm),
+                                 conv=jnp.stack(new_m_conv)),
+        "shared_k": sk, "shared_v": sv,
+    }
+    return logits.astype(jnp.float32), new_cache
+
+
+def prefill(params, tokens, cfg, *, policy, mesh=None, max_len=None, **_):
+    """Prefill as scan-over-layers with stacked state collection.
+
+    A python loop over the 38 layers kept ~1.3 GB/layer of intermediates
+    live simultaneously (32 GB temp at 32k prefill); lax.scan bounds the
+    live set to ONE layer (§Perf zamba hillclimb: temp 32 GB -> ~8 GB).
+
+    ``max_len``: total serving capacity (>= S) — the shared-attn ring
+    buffer is sized min(max_len, _SHARED_WINDOW) and entries are stored at
+    their POSITION-ALIGNED ring slot (token p -> slot p % win) so
+    decode_step's ``pos % win`` writes continue the ring coherently."""
+    cparams = policy.cast_to_compute(params)
+    x = layers.apply_embed(cparams["embed"], tokens, policy.compute_dtype)
+    x0 = x
+    B, S, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    cos, sin = attn_lib.rope_cos_sin(pos, _shared_cfg(cfg).d_head,
+                                     cfg.rope_theta, x.dtype)
+    scfg = _shared_cfg(cfg)
+    win = min(max_len or S, _SHARED_WINDOW)
+    every = max(cfg.shared_attn_every, 1)
+    shared = cparams["shared"]
+
+    def body(carry, block):
+        h, idx = carry
+        hn = layers.apply_norm(block["ln"], h, "rmsnorm")
+        y, st = ssm.apply_mamba2(block["m"], hn, cfg.d_model, cfg.ssm,
+                                 return_state=True)
+        h = h + y
+
+        def _ring(k):
+            """Last `win` entries at their position-aligned ring slots."""
+            if S >= win:
+                return jnp.roll(k[:, -win:], S % win, axis=1)
+            return jnp.pad(k, ((0, 0), (0, win - S), (0, 0), (0, 0)))
+
+        def with_shared(hh):
+            hh2, (k, v) = _apply_shared(shared, hh, x0, cfg, cos, sin)
+            return (hh2, _ring(k).astype(jnp.bfloat16),
+                    _ring(v).astype(jnp.bfloat16))
+
+        def without_shared(hh):
+            z = jnp.zeros((B, win, scfg.n_kv_heads, scfg.d_head),
+                          jnp.bfloat16)
+            return hh, z, z
+
+        h, k, v = jax.lax.cond(idx % every == 0, with_shared,
+                               without_shared, h)
+        h = sharding.constrain_batch(h, mesh)
+        return (h, idx + 1), (st.ssm, st.conv.astype(jnp.bfloat16), k, v)
+
+    (x, _), (ssm_s, conv_s, ks, vs) = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.int32)), cparams["mamba"])
+    ids = jnp.asarray(_shared_idx(cfg))
+    h = layers.apply_norm(cparams["ln_f"], x, "rmsnorm")
+    logits = h[:, -1:] @ cparams["head"]["w"].astype(h.dtype)
+    new_cache = {"mamba": ssm.Mamba2State(ssm=ssm_s, conv=conv_s),
+                 "shared_k": ks[ids], "shared_v": vs[ids]}
+    return logits.astype(jnp.float32), new_cache

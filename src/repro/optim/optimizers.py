@@ -1,0 +1,153 @@
+"""Pure-JAX optimizers (no optax): SGD, Adam, AdamW, RMSprop.
+
+Each optimizer is a pair of pure functions packaged in an `Optimizer`
+namedtuple:  ``init(params) -> state``,
+``update(grads, state, params) -> (updates, state)``.
+Updates are ADDED to params (they already contain the negative sign).
+
+The paper's 3DGAN trains with RMSprop (the classic GAN choice); the LM
+architectures default to AdamW.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+ScheduleOrFloat = Union[float, Callable[[jax.Array], jax.Array]]
+
+
+def _lr_at(lr: ScheduleOrFloat, step):
+    return lr(step) if callable(lr) else lr
+
+
+def _zeros_like_float(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+# ---------------------------------------------------------------------------
+
+
+def sgd(lr: ScheduleOrFloat, momentum: float = 0.0):
+    def init(params):
+        mu = _zeros_like_float(params) if momentum else None
+        return {"step": jnp.zeros((), jnp.int32), "mu": mu}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lrt = _lr_at(lr, step)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+            upd = jax.tree.map(lambda m: -lrt * m, mu)
+            return upd, {"step": step, "mu": mu}
+        return jax.tree.map(lambda g: -lrt * g, grads), {"step": step, "mu": None}
+
+    return Optimizer(init, update)
+
+
+def adam(lr: ScheduleOrFloat, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0):
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": _zeros_like_float(params), "v": _zeros_like_float(params)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lrt = _lr_at(lr, step)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def u(m_, v_, p):
+            upd = -lrt * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                upd = upd - lrt * weight_decay * p.astype(jnp.float32)
+            return upd.astype(p.dtype)
+
+        upds = (jax.tree.map(u, m, v, params) if params is not None else
+                jax.tree.map(lambda m_, v_: u(m_, v_, m_), m, v))
+        return upds, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: ScheduleOrFloat, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1):
+    return adam(lr, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay)
+
+
+def rmsprop(lr: ScheduleOrFloat, decay=0.9, eps=1e-8, momentum=0.0):
+    """RMSprop — the 3DGAN training optimizer (keras-compatible math)."""
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "nu": _zeros_like_float(params),
+                "mu": _zeros_like_float(params) if momentum else None}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lrt = _lr_at(lr, step)
+        nu = jax.tree.map(
+            lambda n, g: decay * n + (1 - decay) * jnp.square(g.astype(jnp.float32)),
+            state["nu"], grads)
+        scaled = jax.tree.map(
+            lambda g, n: g.astype(jnp.float32) / (jnp.sqrt(n) + eps), grads, nu)
+        if momentum:
+            mu = jax.tree.map(lambda m, s: momentum * m + s, state["mu"], scaled)
+            upd = jax.tree.map(lambda m: -lrt * m, mu)
+            return upd, {"step": step, "nu": nu, "mu": mu}
+        upd = jax.tree.map(lambda s: -lrt * s, scaled)
+        return upd, {"step": step, "nu": nu, "mu": None}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Gradient transforms
+# ---------------------------------------------------------------------------
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), grads), g
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return schedule
+
+
+def constant(lr: float):
+    return lambda step: jnp.full((), lr, jnp.float32)
+
+
+def get_optimizer(name: str, lr: ScheduleOrFloat, **kw) -> Optimizer:
+    return {"sgd": sgd, "adam": adam, "adamw": adamw, "rmsprop": rmsprop}[name](lr, **kw)

@@ -1,0 +1,148 @@
+"""Parse collective traffic out of lowered/compiled HLO text.
+
+``cost_analysis()`` does not expose collective bytes, so the roofline's
+third term comes from summing operand/result sizes of every collective op
+in the optimized HLO module.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# matches e.g.  f32[512,1024]  or  bf16[8,128]{1,0}
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+# LHS of an HLO instruction:  %name = <result-type> opcode(
+_LINE_RE = re.compile(
+    r"=\s*(.+?)\s+(" + "|".join(COLLECTIVE_OPS) + r")(-start|-done)?\(")
+
+
+def _shape_bytes(span: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(span):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+# while instruction with named condition/body computations
+_WHILE_RE = re.compile(
+    r"while\(.*?\)[^\n]*?condition=%?([\w\.\-]+)[^\n]*?body=%?([\w\.\-]+)")
+_S32_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> dict:
+    """Map computation name -> its text block.
+
+    A computation header is a top-level line ending in ``{`` that contains
+    ``->`` (params may hold arbitrarily nested parens, so no param regex);
+    the name is the first ``%``-token (with optional leading ENTRY).
+    """
+    blocks = {}
+    name, buf = None, []
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.endswith("{") and "->" in s and not line.startswith("  "):
+            tok = s.split()[1] if s.startswith("ENTRY") else s.split()[0]
+            name = tok.lstrip("%")
+            buf = []
+            blocks[name] = buf
+        elif s == "}":
+            name = None
+        elif name is not None:
+            buf.append(line)
+    return {k: "\n".join(v) for k, v in blocks.items()}
+
+
+def _loop_multipliers(blocks: dict) -> dict:
+    """Per-computation execution-count multiplier from while-loop nesting.
+
+    XLA prints a while body ONCE regardless of trip count, so anything
+    inside it (collectives included) must be scaled by the loop length —
+    read from the loop-condition's s32 constant (the jax.lax.scan bound).
+    """
+    parent = {}          # body -> (enclosing computation, trip count)
+    for comp, text in blocks.items():
+        for m in _WHILE_RE.finditer(text):
+            cond, body = m.group(1), m.group(2)
+            consts = [int(c) for c in _S32_CONST_RE.findall(
+                blocks.get(cond, ""))]
+            trip = max(consts) if consts else 1
+            parent[body] = (comp, trip)
+
+    mult = {}
+
+    def resolve(comp, _depth=0):
+        if comp in mult:
+            return mult[comp]
+        if comp not in parent or _depth > 32:
+            mult[comp] = 1.0
+            return 1.0
+        up, trip = parent[comp]
+        mult[comp] = trip * resolve(up, _depth + 1)
+        return mult[comp]
+
+    for comp in blocks:
+        resolve(comp)
+    return mult
+
+
+def collective_stats(hlo_text: str, scale_loops: bool = True) -> dict:
+    """Returns {op: {"bytes": result-bytes-sum, "count": n}} per collective
+    kind (async -start/-done pairs counted once, on the -start).
+
+    With ``scale_loops`` (default), collectives inside while-loop bodies are
+    multiplied by the loop trip count — XLA prints scan bodies once, but the
+    traffic happens every iteration.
+    """
+    blocks = _split_computations(hlo_text)
+    mults = _loop_multipliers(blocks) if scale_loops else {}
+    stats = defaultdict(lambda: {"bytes": 0, "count": 0})
+    for comp, text in blocks.items():
+        k = mults.get(comp, 1.0)
+        for line in text.splitlines():
+            m = _LINE_RE.search(line)
+            if not m:
+                continue
+            result_span, op, suffix = m.group(1), m.group(2), m.group(3)
+            if suffix == "-done":
+                continue
+            stats[op]["bytes"] += int(k * _shape_bytes(result_span))
+            stats[op]["count"] += int(k)
+    return dict(stats)
+
+
+def total_collective_bytes(hlo_text: str) -> int:
+    return sum(v["bytes"] for v in collective_stats(hlo_text).values())
+
+
+def ici_traffic_bytes(stats: dict, n_devices: int) -> float:
+    """Approximate per-device ICI traffic from result sizes.
+
+    ring algorithms: all-gather/reduce-scatter move (N-1)/N of the global
+    result per device; all-reduce = reduce-scatter + all-gather = 2x that;
+    all-to-all moves (N-1)/N of the shard; collective-permute moves the
+    full result once.
+    """
+    f = (n_devices - 1) / max(n_devices, 1)
+    total = 0.0
+    for op, v in stats.items():
+        b = v["bytes"]
+        if op == "all-reduce":
+            total += 2 * f * b
+        elif op in ("all-gather", "reduce-scatter", "all-to-all"):
+            total += f * b
+        else:                       # collective-permute
+            total += b
+    return total

@@ -1,0 +1,142 @@
+"""Exact structural cost analysis by walking the jaxpr.
+
+XLA's ``cost_analysis()`` counts while-loop (lax.scan) bodies ONCE, so for
+scan-over-layers models it under-reports FLOPs/bytes by ~n_layers.  This
+module walks the closed jaxpr instead, multiplying scan bodies by their trip
+count and remat (custom_jvp/checkpoint) bodies by their call count — giving
+the TRUE global per-step numbers the roofline needs:
+
+- flops: 2*M*N*K for every dot_general (batch dims included), the standard
+  2 * out_elems * kernel_elems * C_in for convolutions;
+- bytes: sum of operand + result aval bytes for every *memory-moving*
+  primitive (dots, convs, gathers/scatters, dynamic slices, transposes,
+  concatenations, reductions >= 1 MiB) — a structural HBM-traffic estimate
+  consistent across architectures (it ignores fusion, like XLA's own
+  "bytes accessed"; we report it per device by dividing by shard counts at
+  the call site).
+
+Usage:  stats = jaxpr_cost(jax.make_jaxpr(fn)(*args))
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import numpy as np
+from jax.extend import core
+
+_BIG = 1 << 20        # only count byte traffic of ops touching >= 1 MiB
+
+
+def _aval_bytes(aval) -> int:
+    if not hasattr(aval, "shape") or not hasattr(aval, "dtype"):
+        return 0
+    return int(np.prod(aval.shape, dtype=np.int64)) * aval.dtype.itemsize
+
+
+def _dot_flops(eqn) -> float:
+    (lhs, rhs) = (v.aval for v in eqn.invars)
+    dims = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dims
+    contract = math.prod(lhs.shape[d] for d in lc) or 1
+    batch = math.prod(lhs.shape[d] for d in lb) or 1
+    m = math.prod(lhs.shape[d] for d in range(len(lhs.shape))
+                  if d not in lc and d not in lb) or 1
+    n = math.prod(rhs.shape[d] for d in range(len(rhs.shape))
+                  if d not in rc and d not in rb) or 1
+    return 2.0 * batch * m * n * contract
+
+
+def _conv_flops(eqn) -> float:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval
+    dn = eqn.params["dimension_numbers"]
+    k_spatial = math.prod(rhs.shape[d] for d in dn.rhs_spec[2:]) or 1
+    c_in = rhs.shape[dn.rhs_spec[1]]
+    groups = eqn.params.get("feature_group_count", 1)
+    out_elems = math.prod(out.shape)
+    return 2.0 * out_elems * k_spatial * (c_in // max(groups, 1)) * groups
+
+
+# data-MOVEMENT primitives only: elementwise ops are excluded because XLA
+# fuses their intermediate traffic away; what's left is a lower-ish bound
+# on unavoidable HBM movement (matmul operands, gathers, cache updates,
+# layout changes, reductions).  The roofline's memory term additionally
+# uses the compiled post-fusion "bytes accessed" scaled by the scan-trip
+# ratio — see benchmarks/roofline.py.
+_MEM_PRIMS = {
+    "dot_general", "conv_general_dilated", "gather", "scatter", "scatter-add",
+    "dynamic_slice", "dynamic_update_slice", "concatenate", "transpose",
+    "reduce_sum", "reduce_max", "cumsum", "rev", "pad", "slice",
+}
+
+
+def _eqn_bytes(eqn) -> int:
+    total = sum(_aval_bytes(v.aval) for v in eqn.invars
+                if isinstance(v, core.Var))
+    total += sum(_aval_bytes(v.aval) for v in eqn.outvars)
+    return total if total >= _BIG else 0
+
+
+_CALL_SUBJAXPR_KEYS = ("jaxpr", "call_jaxpr", "fun_jaxpr", "cond_jaxpr")
+
+
+def _walk(jaxpr, mult: float, acc: dict):
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "dot_general":
+            acc["flops"] += mult * _dot_flops(eqn)
+            acc["bytes"] += mult * _eqn_bytes(eqn)
+            acc["dot_count"] += mult
+        elif prim == "conv_general_dilated":
+            acc["flops"] += mult * _conv_flops(eqn)
+            acc["bytes"] += mult * _eqn_bytes(eqn)
+        elif prim == "scan":
+            length = eqn.params["length"]
+            inner = eqn.params["jaxpr"]
+            _walk(inner.jaxpr, mult * length, acc)
+            continue
+        elif prim == "while":
+            # rarely used directly; body counted once (trip unknown)
+            _walk(eqn.params["body_jaxpr"].jaxpr, mult, acc)
+            continue
+        elif prim == "cond":
+            branches = eqn.params["branches"]
+            # count the most expensive branch (worst case)
+            subs = []
+            for br in branches:
+                sub = {"flops": 0.0, "bytes": 0.0, "dot_count": 0.0}
+                _walk(br.jaxpr, mult, sub)
+                subs.append(sub)
+            best = max(subs, key=lambda s: s["flops"])
+            for k in best:
+                acc[k] += best[k]
+            continue
+        else:
+            handled = False
+            for key in _CALL_SUBJAXPR_KEYS:
+                if key in eqn.params:
+                    sub = eqn.params[key]
+                    inner = sub.jaxpr if hasattr(sub, "jaxpr") else sub
+                    _walk(inner, mult, acc)
+                    handled = True
+                    break
+            if not handled and prim in _MEM_PRIMS:
+                acc["bytes"] += mult * _eqn_bytes(eqn)
+
+
+def jaxpr_cost(closed_jaxpr) -> dict:
+    """Returns {"flops", "bytes", "dot_count"} — GLOBAL (unsharded) totals.
+
+    ``flops`` counts matmul/conv MACs*2 (the MXU term); ``bytes`` is the
+    structural memory-traffic estimate described in the module docstring.
+    """
+    acc = {"flops": 0.0, "bytes": 0.0, "dot_count": 0.0}
+    _walk(closed_jaxpr.jaxpr, 1.0, acc)
+    return acc
+
+
+def cost_of(fn, *args) -> dict:
+    """Trace fn(*args) (ShapeDtypeStructs fine) and analyse."""
+    return jaxpr_cost(jax.make_jaxpr(fn)(*args))

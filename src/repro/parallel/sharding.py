@@ -1,0 +1,192 @@
+"""Logical-axis sharding: map named parameter axes onto the physical mesh.
+
+Every model exposes a pytree of logical-axis tuples mirroring its params
+(e.g. ``("embed", "heads")`` for wq).  Rules tables translate logical names
+to mesh axes; `resolve_spec` drops axes that don't divide evenly and never
+reuses a mesh axis twice within one spec.
+
+Three rule sets:
+
+- ``DP_RULES``   — paper-faithful pure data parallelism (mirrored strategy):
+                   params fully replicated, batch sharded over (pod, data).
+- ``TP_RULES``   — tensor/expert parallelism over ``model`` only.
+- ``FSDP_TP_RULES`` (beyond-paper default for big archs) — tensor/expert
+                   parallel over ``model`` + parameter FSDP over ``data``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# activation/cache logical axes shared by all rule sets
+_ACT_RULES = {
+    "batch": ("pod", "data"),
+    "cache_seq": "model",
+}
+
+DP_RULES = {**_ACT_RULES}
+
+TP_RULES = {
+    **_ACT_RULES,
+    "heads": "model", "kv_heads": "model", "mlp": "model",
+    "vocab": "model", "inner": "model", "expert": "model",
+}
+
+FSDP_TP_RULES = {
+    **TP_RULES,
+    "embed": "data",
+}
+
+RULE_SETS = {"dp": DP_RULES, "tp": TP_RULES, "fsdp_tp": FSDP_TP_RULES}
+
+
+def mesh_axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def resolve_spec(logical, shape, mesh: Mesh, rules: dict) -> P:
+    """logical: tuple of axis names (or None) matching `shape`.
+
+    Rule values may be a mesh-axis name or a tuple of names (e.g. batch ->
+    ("pod", "data")).  Axes that don't exist, don't divide the dim, or are
+    already used by an earlier dim are dropped.
+    """
+    assert len(logical) == len(shape), (logical, shape)
+    used = set()
+    out = []
+    for name, dim in zip(logical, shape):
+        phys = rules.get(name) if name is not None else None
+        if phys is None:
+            out.append(None)
+            continue
+        cand = (phys,) if isinstance(phys, str) else tuple(phys)
+        cand = tuple(a for a in cand if a in mesh.axis_names and a not in used)
+        size = int(np.prod([mesh_axis_size(mesh, a) for a in cand])) if cand else 1
+        if not cand or dim % size != 0:
+            out.append(None)
+        else:
+            out.append(cand[0] if len(cand) == 1 else cand)
+            used.update(cand)
+    return P(*out)
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x)
+
+
+def tree_specs(axes_tree, shape_tree, mesh: Mesh, rules: dict):
+    """Build a PartitionSpec pytree from (axes, shapes) pytrees."""
+    flat_axes = jax.tree.leaves(axes_tree, is_leaf=_is_axes_leaf)
+    flat_shapes, treedef = jax.tree.flatten(shape_tree)
+    assert len(flat_axes) == len(flat_shapes), (
+        f"{len(flat_axes)} axis leaves vs {len(flat_shapes)} shape leaves")
+    specs = [resolve_spec(a, tuple(s.shape), mesh, rules)
+             for a, s in zip(flat_axes, flat_shapes)]
+    return jax.tree.unflatten(treedef, specs)
+
+
+def tree_shardings(axes_tree, shape_tree, mesh: Mesh, rules: dict):
+    specs = tree_specs(axes_tree, shape_tree, mesh, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_axes(mesh: Mesh):
+    """Mesh axes carrying the batch dimension (paper: pure DP over these)."""
+    names = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return names if names else None
+
+
+def batch_spec(mesh: Mesh, rank: int = 2) -> P:
+    ax = batch_axes(mesh)
+    return P(ax, *([None] * (rank - 1)))
+
+
+# Sequence-parallel residual-stream constraint.  ON: the seq dim of the
+# residual stream is sharded over 'model' between blocks — smaller
+# remat-saved activations, but GSPMD must re-gather the sequence for
+# attention in every layer (an all-gather of the full activation per
+# block, fwd AND bwd).  The §Perf hillclimb measured that cost dominating
+# every train/prefill pair, so the default is OFF; flip per-run with
+# `seq_sharding(True)` when activation MEMORY (not collectives) binds.
+_SEQ_SHARD = [False]
+
+
+class seq_sharding:
+    """Context manager: enable/disable seq-dim model sharding."""
+
+    def __init__(self, on: bool):
+        self.on = on
+
+    def __enter__(self):
+        self.prev = _SEQ_SHARD[0]
+        _SEQ_SHARD[0] = self.on
+        return self
+
+    def __exit__(self, *a):
+        _SEQ_SHARD[0] = self.prev
+
+
+def constrain_batch(x, mesh: Optional[Mesh], seq_dim: Optional[int] = None):
+    """with_sharding_constraint: leading dim over (pod, data); optionally the
+    ``seq_dim`` over 'model' (see seq_sharding above).  Skipped automatically
+    when the dim does not divide."""
+    if mesh is None or batch_axes(mesh) is None:
+        return x
+    entries = list(batch_spec(mesh, x.ndim))
+    if (_SEQ_SHARD[0] and seq_dim is not None and "model" in mesh.axis_names
+            and x.shape[seq_dim] % mesh_axis_size(mesh, "model") == 0
+            and x.shape[seq_dim] > 1):
+        entries[seq_dim] = "model"
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))
+
+
+def constrain_act(x, mesh: Optional[Mesh], logical: tuple,
+                  rules: Optional[dict] = None):
+    """Constrain one activation tensor by logical dim names.
+
+    H5 (§Perf): pinning q/k/v/o to head-sharded, full-sequence layout
+    inside each block locks GSPMD into the Megatron schedule (one AG of
+    the residual into the block, one AR out) instead of per-chunk
+    dynamic-slice gathers inside blockwise attention."""
+    if mesh is None:
+        return x
+    rules = rules if rules is not None else FSDP_TP_RULES
+    spec = resolve_spec(logical, tuple(x.shape), mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_tree(tree, axes_tree, mesh: Optional[Mesh], rules: dict):
+    """with_sharding_constraint over a whole param subtree.
+
+    Used INSIDE the scan-over-layers body with TP_RULES: the per-layer
+    weight slice is constrained to tensor-parallel-only sharding, so GSPMD
+    ALL-GATHERS the (small) FSDP weight shards over 'data' instead of
+    computing contractions against data-sharded weights and ALL-REDUCING
+    the (huge) activation-sized partial sums — the §Perf H2 fix that cut
+    the collective term ~20x on the big dense archs."""
+    if mesh is None:
+        return tree
+    flat_axes = jax.tree.leaves(axes_tree, is_leaf=_is_axes_leaf)
+    flat, treedef = jax.tree.flatten(tree)
+    assert len(flat_axes) == len(flat), (len(flat_axes), len(flat))
+    out = []
+    for leaf, ax in zip(flat, flat_axes):
+        spec = resolve_spec(ax, tuple(leaf.shape), mesh, rules)
+        out.append(jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(mesh, spec)))
+    return jax.tree.unflatten(treedef, out)
+
+
+def stacked(axes_tree):
+    """Prepend a (replicated) 'layers' axis to every leaf — for
+    scan-over-layers stacked params."""
+    return jax.tree.map(lambda t: (None,) + t, axes_tree, is_leaf=_is_axes_leaf)
+
+
+def count_params(tree) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)))

@@ -1,0 +1,166 @@
+"""Batched serving engine: continuous-batching decode over a fixed slot pool.
+
+The serving analogue of the paper's fused training loop: ONE compiled
+``serve_step`` advances every active slot a token per call — prompt
+insertion (prefill) happens on free slots, finished requests release their
+slot.  All per-slot state (KV cache / SSM state, positions, emitted tokens)
+lives on device; the host only enqueues prompts and drains outputs.
+
+Works with every architecture family through models.api (KV-cache archs and
+recurrent-state archs expose the same prefill/decode_step signatures).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.substrate.precision import get_policy
+from repro.train import steps as steps_lib
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (prompt_len,) int32
+    max_new_tokens: int = 32
+    eos_id: int = -1                # -1: never stops early
+    # filled by the engine:
+    tokens: Optional[list] = None
+    done: bool = False
+
+
+class ServeEngine:
+    """Slot-based continuous batching on a single compiled decode step."""
+
+    def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 512,
+                 policy_name: str = "f32", mesh=None):
+        self.cfg = cfg
+        self.model = api.get_model(cfg)
+        self.policy = get_policy(policy_name)
+        self.mesh = mesh
+        self.slots = slots
+        self.max_len = max_len
+        self.params = params
+
+        self._decode = jax.jit(steps_lib.make_serve_step(
+            self.model, cfg, self.policy, mesh=mesh))
+        # per-slot state: one cache of batch=slots; per-slot positions
+        self.cache = self.model.init_cache(cfg, slots, max_len, jnp.bfloat16)
+        self._cache_axes = self.model.cache_logical_axes(cfg)
+        self.pos = np.zeros((slots,), np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * slots
+        self.cur_tok = np.zeros((slots, 1), np.int32)
+        self._queue: List[Request] = []
+        self._finished: List[Request] = []
+
+    # -- host API ----------------------------------------------------------
+
+    def submit(self, req: Request):
+        req.tokens = []
+        self._queue.append(req)
+
+    def run(self, max_steps: int = 10_000):
+        """Drive until queue + slots drain (or max_steps)."""
+        for _ in range(max_steps):
+            self._fill_slots()
+            if all(r is None for r in self.slot_req):
+                break
+            self._step()
+        return self._finished
+
+    # -- internals -----------------------------------------------------------
+
+    def _fill_slots(self):
+        for s in range(self.slots):
+            if self.slot_req[s] is None and self._queue:
+                req = self._queue.pop(0)
+                self.slot_req[s] = req
+                self._prefill_slot(s, req)
+
+    def _merge_slot(self, new_cache, old_cache, slot: int):
+        """Take slot `slot`'s rows from new_cache, everything else from
+        old_cache.  The batch dim of each cache leaf comes from the
+        model's cache_logical_axes ('batch' entry) — this is what makes
+        the engine correct for RECURRENT state (Mamba/xLSTM), where decode
+        updates are not idempotent like KV-cache writes."""
+        from repro.parallel.sharding import _is_axes_leaf
+
+        flat_axes = jax.tree.leaves(self._cache_axes, is_leaf=_is_axes_leaf)
+        flat_new, treedef = jax.tree.flatten(new_cache)
+        flat_old = jax.tree.leaves(old_cache)
+
+        def merge(new, old, axes):
+            if "batch" not in axes:
+                return new
+            bdim = axes.index("batch")
+            idx = jnp.arange(new.shape[bdim])
+            shape = [1] * new.ndim
+            shape[bdim] = new.shape[bdim]
+            mask = (idx == slot).reshape(shape)
+            return jnp.where(mask, new, old)
+
+        merged = [merge(n, o, a)
+                  for n, o, a in zip(flat_new, flat_old, flat_axes)]
+        return jax.tree.unflatten(treedef, merged)
+
+    def _zero_slot(self, slot: int):
+        zeros = self.model.init_cache(self.cfg, self.slots, self.max_len,
+                                      jnp.bfloat16)
+        self.cache = self._merge_slot(zeros, self.cache, slot)
+
+    def _prefill_slot(self, s: int, req: Request):
+        """Sequential per-slot prefill: feed prompt tokens through decode
+        steps for this slot (single-slot prefill keeps ONE compiled program
+        for the whole engine; a bulk-prefill variant is a future fast path).
+
+        Other slots' cache rows are snapshotted and restored afterwards:
+        during prefill the global decode step advances EVERY slot, which is
+        harmless for KV caches (same-index overwrite) but double-advances
+        recurrent state."""
+        self._zero_slot(s)
+        snapshot = self.cache
+        self.pos[s] = 0
+        # decode the prompt token by token into the slot's cache region
+        for t in req.prompt:
+            self.cur_tok[s, 0] = t
+            self._step(active_slot=s)
+        self.cache = self._merge_slot(self.cache, snapshot, s)
+        # after the prompt, cur_tok[s] holds the model's first sampled token
+        req.tokens.append(int(self.cur_tok[s, 0]))
+
+    def _step(self, active_slot: Optional[int] = None):
+        """One global decode step (all slots advance; inactive slots are
+        harmless — their outputs are ignored)."""
+        extra = {}
+        if self.cfg.mrope:
+            p = jnp.asarray(self.pos[None, :, None].repeat(3, 0))
+            extra["positions"] = p.astype(jnp.int32)
+        # per-slot position vector: every slot writes its own cache row at
+        # its own depth (ragged continuous batching); inactive slots'
+        # writes are idempotent (same index until the slot advances)
+        pos_vec = jnp.asarray(self.pos, jnp.int32)
+        nxt, self.cache = self._decode(self.params, jnp.asarray(self.cur_tok),
+                                       self.cache, pos_vec, extra)
+        nxt = np.asarray(nxt)
+        for s in range(self.slots):
+            req = self.slot_req[s]
+            if active_slot is not None and s != active_slot:
+                continue
+            self.pos[s] += 1
+            if req is None:
+                continue
+            if active_slot is None:
+                req.tokens.append(int(nxt[s]))
+            self.cur_tok[s, 0] = nxt[s]
+            if (len(req.tokens) >= req.max_new_tokens
+                    or (req.eos_id >= 0 and req.tokens
+                        and req.tokens[-1] == req.eos_id)
+                    or self.pos[s] >= self.max_len - 1):
+                req.done = True
+                self._finished.append(req)
+                self.slot_req[s] = None

@@ -1,0 +1,140 @@
+"""Shared numeric substrate: initializers, norms, dense layers, activations.
+
+Parameters are plain nested dicts of jnp arrays.  Every init_* function has a
+matching *_axes function returning the logical-axis names for each leaf, used
+by repro.parallel.sharding to build PartitionSpecs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def normal_init(key, shape, scale=0.02, dtype=jnp.float32):
+    return scale * jax.random.normal(key, shape, dtype)
+
+
+def lecun_init(key, shape, fan_in=None, dtype=jnp.float32):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return jax.random.normal(key, shape, dtype) / jnp.sqrt(jnp.maximum(fan_in, 1.0))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(d: int, norm_type: str = "rmsnorm"):
+    if norm_type == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def norm_axes(norm_type: str = "rmsnorm"):
+    if norm_type == "rmsnorm":
+        return {"scale": ("embed",)}
+    return {"scale": ("embed",), "bias": ("embed",)}
+
+
+def apply_norm(p, x, norm_type: str = "rmsnorm", eps: float = 1e-5):
+    # norm statistics in f32 regardless of compute dtype
+    xf = x.astype(jnp.float32)
+    if norm_type == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"]).astype(x.dtype)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense / FFN
+# ---------------------------------------------------------------------------
+
+
+def init_dense(key, d_in, d_out, bias=False, scale=0.02):
+    p = {"w": normal_init(key, (d_in, d_out), scale)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def dense_axes(ax_in, ax_out, bias=False):
+    p = {"w": (ax_in, ax_out)}
+    if bias:
+        p["b"] = (ax_out,)
+    return p
+
+
+def apply_dense(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def act(name: str, x):
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "relu2":                       # nemotron squared-ReLU
+        r = jax.nn.relu(x)
+        return r * r
+    if name == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(name)
+
+
+def init_ffn(key, d_model, d_ff, ffn_type: str):
+    ks = jax.random.split(key, 3)
+    if ffn_type == "swiglu":
+        return {
+            "w_gate": normal_init(ks[0], (d_model, d_ff)),
+            "w_in": normal_init(ks[1], (d_model, d_ff)),
+            "w_out": normal_init(ks[2], (d_ff, d_model)),
+        }
+    return {
+        "w_in": normal_init(ks[0], (d_model, d_ff)),
+        "w_out": normal_init(ks[1], (d_ff, d_model)),
+    }
+
+
+def ffn_axes(ffn_type: str):
+    if ffn_type == "swiglu":
+        return {"w_gate": ("embed", "mlp"), "w_in": ("embed", "mlp"),
+                "w_out": ("mlp", "embed")}
+    return {"w_in": ("embed", "mlp"), "w_out": ("mlp", "embed")}
+
+
+def apply_ffn(p, x, ffn_type: str):
+    if ffn_type == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"].astype(x.dtype)) * (x @ p["w_in"].astype(x.dtype))
+    elif ffn_type == "relu2":
+        h = act("relu2", x @ p["w_in"].astype(x.dtype))
+    else:
+        h = act("gelu", x @ p["w_in"].astype(x.dtype))
+    return h @ p["w_out"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key, vocab, d_model):
+    return {"emb": normal_init(key, (vocab, d_model), 0.02)}
+
+
+def embed_axes():
+    return {"emb": ("vocab", "embed")}
+
+
+def apply_embed(p, tokens, dtype=jnp.float32):
+    return p["emb"].astype(dtype)[tokens]

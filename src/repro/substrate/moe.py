@@ -1,0 +1,108 @@
+"""Mixture-of-Experts substrate: top-k router + grouped capacity dispatch.
+
+GShard/Mesh-TF formulation, adapted for TPU + GSPMD:
+
+- tokens are split into GROUPS along the (data-sharded) token axis; each
+  group computes its own capacity-bounded dispatch one-hot, keeping dispatch
+  memory O(group * E * cap) instead of O(T * E * cap_global);
+- per-expert buffers are built with einsums (lowering to all-to-all across
+  the ``expert``->``model`` mesh axis under GSPMD);
+- experts run as one (G, E)-batched matmul, sharded over groups (data) and
+  experts (model) simultaneously.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.substrate import layers
+
+
+def init_moe(key, cfg):
+    m = cfg.moe
+    ks = jax.random.split(key, 4)
+    d, dff, E = cfg.d_model, m.d_ff_expert, m.n_experts
+    p = {
+        "router": layers.normal_init(ks[0], (d, E), 0.02),
+        "w_in": layers.normal_init(ks[1], (E, d, dff)),
+        "w_out": layers.normal_init(ks[2], (E, dff, d)),
+    }
+    if cfg.ffn_type == "swiglu":
+        p["w_gate"] = layers.normal_init(ks[3], (E, d, dff))
+    return p
+
+
+def moe_axes(cfg):
+    p = {
+        "router": ("embed", None),
+        "w_in": ("expert", "embed", "mlp"),
+        "w_out": ("expert", "mlp", "embed"),
+    }
+    if cfg.ffn_type == "swiglu":
+        p["w_gate"] = ("expert", "embed", "mlp")
+    return p
+
+
+def _pick_groups(T: int, target: int = 1024) -> int:
+    """Largest group count G dividing T with group size <= target."""
+    G = max(1, T // target)
+    while T % G:
+        G += 1
+    return G
+
+
+def apply_moe(p, x, cfg, group_target: int = 1024):
+    """x: (B, S, d) -> (y, aux_loss, stats)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    E, K = m.n_experts, m.top_k
+    T = B * S
+    G = _pick_groups(T, group_target)
+    gs = T // G
+    xg = x.reshape(G, gs, d)
+
+    logits = (xg @ p["router"].astype(x.dtype)).astype(jnp.float32)   # (G,gs,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)                   # (G,gs,K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    cap = max(int(m.capacity_factor * gs * K / E), K)
+
+    # position of each (token, k) slot inside its expert buffer (per group)
+    onehot_e = jax.nn.one_hot(expert_ids, E, dtype=jnp.int32)         # (G,gs,K,E)
+    flat = onehot_e.reshape(G, gs * K, E)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(G, gs, K, E)
+    pos = jnp.sum(pos * onehot_e, axis=-1)                            # (G,gs,K)
+    keep = (pos < cap).astype(jnp.float32)
+
+    onehot_c = jax.nn.one_hot(pos, cap, dtype=jnp.float32)            # (G,gs,K,cap)
+    oe = onehot_e.astype(jnp.float32)
+
+    # dispatch: (G, gs, E, cap)
+    disp = jnp.einsum("gske,gskc->gsec", oe, onehot_c * keep[..., None])
+    buf = jnp.einsum("gsec,gsd->gecd", disp.astype(x.dtype), xg)      # (G,E,cap,d)
+
+    # expert computation — batched over (G, E)
+    if cfg.ffn_type == "swiglu":
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["w_gate"].astype(x.dtype)))
+        h = h * jnp.einsum("gecd,edf->gecf", buf, p["w_in"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", buf, p["w_in"].astype(x.dtype)))
+    out = jnp.einsum("gecf,efd->gecd", h, p["w_out"].astype(x.dtype))
+
+    # combine with gate weights: (G, gs, E, cap) weighted
+    wdisp = jnp.einsum("gske,gskc,gsk->gsec", oe, onehot_c,
+                       gate_vals * keep)
+    y = jnp.einsum("gsec,gecd->gsd", wdisp.astype(x.dtype), out)
+    y = y.reshape(B, S, d)
+
+    # aux losses (Switch-style load balance + router z-loss)
+    me = jnp.mean(probs, axis=1)                                      # (G,E)
+    frac = jnp.mean(oe, axis=(1, 2))                                  # (G,E)
+    load_balance = E * jnp.mean(jnp.sum(frac * me, axis=-1))
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = m.load_balance_loss * load_balance + m.router_z_loss * z_loss
+    stats = {"moe_load_balance": load_balance, "moe_z": z_loss,
+             "moe_drop_frac": 1.0 - jnp.mean(keep)}
+    return y.astype(x.dtype), aux, stats

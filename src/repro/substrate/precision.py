@@ -1,0 +1,41 @@
+"""Mixed-precision policy (paper §4: bf16 on the MXU, f32 master weights).
+
+bf16 shares the f32 exponent range, so no loss scaling is required (unlike
+fp16) — matching how TPUs train in practice and what the paper relies on.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.bfloat16
+    output_dtype: jnp.dtype = jnp.float32
+
+    def cast_to_compute(self, tree):
+        return jax.tree.map(
+            lambda x: x.astype(self.compute_dtype)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+    def cast_to_param(self, tree):
+        return jax.tree.map(
+            lambda x: x.astype(self.param_dtype)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+    def cast_to_output(self, tree):
+        return jax.tree.map(
+            lambda x: x.astype(self.output_dtype)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+
+DEFAULT = Policy()                                   # bf16 compute (paper's TPU mode)
+FULL = Policy(compute_dtype=jnp.float32)             # f32 everywhere (GPU baseline)
+
+
+def get_policy(name: str) -> Policy:
+    return {"bf16": DEFAULT, "mixed": DEFAULT, "f32": FULL, "full": FULL}[name]

@@ -1,0 +1,417 @@
+"""State-space / recurrent substrate.
+
+Three block families, each with a chunked/scan training form and an O(1)
+recurrent decode step (the reason zamba2/xlstm can serve long_500k):
+
+- **Mamba2 (SSD)**: scalar-per-head decay A, chunked algorithm — intra-chunk
+  quadratic matmuls (MXU-friendly) + inter-chunk state carry via lax.scan.
+- **mLSTM** (xLSTM): matrix memory C with exponential input gate / sigmoid
+  forget gate, computed chunkwise with running-max stabilisation.
+- **sLSTM** (xLSTM): strictly sequential stabilised scalar-memory LSTM with
+  block-diagonal recurrent weights, via lax.scan over time.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.substrate import layers
+
+# ===========================================================================
+# Mamba2 / SSD
+# ===========================================================================
+
+
+def init_mamba2(key, d_model: int, ssm):
+    di = ssm.expand * d_model
+    H = di // ssm.head_dim
+    N = ssm.state_dim
+    ks = jax.random.split(key, 8)
+    return {
+        # in_proj -> [z (di), x (di), B (N), C (N), dt (H)]
+        "in_proj": layers.normal_init(ks[0], (d_model, 2 * di + 2 * N + H)),
+        "conv_w": layers.normal_init(ks[1], (ssm.conv_width, di + 2 * N), 0.2),
+        "conv_b": jnp.zeros((di + 2 * N,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (H,),
+                    minval=jnp.log(1e-3), maxval=jnp.log(1e-1))))),
+        "norm": layers.init_norm(di, "rmsnorm"),
+        "out_proj": layers.normal_init(ks[3], (di, d_model)),
+    }
+
+
+def mamba2_axes():
+    return {
+        "in_proj": ("embed", "inner"),
+        "conv_w": (None, "inner"),
+        "conv_b": ("inner",),
+        "A_log": ("inner",),
+        "D": ("inner",),
+        "dt_bias": ("inner",),
+        "norm": {"scale": ("inner",)},
+        "out_proj": ("inner", "embed"),
+    }
+
+
+class Mamba2State(NamedTuple):
+    ssm: jax.Array      # (B, H, P, N)
+    conv: jax.Array     # (B, conv_width-1, di + 2N) rolling conv buffer
+
+
+def _mamba2_split(p, x, d_model, ssm):
+    di = ssm.expand * d_model
+    H = di // ssm.head_dim
+    N = ssm.state_dim
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+    return z, xbc, dt, di, H, N
+
+
+def _causal_conv(xbc, w, b, pad_left=None):
+    """xbc: (B,S,C); depthwise causal conv, width W."""
+    W = w.shape[0]
+    if pad_left is None:
+        pad = jnp.zeros((xbc.shape[0], W - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = pad_left.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i].astype(xbc.dtype)
+              for i in range(W))
+    return jax.nn.silu(out + b.astype(xbc.dtype))
+
+
+def apply_mamba2(p, x, d_model, ssm, init_state=None, return_state=False):
+    """Chunked SSD forward. x: (B, S, d_model) -> (B, S, d_model)."""
+    B, S, _ = x.shape
+    z, xbc, dt_raw, di, H, N = _mamba2_split(p, x, d_model, ssm)
+    P = ssm.head_dim
+    conv_pad = init_state.conv if init_state is not None else None
+    if return_state:
+        # capture the conv tail BEFORE the conv consumes xbc (recomputing
+        # x @ in_proj here kept a 0.5 GB/layer buffer alive per layer in
+        # 32k prefill — §Perf zamba hillclimb)
+        W = p["conv_w"].shape[0]
+        if S >= W - 1:
+            conv_tail = xbc[:, S - (W - 1):, :]
+        else:
+            conv_tail = jnp.pad(xbc, ((0, 0), (W - 1 - S, 0), (0, 0)))
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_pad)
+    xs, Bmat, Cmat = jnp.split(xbc, [di, di + N], axis=-1)
+    xs = xs.reshape(B, S, H, P)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"])                      # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                  # (H,) negative
+    la = dt * A                                               # log-decay (B,S,H)
+
+    L = min(ssm.chunk, S)
+    assert S % L == 0, (S, L)
+    nC = S // L
+    # reshape into chunks
+    xc = xs.reshape(B, nC, L, H, P)
+    bc = Bmat.reshape(B, nC, L, N).astype(jnp.float32)
+    cc = Cmat.reshape(B, nC, L, N).astype(jnp.float32)
+    dtc = dt.reshape(B, nC, L, H)
+    lac = la.reshape(B, nC, L, H)
+
+    s0 = (init_state.ssm.astype(jnp.float32) if init_state is not None
+          else jnp.zeros((B, H, P, N), jnp.float32))
+
+    def chunk_body(state, inp):
+        xci, bci, cci, dti, lai = inp                 # (B,L,H,P),(B,L,N),...
+        F = jnp.cumsum(lai, axis=1)                   # (B,L,H) inclusive
+        Ftot = F[:, -1]                               # (B,H)
+        # ----- inter: y_t += exp(F_t) * C_t . state
+        y_inter = jnp.einsum("bln,bhpn->blhp", cci, state) \
+            * jnp.exp(F).transpose(0, 1, 2)[..., None]
+        # ----- intra: scores[t,s] = (C_t.B_s) exp(F_t - F_s) dt_s, s<=t
+        dec = F[:, :, None, :] - F[:, None, :, :]     # (B,L,L,H)
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        dec = jnp.where(tri[None, :, :, None], dec, -jnp.inf)
+        cb = jnp.einsum("bln,bsn->bls", cci, bci)     # (B,L,L)
+        M = cb[..., None] * jnp.exp(dec) * dti[:, None, :, :]
+        y_intra = jnp.einsum("blsh,bshp->blhp", M, xci.astype(jnp.float32))
+        # ----- state update
+        wgt = jnp.exp(Ftot[:, None] - F) * dti        # (B,L,H)
+        dstate = jnp.einsum("blh,blhp,bln->bhpn",
+                            wgt, xci.astype(jnp.float32), bci)
+        state = state * jnp.exp(Ftot)[:, :, None, None] + dstate
+        return state, (y_inter + y_intra)
+
+    inputs = (xc.transpose(1, 0, 2, 3, 4), bc.transpose(1, 0, 2, 3),
+              cc.transpose(1, 0, 2, 3), dtc.transpose(1, 0, 2, 3),
+              lac.transpose(1, 0, 2, 3))
+    state, ys = jax.lax.scan(chunk_body, s0, inputs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = layers.apply_norm(p["norm"], y) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    if return_state:
+        return out, Mamba2State(ssm=state, conv=conv_tail)
+    return out
+
+
+def mamba2_init_state(cfg_d_model, ssm, batch, dtype=jnp.float32):
+    di = ssm.expand * cfg_d_model
+    H = di // ssm.head_dim
+    return Mamba2State(
+        ssm=jnp.zeros((batch, H, ssm.head_dim, ssm.state_dim), jnp.float32),
+        conv=jnp.zeros((batch, ssm.conv_width - 1, di + 2 * ssm.state_dim),
+                       dtype))
+
+
+def mamba2_step(p, x1, state: Mamba2State, d_model, ssm):
+    """Single decode step. x1: (B, 1, d_model) -> (y1, new_state)."""
+    B = x1.shape[0]
+    z, xbc, dt_raw, di, H, N = _mamba2_split(p, x1, d_model, ssm)
+    P = ssm.head_dim
+    # rolling conv buffer
+    buf = jnp.concatenate([state.conv.astype(x1.dtype), xbc], axis=1)
+    W = p["conv_w"].shape[0]
+    conv_out = jnp.einsum("bwc,wc->bc", buf[:, -W:], p["conv_w"].astype(x1.dtype))
+    xbc1 = jax.nn.silu(conv_out + p["conv_b"].astype(x1.dtype))[:, None]
+    xs, Bmat, Cmat = jnp.split(xbc1, [di, di + N], axis=-1)
+    xs = xs.reshape(B, H, P).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A)                                   # (B,H)
+    Bv = Bmat[:, 0].astype(jnp.float32)                       # (B,N)
+    Cv = Cmat[:, 0].astype(jnp.float32)
+    new_s = (state.ssm * decay[:, :, None, None]
+             + jnp.einsum("bh,bhp,bn->bhpn", dt, xs, Bv))
+    y = jnp.einsum("bn,bhpn->bhp", Cv, new_s) + p["D"][None, :, None] * xs
+    y = y.reshape(B, 1, di).astype(x1.dtype)
+    y = layers.apply_norm(p["norm"], y) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x1.dtype)
+    return out, Mamba2State(ssm=new_s, conv=buf[:, -(W - 1):])
+
+
+# ===========================================================================
+# mLSTM (xLSTM) — chunkwise with running-max stabilisation
+# ===========================================================================
+
+
+def init_mlstm(key, d_model: int, n_heads: int, expand: int = 2):
+    di = expand * d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "up": layers.normal_init(ks[0], (d_model, 2 * di)),    # [mlstm in, gate]
+        "qkv": layers.normal_init(ks[1], (di, 3 * di)),
+        "gates": layers.normal_init(ks[2], (di, 3 * n_heads), 0.02),  # i,f,o~
+        "gates_b": jnp.concatenate([
+            jnp.zeros((n_heads,)), 3.0 * jnp.ones((n_heads,)),
+            jnp.zeros((n_heads,))]),
+        "norm": layers.init_norm(di, "rmsnorm"),
+        "down": layers.normal_init(ks[3], (di, d_model)),
+    }
+
+
+def mlstm_axes():
+    return {
+        "up": ("embed", "inner"), "qkv": ("inner", "inner"),
+        "gates": ("inner", None), "gates_b": (None,),
+        "norm": {"scale": ("inner",)}, "down": ("inner", "embed"),
+    }
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array        # (B, H, Dk, Dv)
+    n: jax.Array        # (B, H, Dk)
+    m: jax.Array        # (B, H)
+
+
+def mlstm_init_state(batch, n_heads, dh):
+    return MLSTMState(C=jnp.zeros((batch, n_heads, dh, dh), jnp.float32),
+                      n=jnp.zeros((batch, n_heads, dh), jnp.float32),
+                      m=jnp.full((batch, n_heads), -1e30, jnp.float32))
+
+
+def _mlstm_qkvg(p, x, n_heads):
+    di = p["down"].shape[0]
+    up = x @ p["up"].astype(x.dtype)
+    inner, gate = jnp.split(up, 2, axis=-1)
+    qkv = inner @ p["qkv"].astype(x.dtype)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    B, S = x.shape[:2]
+    dh = di // n_heads
+    q = q.reshape(B, S, n_heads, dh)
+    k = k.reshape(B, S, n_heads, dh) / (dh ** 0.5)
+    v = v.reshape(B, S, n_heads, dh)
+    g = (inner @ p["gates"].astype(x.dtype)).astype(jnp.float32) \
+        + p["gates_b"]
+    ig, fg, og = jnp.split(g, 3, axis=-1)                     # (B,S,H)
+    return q, k, v, ig, fg, og, gate, di, dh
+
+
+def apply_mlstm(p, x, n_heads, chunk=256, init_state=None, return_state=False):
+    B, S, _ = x.shape
+    q, k, v, ig, fg, og, gate, di, dh = _mlstm_qkvg(p, x, n_heads)
+    L = min(chunk, S)
+    assert S % L == 0
+    nC = S // L
+    lf = jax.nn.log_sigmoid(fg)                               # (B,S,H)
+
+    st = init_state if init_state is not None else mlstm_init_state(B, n_heads, dh)
+
+    def rs(t, *shape):
+        return t.reshape(B, nC, L, *shape).transpose(1, 0, 2, *range(3, 3 + len(shape)))
+
+    qc, kc, vc = (rs(t, n_heads, dh).astype(jnp.float32) for t in (q, k, v))
+    lfc, igc, = rs(lf, n_heads), rs(ig, n_heads)
+
+    def body(carry, inp):
+        C, n, m = carry
+        qi, ki, vi, lfi, igi = inp                            # (B,L,H,*)
+        F = jnp.cumsum(lfi, axis=1)                           # (B,L,H)
+        Ftot = F[:, -1]
+        # row stabiliser
+        dec = F[:, :, None, :] - F[:, None, :, :] + igi[:, None, :, :]
+        tri = jnp.tril(jnp.ones((qi.shape[1], qi.shape[1]), bool))
+        dec = jnp.where(tri[None, :, :, None], dec, -jnp.inf)
+        row_intra = jnp.max(dec, axis=2)                      # (B,L,H)
+        row_inter = m[:, None, :] + F
+        m_row = jnp.maximum(row_inter, row_intra)             # (B,L,H)
+        m_row = jnp.maximum(m_row, -1e30)
+        # intra scores
+        sc = jnp.einsum("blhd,bshd->blsh", qi, ki) * jnp.exp(
+            dec - m_row[:, :, None, :])
+        y = jnp.einsum("blsh,bshd->blhd", sc, vi)
+        den = jnp.sum(sc, axis=2)                             # (B,L,H)
+        # inter
+        w_inter = jnp.exp(row_inter - m_row)                  # (B,L,H)
+        y = y + jnp.einsum("blhd,bhdv->blhv", qi, C) * w_inter[..., None]
+        den = den + jnp.einsum("blhd,bhd->blh", qi, n) * w_inter
+        h = y / jnp.maximum(jnp.abs(den), jnp.exp(-m_row))[..., None]
+        # carry update
+        m_new = jnp.maximum(m + Ftot, jnp.max(Ftot[:, None] - F + igi, axis=1))
+        C = C * jnp.exp(m + Ftot - m_new)[..., None, None] + jnp.einsum(
+            "blh,blhd,blhv->bhdv",
+            jnp.exp(Ftot[:, None] - F + igi - m_new[:, None]), ki, vi)
+        n = n * jnp.exp(m + Ftot - m_new)[..., None] + jnp.einsum(
+            "blh,blhd->bhd",
+            jnp.exp(Ftot[:, None] - F + igi - m_new[:, None]), ki)
+        return (C, n, m_new), h
+
+    (C, n, m), hs = jax.lax.scan(body, tuple(st), (qc, kc, vc, lfc, igc))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, n_heads, dh)
+    h = h * jax.nn.sigmoid(og).reshape(B, S, n_heads, 1)
+    h = h.reshape(B, S, di).astype(x.dtype)
+    h = layers.apply_norm(p["norm"], h) * jax.nn.silu(gate)
+    out = h @ p["down"].astype(x.dtype)
+    if return_state:
+        return out, MLSTMState(C=C, n=n, m=m)
+    return out
+
+
+def mlstm_step(p, x1, state: MLSTMState, n_heads):
+    """Single decode step. x1: (B, 1, d)."""
+    B = x1.shape[0]
+    q, k, v, ig, fg, og, gate, di, dh = _mlstm_qkvg(p, x1, n_heads)
+    q, k, v = (t[:, 0].astype(jnp.float32) for t in (q, k, v))   # (B,H,dh)
+    ig, fg, og = ig[:, 0], fg[:, 0], og[:, 0]                    # (B,H)
+    lf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(state.m + lf, ig)
+    a = jnp.exp(state.m + lf - m_new)
+    b = jnp.exp(ig - m_new)
+    C = state.C * a[..., None, None] + jnp.einsum("bhd,bhv->bhdv", k, v) * b[..., None, None]
+    n = state.n * a[..., None] + k * b[..., None]
+    num = jnp.einsum("bhd,bhdv->bhv", q, C)
+    den = jnp.einsum("bhd,bhd->bh", q, n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    h = (h * jax.nn.sigmoid(og)[..., None]).reshape(B, 1, di).astype(x1.dtype)
+    h = layers.apply_norm(p["norm"], h) * jax.nn.silu(gate)
+    return h @ p["down"].astype(x1.dtype), MLSTMState(C=C, n=n, m=m_new)
+
+
+# ===========================================================================
+# sLSTM (xLSTM) — sequential stabilised scan
+# ===========================================================================
+
+
+def init_slstm(key, d_model: int, n_heads: int):
+    ks = jax.random.split(key, 5)
+    dh = d_model // n_heads
+    d_ff = int(d_model * 4 / 3)
+    return {
+        "w": layers.normal_init(ks[0], (d_model, 4 * d_model)),    # z,i,f,o
+        "r": layers.normal_init(ks[1], (n_heads, dh, 4 * dh), 0.02),
+        "b": jnp.concatenate([jnp.zeros((2 * d_model,)),
+                              3.0 * jnp.ones((d_model,)),
+                              jnp.zeros((d_model,))]),
+        # post-block gated FFN (pf = 4/3)
+        "ffn_in": layers.normal_init(ks[2], (d_model, 2 * d_ff)),
+        "ffn_out": layers.normal_init(ks[3], (d_ff, d_model)),
+    }
+
+
+def slstm_axes():
+    return {"w": ("embed", "inner"), "r": ("heads", None, None), "b": (None,),
+            "ffn_in": ("embed", "mlp"), "ffn_out": ("mlp", "embed")}
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array    # (B, d)
+    n: jax.Array    # (B, d)
+    h: jax.Array    # (B, d)
+    m: jax.Array    # (B, d)
+
+
+def slstm_init_state(batch, d_model):
+    z = jnp.zeros((batch, d_model), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.full_like(z, -1e30))
+
+
+def _slstm_cell(p, wx, state: SLSTMState, n_heads, d_model):
+    """wx: (B, 4d) precomputed input contribution."""
+    dh = d_model // n_heads
+    B = wx.shape[0]
+    hh = state.h.reshape(B, n_heads, dh)
+    rh = jnp.einsum("bhd,hde->bhe", hh, p["r"])                # (B,H,4dh)
+    rh = rh.reshape(B, n_heads, 4, dh).transpose(0, 2, 1, 3).reshape(B, 4 * d_model)
+    g = (wx + rh + p["b"]).astype(jnp.float32)
+    zt, it, ft, ot = jnp.split(g, 4, axis=-1)
+    zt = jnp.tanh(zt)
+    lf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(lf + state.m, it)
+    a = jnp.exp(lf + state.m - m_new)
+    b = jnp.exp(it - m_new)
+    c = a * state.c + b * zt
+    n = a * state.n + b
+    h = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1.0)
+    return SLSTMState(c=c, n=n, h=h, m=m_new)
+
+
+def apply_slstm(p, x, n_heads, init_state=None, return_state=False):
+    B, S, d = x.shape
+    wx = (x @ p["w"].astype(x.dtype)).astype(jnp.float32)     # (B,S,4d)
+    # gate layout: r output is per-head [z,i,f,o] chunks; reorder w to match
+    st = init_state if init_state is not None else slstm_init_state(B, d)
+
+    def body(state, wxt):
+        new = _slstm_cell(p, wxt, state, n_heads, d)
+        return new, new.h
+
+    st, hs = jax.lax.scan(body, st, wx.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)                 # (B,S,d)
+    # gated FFN
+    u = h @ p["ffn_in"].astype(x.dtype)
+    a, bgate = jnp.split(u, 2, axis=-1)
+    out = (jax.nn.gelu(a) * bgate) @ p["ffn_out"].astype(x.dtype)
+    if return_state:
+        return out, st
+    return out
+
+
+def slstm_step(p, x1, state: SLSTMState, n_heads):
+    B, _, d = x1.shape
+    wx = (x1[:, 0] @ p["w"].astype(x1.dtype)).astype(jnp.float32)
+    new = _slstm_cell(p, wx, state, n_heads, d)
+    h = new.h[:, None].astype(x1.dtype)
+    u = h @ p["ffn_in"].astype(x1.dtype)
+    a, bgate = jnp.split(u, 2, axis=-1)
+    out = (jax.nn.gelu(a) * bgate) @ p["ffn_out"].astype(x1.dtype)
+    return out, new

@@ -1,0 +1,56 @@
+"""Checkpointing: pytree <-> directory of .npz + msgpack-free manifest.
+
+Arrays are saved in one compressed npz keyed by flattened path; the tree
+structure is restored by matching paths against a freshly-initialised
+template (so code evolution that preserves param names keeps old ckpts
+loadable).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(re.sub(r"[\[\]'\.]", "", str(p)) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(path: str, tree, step: int = 0, extra: dict = None):
+    os.makedirs(path, exist_ok=True)
+    arrays = _flatten(tree)
+    np.savez_compressed(os.path.join(path, "arrays.npz"), **arrays)
+    meta = {"step": int(step), "keys": sorted(arrays),
+            "extra": extra or {}}
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+
+
+def restore(path: str, template):
+    """Restore into the structure of `template` (shapes must match)."""
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        arrays = {k: z[k] for k in z.files}
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in paths:
+        key = "/".join(re.sub(r"[\[\]'\.]", "", str(x)) for x in p)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing {key}")
+        a = arrays[key]
+        if a.shape != np.shape(leaf):
+            raise ValueError(f"{key}: ckpt {a.shape} vs template {np.shape(leaf)}")
+        leaves.append(a.astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def latest_step(path: str) -> int:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)["step"]

@@ -1,0 +1,29 @@
+"""Structured metric logging (the Grafana/Prometheus stand-in)."""
+from __future__ import annotations
+
+import json
+import time
+from typing import Optional
+
+
+class MetricLog:
+    def __init__(self, path: Optional[str] = None, print_every: int = 10):
+        self.path = path
+        self.print_every = print_every
+        self.rows = []
+        self._t0 = time.time()
+
+    def log(self, step: int, **metrics):
+        row = {"step": step, "t": round(time.time() - self._t0, 3)}
+        row.update({k: float(v) for k, v in metrics.items()})
+        self.rows.append(row)
+        if self.path:
+            with open(self.path, "a") as f:
+                f.write(json.dumps(row) + "\n")
+        if self.print_every and step % self.print_every == 0:
+            parts = " ".join(f"{k}={v:.4g}" for k, v in row.items()
+                             if k not in ("step", "t"))
+            print(f"[step {step:6d} t={row['t']:8.1f}s] {parts}", flush=True)
+
+    def series(self, key: str):
+        return [r[key] for r in self.rows if key in r]

@@ -1,0 +1,16 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here on purpose — tests must see the
+real single CPU device (the 512-device override is dryrun.py-only)."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def dev_mesh():
+    from repro.launch.mesh import make_dev_mesh
+    return make_dev_mesh(data=len(jax.devices()))

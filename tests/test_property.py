@@ -1,0 +1,180 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel import collectives, sharding
+from repro.substrate import attention as attn_lib
+from repro.substrate import layers
+
+SETTINGS = dict(max_examples=8, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# sharding spec resolution
+# ---------------------------------------------------------------------------
+
+
+@given(
+    dims=st.lists(st.integers(1, 512), min_size=1, max_size=4),
+    axis_names=st.permutations(("embed", "heads", "mlp", "vocab")),
+)
+@settings(**SETTINGS)
+def test_resolve_spec_invariants(dims, axis_names):
+    """For ANY shape/logical-axis combination: every mesh axis appears at
+    most once, and every sharded dim is divisible by its axis size."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    logical = tuple(axis_names[:len(dims)])
+    spec = sharding.resolve_spec(logical, tuple(dims), mesh,
+                                 sharding.FSDP_TP_RULES)
+    used = [a for entry in spec for a in
+            ((entry,) if isinstance(entry, str) else (entry or ()))]
+    assert len(used) == len(set(used))
+    for dim, entry in zip(dims, spec):
+        if entry is None:
+            continue
+        axes = (entry,) if isinstance(entry, str) else entry
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        assert dim % size == 0
+
+
+@given(st.integers(1, 64), st.integers(1, 8))
+@settings(**SETTINGS)
+def test_moe_group_pick_divides(T_mult, target_log):
+    from repro.substrate.moe import _pick_groups
+    T = T_mult * 8
+    G = _pick_groups(T, 2 ** target_log)
+    assert T % G == 0
+    assert 1 <= G <= T
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+
+@given(
+    s=st.integers(2, 8),
+    d_half=st.sampled_from((4, 8, 16)),
+    scale=st.floats(0.1, 10.0),
+)
+@settings(**SETTINGS)
+def test_rope_is_isometry(s, d_half, scale):
+    """RoPE rotation preserves vector norms for any position/scale."""
+    d = 2 * d_half
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (1, s))
+    cos, sin = attn_lib.rope_cos_sin(pos, d, 10_000.0)
+    x = scale * jax.random.normal(jax.random.key(s), (1, s, 2, d))
+    r = attn_lib.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(r, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-4)
+
+
+@given(
+    b=st.integers(1, 3), s=st.integers(1, 32),
+    scale=st.floats(0.5, 100.0),     # >= 0.5: below that the eps term in
+                                     # rsqrt(var + 1e-5) legitimately bites
+)
+@settings(**SETTINGS)
+def test_rmsnorm_output_rms_is_one(b, s, scale):
+    p = layers.init_norm(64, "rmsnorm")
+    x = scale * jax.random.normal(jax.random.key(b * 100 + s), (b, s, 64))
+    y = layers.apply_norm(p, x, "rmsnorm")
+    rms = np.asarray(jnp.sqrt(jnp.mean(jnp.square(y), axis=-1)))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-3)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_softmax_attention_rows_sum_to_one(seed):
+    """Attention output of constant-value V equals that constant: the
+    softmax weights sum to 1 for every query — incl. masked rows."""
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    q = jax.random.normal(k1, (1, 16, 2, 8))
+    k = jax.random.normal(k2, (1, 16, 2, 8))
+    v = jnp.full((1, 16, 2, 8), 3.5)
+    out = attn_lib.dot_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), 3.5, atol=1e-5)
+    out_b = attn_lib.blockwise_attention(q, k, v, causal=True,
+                                         q_chunk=8, kv_chunk=8)
+    np.testing.assert_allclose(np.asarray(out_b), 3.5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# optimizer state / checkpoint
+# ---------------------------------------------------------------------------
+
+
+@given(
+    shapes=st.lists(st.tuples(st.integers(1, 5), st.integers(1, 5)),
+                    min_size=1, max_size=4),
+    seed=st.integers(0, 1000),
+)
+@settings(**SETTINGS)
+def test_checkpoint_roundtrip_any_tree(tmp_path_factory, shapes, seed):
+    from repro.train import checkpoint as ckpt_lib
+    rng = np.random.default_rng(seed)
+    tree = {f"p{i}": {"w": jnp.asarray(rng.normal(size=s), jnp.float32)}
+            for i, s in enumerate(shapes)}
+    path = str(tmp_path_factory.mktemp("ck"))
+    ckpt_lib.save(path, tree, step=seed)
+    back = ckpt_lib.restore(path, jax.tree.map(jnp.zeros_like, tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(st.integers(1, 200), st.integers(1, 50))
+@settings(**SETTINGS)
+def test_epoch_iterator_covers_everything(n_per_shard, batch):
+    """iter_epoch yields every index at most once and >= floor coverage."""
+    import tempfile
+    from repro.data.pipeline import ShardStore
+    with tempfile.TemporaryDirectory() as d:
+        store = ShardStore(d)
+        store.write("s0", {"id": np.arange(n_per_shard, dtype=np.int64)})
+        seen = []
+        for b in store.iter_epoch(batch=batch, shuffle_seed=1):
+            seen.extend(b["id"].tolist())
+        assert len(seen) == len(set(seen))
+        assert len(seen) == (n_per_shard // batch) * batch
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parser
+# ---------------------------------------------------------------------------
+
+
+@given(
+    trip=st.integers(1, 100),
+    dim0=st.integers(1, 64),
+    dim1=st.sampled_from((1, 8, 128)),
+    dtype=st.sampled_from(("f32", "bf16", "s32")),
+)
+@settings(**SETTINGS)
+def test_collective_scaling_parametric(trip, dim0, dim1, dtype):
+    nbytes = {"f32": 4, "bf16": 2, "s32": 4}[dtype]
+    hlo = f"""\
+HloModule m
+
+%body.7 (p: (s32[], {dtype}[{dim0},{dim1}])) -> (s32[], {dtype}[{dim0},{dim1}]) {{
+  %ar = {dtype}[{dim0},{dim1}] all-reduce(%x), to_apply=%add
+  ROOT %t = (s32[], {dtype}[{dim0},{dim1}]) tuple(%i, %ar)
+}}
+
+%cond.7 (p: (s32[], {dtype}[{dim0},{dim1}])) -> pred[] {{
+  %lim = s32[] constant({trip})
+  ROOT %cmp = pred[] compare(%iter, %lim), direction=LT
+}}
+
+ENTRY %main (a: {dtype}[{dim0},{dim1}]) -> {dtype}[{dim0},{dim1}] {{
+  %w = (s32[], {dtype}[{dim0},{dim1}]) while(%init), condition=%cond.7, body=%body.7
+  ROOT %out = {dtype}[{dim0},{dim1}] get-tuple-element(%w), index=1
+}}
+"""
+    stats = collectives.collective_stats(hlo)
+    assert stats["all-reduce"]["bytes"] == trip * dim0 * dim1 * nbytes
+    assert stats["all-reduce"]["count"] == trip
