@@ -1,10 +1,16 @@
-"""Fig. 1: naive (keras.train_on_batch) vs fused (custom tf.function loop).
+"""Fig. 1: naive (keras.train_on_batch) vs the engine's two fused loops.
 
 The paper's bottleneck: generator-input initialisation runs SEQUENTIALLY on
 the host, so its cost grows with the global batch (= replicas x per-replica
-batch) while the fused loop keeps everything on-device.  We measure both
-step implementations across global batch sizes and report the host-init
-share — the quantity that blows up in the paper's left/right panels.
+batch) while a fused loop keeps everything on-device.  We measure the naive
+baseline against BOTH loop strategies of the unified engine
+(`repro.train.engine`) across global batch sizes:
+
+- builtin: jit + NamedSharding, compiler-placed per-device batches
+- custom:  shard_map, explicit per-device batches + psum gradient mean
+
+and report the host-init share — the quantity that blows up in the paper's
+left/right panels.
 """
 from __future__ import annotations
 
@@ -17,7 +23,28 @@ import numpy as np
 from repro.configs import calo3dgan
 from repro.core import adversarial
 from repro.data.calo import CaloSimulator, CaloSpec
+from repro.launch.mesh import make_dev_mesh
 from repro.optim import optimizers as opt_lib
+from repro.train import engine as engine_lib
+
+
+def _time_engine_loop(loop, cfg, batch, steps, mesh):
+    task = engine_lib.gan_task(cfg, opt_lib.rmsprop(1e-4),
+                               opt_lib.rmsprop(1e-4))
+    eng = engine_lib.Engine(mesh, loop, dp_axes=tuple(mesh.axis_names),
+                            donate=False)
+    state = eng.init_state(task, jax.random.key(0))
+    step = eng.compile_step(task, batch)
+    # warmup (compile) then measure
+    s2, _ = step(state, batch, jax.random.key(1))
+    jax.block_until_ready(s2.g_params)
+    rng = jax.random.key(2)
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        rng, k = jax.random.split(rng)
+        s2, _ = step(state, batch, k)
+    jax.block_until_ready(s2.g_params)
+    return (time.perf_counter() - t0) / steps
 
 
 def run(batches=(8, 16, 32), steps=2, reduced=True):
@@ -25,6 +52,7 @@ def run(batches=(8, 16, 32), steps=2, reduced=True):
     g_opt = opt_lib.rmsprop(1e-4)
     d_opt = opt_lib.rmsprop(1e-4)
     sim = CaloSimulator(CaloSpec(image_shape=cfg.image_shape), seed=0)
+    mesh = make_dev_mesh(data=len(jax.devices()))
     rows = []
     for B in batches:
         state = adversarial.init_state(jax.random.key(0), cfg, g_opt, d_opt)
@@ -32,13 +60,7 @@ def run(batches=(8, 16, 32), steps=2, reduced=True):
         batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
 
         naive = adversarial.NaiveStep(cfg, g_opt, d_opt, seed=1)
-        fused = jax.jit(adversarial.make_fused_step(cfg, g_opt, d_opt))
-
-        # warmup (compile) then measure
-        naive(state, batch_np)
-        s2, _ = fused(state, batch, jax.random.key(1))
-        jax.block_until_ready(s2.g_params)
-
+        naive(state, batch_np)            # warmup (compile)
         t0 = time.perf_counter()
         for _ in range(steps):
             naive(state, batch_np)
@@ -50,31 +72,27 @@ def run(batches=(8, 16, 32), steps=2, reduced=True):
             naive.host_generator_inputs(B)
         t_host = (time.perf_counter() - t0) / steps
 
-        rng = jax.random.key(2)
-        t0 = time.perf_counter()
-        for i in range(steps):
-            rng, k = jax.random.split(rng)
-            s2, m = fused(state, batch, k)
-        jax.block_until_ready(s2.g_params)
-        t_fused = (time.perf_counter() - t0) / steps
+        t_builtin = _time_engine_loop("builtin", cfg, batch, steps, mesh)
+        t_custom = _time_engine_loop("custom", cfg, batch, steps, mesh)
 
         rows.append({"global_batch": B,
                      "naive_ms": 1e3 * t_naive,
-                     "fused_ms": 1e3 * t_fused,
+                     "builtin_ms": 1e3 * t_builtin,
+                     "custom_ms": 1e3 * t_custom,
                      "host_init_ms": 1e3 * t_host,
-                     "speedup": t_naive / t_fused})
+                     "speedup": t_naive / t_builtin})
     return rows
 
 
 def main():
     rows = run()
-    print("bench_fig1_loop: naive vs fused adversarial step")
-    print(f"{'B':>5} {'naive_ms':>10} {'fused_ms':>10} {'host_ms':>9} "
-          f"{'speedup':>8}")
+    print("bench_fig1_loop: naive vs engine builtin/custom adversarial step")
+    print(f"{'B':>5} {'naive_ms':>10} {'builtin_ms':>11} {'custom_ms':>10} "
+          f"{'host_ms':>9} {'speedup':>8}")
     for r in rows:
         print(f"{r['global_batch']:>5} {r['naive_ms']:>10.1f} "
-              f"{r['fused_ms']:>10.1f} {r['host_init_ms']:>9.2f} "
-              f"{r['speedup']:>8.2f}")
+              f"{r['builtin_ms']:>11.1f} {r['custom_ms']:>10.1f} "
+              f"{r['host_init_ms']:>9.2f} {r['speedup']:>8.2f}")
     # the paper's claim: host-init time grows ~linearly with global batch
     h = [r["host_init_ms"] for r in rows]
     growth = h[-1] / max(h[0], 1e-9)

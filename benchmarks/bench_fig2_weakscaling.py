@@ -5,10 +5,12 @@ os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=128 "
 """Fig. 2 (right): weak scaling 8 -> 128 TPU cores for the 3DGAN.
 
 Runs in its OWN process (sets a 128-device pool before importing jax).
-For each core count we compile the fused GAN step with the paper's
-per-core BS=128 (global batch grows with cores: weak scaling), derive the
-roofline-bound step time and the epoch time for the paper's dataset, and
-compare with the ideal linear-scaling line — the quantities in Fig. 2-right.
+For each core count we compile the GAN step THROUGH THE UNIFIED ENGINE
+(``--loop builtin`` or ``--loop custom``, see `repro.train.engine`) with
+the paper's per-core BS=128 (global batch grows with cores: weak
+scaling), derive the roofline-bound step time and the epoch time for the
+paper's dataset, and compare with the ideal linear-scaling line — the
+quantities in Fig. 2-right.
 """
 import time
 
@@ -17,7 +19,7 @@ import numpy as np
 EPOCH_SAMPLES = 180_000       # paper-era 3DGAN training-set scale
 
 
-def run(core_counts=(8, 16, 32, 64, 128)):
+def run(core_counts=(8, 16, 32, 64, 128), loop="builtin"):
     import jax
     from jax.sharding import Mesh
     from repro.launch import build as build_lib
@@ -30,7 +32,8 @@ def run(core_counts=(8, 16, 32, 64, 128)):
     for n in core_counts:
         mesh = Mesh(devs[:n].reshape(n, 1), ("data", "model"))
         with mesh:
-            built = build_lib.build_gan_train(mesh, policy_name="bf16")
+            built = build_lib.build_gan_train(mesh, policy_name="bf16",
+                                              loop=loop)
             lowered = built.lower()
             compiled = lowered.compile()
         jc = jaxpr_cost.cost_of(built.fn, *built.args)
@@ -60,9 +63,14 @@ def run(core_counts=(8, 16, 32, 64, 128)):
 
 
 def main():
-    rows = run()
-    print("bench_fig2_weakscaling: 3DGAN roofline-derived epoch time "
-          "(BS=128/core, weak scaling)")
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--loop", default="builtin",
+                    choices=("builtin", "custom"))
+    args = ap.parse_args()
+    rows = run(loop=args.loop)
+    print(f"bench_fig2_weakscaling: 3DGAN roofline-derived epoch time "
+          f"(BS=128/core, weak scaling, {args.loop} loop)")
     print(f"{'cores':>6} {'epoch_s':>9} {'ideal_s':>9} {'eff':>6} "
           f"{'dominant':>11}")
     for r in rows:

@@ -2,11 +2,15 @@
 a TPU pod — explicit mesh, (pod, data)-sharded batches, replicated params
 (the paper's mirrored strategy), host-side prefetch overlapping compute.
 
+Routes through the unified data-parallel engine (`repro.train.engine`), so
+the paper's two loop strategies are one flag apart:
+
+  PYTHONPATH=src python examples/train_gan_distributed.py --steps 100
+  PYTHONPATH=src python examples/train_gan_distributed.py --loop custom
+
 On this CPU container the mesh is 1 device; on a v5e pod the SAME script
 runs with make_production_mesh() — nothing else changes (that's the point
 of the build layer; the 256/512-chip compile is proven by dryrun.py).
-
-  PYTHONPATH=src python examples/train_gan_distributed.py --steps 100
 """
 import argparse
 import time
@@ -14,15 +18,13 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import calo3dgan
-from repro.core import adversarial, gan, validation
+from repro.core import gan, validation
 from repro.data.calo import CaloSimulator, CaloSpec
-from repro.data.pipeline import prefetch
 from repro.launch.mesh import make_dev_mesh
 from repro.optim import optimizers as opt_lib
-from repro.parallel import sharding
+from repro.train import engine as engine_lib
 from repro.train.metrics import MetricLog
 
 
@@ -30,41 +32,28 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--per-replica-batch", type=int, default=16)
+    ap.add_argument("--loop", default="builtin",
+                    choices=("builtin", "custom"))
     ap.add_argument("--log", default="")
     args = ap.parse_args()
 
     mesh = make_dev_mesh(data=len(jax.devices()))
     n_rep = mesh.devices.size
     global_batch = args.per_replica_batch * n_rep
-    print(f"mesh {dict(mesh.shape)} -> global batch {global_batch}")
+    print(f"mesh {dict(mesh.shape)} -> global batch {global_batch} "
+          f"({args.loop} loop)")
 
     cfg = calo3dgan.reduced()
-    g_opt = opt_lib.rmsprop(2e-4)
-    d_opt = opt_lib.rmsprop(2e-4)
-    state = adversarial.init_state(jax.random.key(0), cfg, g_opt, d_opt)
-
-    # paper's mirrored strategy: replicated params, batch over data axis
-    rep = NamedSharding(mesh, P())
-    bsh = NamedSharding(mesh, P(sharding.batch_axes(mesh)))
-    state = jax.device_put(state, rep)
-
-    fused = jax.jit(adversarial.make_fused_step(cfg, g_opt, d_opt),
-                    donate_argnums=(0,))
+    task = engine_lib.gan_task(cfg, opt_lib.rmsprop(2e-4),
+                               opt_lib.rmsprop(2e-4))
+    # paper's mirrored strategy: replicated params, batch over all axes
+    eng = engine_lib.Engine(mesh, args.loop, dp_axes=tuple(mesh.axis_names))
 
     sim = CaloSimulator(CaloSpec(image_shape=cfg.image_shape), seed=0)
-    shardings = {"image": NamedSharding(
-                     mesh, P(sharding.batch_axes(mesh), None, None, None, None)),
-                 "e_p": bsh, "theta": bsh, "ecal": bsh}
-    batches = prefetch(sim.batches(global_batch), size=2, sharding=shardings)
-
     log = MetricLog(args.log or None, print_every=10)
-    rng = jax.random.key(1)
     t0 = time.time()
-    with mesh:
-        for i, batch in zip(range(args.steps), batches):
-            rng, k = jax.random.split(rng)
-            state, m = fused(state, batch, k)
-            log.log(i, **{kk: float(v) for kk, v in m.items()})
+    state, _ = eng.fit(task, sim.batches(global_batch), args.steps,
+                       rng=jax.random.key(1), log=log)
     dt = time.time() - t0
     print(f"{args.steps} steps x {global_batch} samples in {dt:.1f}s "
           f"({args.steps * global_batch / dt:.1f} samples/s)")

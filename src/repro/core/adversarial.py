@@ -138,18 +138,35 @@ class NaiveStep:
 # ---------------------------------------------------------------------------
 
 
-def make_fused_step(cfg, g_optimizer, d_optimizer, mesh=None, policy=None):
+def make_fused_step(cfg, g_optimizer, d_optimizer, mesh=None, policy=None,
+                    grad_reduce=None, microbatches=1):
     """One compiled program for the full Algorithm-1 body.
 
     ``mesh``: when given, the on-device generator inputs (noise + labels)
     are sharding-constrained over ALL mesh axes — each replica samples its
     own shard (the paper's "every replica initialises its own inputs"),
-    and GSPMD keeps the whole fake-image path batch-sharded.
+    and GSPMD keeps the whole fake-image path batch-sharded.  The engine's
+    custom loop passes ``mesh=None`` instead: there the step body is a
+    per-device program under shard_map and ``batch`` is already local.
 
     ``policy``: mixed-precision policy (paper §4: bf16 on the MXU).  The
     conv stacks run in ``policy.compute_dtype``; losses, gradients and
     optimizer state stay f32 (§Perf G1: halves the memory-bound term).
+
+    ``grad_reduce``: applied to the gradients of EVERY phase (D-real,
+    D-fake, each G step) before its optimizer update — the engine's
+    custom loop passes an explicit psum-mean over the data axes here,
+    keeping params replicated without GSPMD's help.
+
+    ``microbatches``: gradient accumulation INSIDE each phase.  The batch
+    (and the fake-input sampling) is split into this many microbatches;
+    each phase averages its gradients over them via lax.scan before the
+    single optimizer update, so Algorithm 1's update order is preserved
+    while the live activation footprint shrinks by the microbatch factor.
     """
+    M = int(microbatches)
+    assert M >= 1, microbatches
+    reduce_grads = grad_reduce if grad_reduce is not None else (lambda g: g)
     compute_dtype = policy.compute_dtype if policy is not None else None
     if mesh is not None:
         from jax.sharding import NamedSharding, PartitionSpec as P
@@ -169,55 +186,81 @@ def make_fused_step(cfg, g_optimizer, d_optimizer, mesh=None, policy=None):
         if compute_dtype is not None:
             img = img.astype(compute_dtype)      # G1: bf16 conv stacks
         bs = img.shape[0]
+        assert bs % M == 0, (bs, M)
+        mb = bs // M
         ecal_frac = jnp.mean(ecal / e_p)
-        keys = jax.random.split(rng, 2 + cfg.gen_steps_per_disc * 3)
+        keys = jax.random.split(rng, (1 + cfg.gen_steps_per_disc) * M)
+        d_keys = keys[:M]
+        g_keys = keys[M:].reshape(cfg.gen_steps_per_disc, M)
 
         def sample_inputs(k):
             k1, k2, k3 = jax.random.split(k, 3)
-            noise = jax.random.normal(k1, (bs, cfg.latent_dim),
+            noise = jax.random.normal(k1, (mb, cfg.latent_dim),
                                       compute_dtype or jnp.float32)
-            f_ep = jax.random.uniform(k2, (bs,), jnp.float32, 10.0, 500.0)
-            f_th = jax.random.uniform(k3, (bs,), jnp.float32,
+            f_ep = jax.random.uniform(k2, (mb,), jnp.float32, 10.0, 500.0)
+            f_th = jax.random.uniform(k3, (mb,), jnp.float32,
                                       jnp.deg2rad(60.0), jnp.deg2rad(120.0))
             return (_shard_batchdim(noise), _shard_batchdim(f_ep),
                     _shard_batchdim(f_th))
 
+        def accum(loss_fn, params, xs):
+            """Mean (loss, aux, grads) of ``loss_fn(params, x)`` over the
+            leading microbatch axis of ``xs`` (lax.scan when M > 1)."""
+            vg = jax.value_and_grad(loss_fn, has_aux=True)
+            x0 = jax.tree.map(lambda v: v[0], xs)
+            if M == 1:
+                (l, aux), g = vg(params, x0)
+                return l, aux, g
+            sds = jax.eval_shape(vg, params, x0)
+            zeros = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), sds)
+
+            def body(acc, x):
+                return jax.tree.map(jnp.add, acc, vg(params, x)), None
+
+            ((l, aux), g), _ = jax.lax.scan(body, zeros, xs)
+            return (l / M, jax.tree.map(lambda v: v / M, aux),
+                    jax.tree.map(lambda v: v / M, g))
+
+        real = jax.tree.map(
+            lambda x: x.reshape(M, mb, *x.shape[1:]),
+            {"image": img, "e_p": e_p, "theta": theta, "ecal": ecal})
+
         # ---- D on real ------------------------------------------------
-        def d_loss_real(dp):
-            return gan.disc_loss(dp, img, (e_p, theta, ecal), cfg, real=True)
-        (d_lr, d_mr), grads = jax.value_and_grad(d_loss_real, has_aux=True)(
-            state.d_params)
-        upd, d_opt = d_optimizer.update(grads, state.d_opt, state.d_params)
+        def d_loss_real(dp, x):
+            return gan.disc_loss(dp, x["image"],
+                                 (x["e_p"], x["theta"], x["ecal"]), cfg,
+                                 real=True)
+        d_lr, d_mr, grads = accum(d_loss_real, state.d_params, real)
+        upd, d_opt = d_optimizer.update(reduce_grads(grads), state.d_opt,
+                                        state.d_params)
         d_params = opt_lib.apply_updates(state.d_params, upd)
 
         # ---- D on fake (generation INSIDE the compiled program) -------
-        noise, f_ep, f_th = sample_inputs(keys[0])
-        fake = gan.generate(state.g_params, noise, f_ep, f_th, cfg)
-        fake_labels = (f_ep, f_th, f_ep * ecal_frac)
-
-        def d_loss_fake(dp):
+        def d_loss_fake(dp, k):
+            noise, f_ep, f_th = sample_inputs(k)
+            fake = gan.generate(state.g_params, noise, f_ep, f_th, cfg)
             return gan.disc_loss(dp, jax.lax.stop_gradient(fake),
-                                 fake_labels, cfg, real=False)
-        (d_lf, d_mf), grads = jax.value_and_grad(d_loss_fake, has_aux=True)(
-            d_params)
-        upd, d_opt = d_optimizer.update(grads, d_opt, d_params)
+                                 (f_ep, f_th, f_ep * ecal_frac), cfg,
+                                 real=False)
+        d_lf, d_mf, grads = accum(d_loss_fake, d_params, d_keys)
+        upd, d_opt = d_optimizer.update(reduce_grads(grads), d_opt, d_params)
         d_params = opt_lib.apply_updates(d_params, upd)
 
         # ---- G twice ---------------------------------------------------
-        def one_g(carry, k):
+        def one_g(carry, ks):
             g_params, g_opt = carry
-            noise, f_ep, f_th = sample_inputs(k)
 
-            def loss(gp):
+            def loss(gp, k):
+                noise, f_ep, f_th = sample_inputs(k)
                 return gan.gen_loss(gp, d_params, noise,
                                     (f_ep, f_th, f_ep * ecal_frac), cfg)
-            (g_l, _), grads = jax.value_and_grad(loss, has_aux=True)(g_params)
-            upd, g_opt = g_optimizer.update(grads, g_opt, g_params)
+            g_l, _, grads = accum(loss, g_params, ks)
+            upd, g_opt = g_optimizer.update(reduce_grads(grads), g_opt,
+                                            g_params)
             return (opt_lib.apply_updates(g_params, upd), g_opt), g_l
 
         (g_params, g_opt), g_ls = jax.lax.scan(
-            one_g, (state.g_params, state.g_opt),
-            keys[1:1 + cfg.gen_steps_per_disc])
+            one_g, (state.g_params, state.g_opt), g_keys)
 
         new = GANState(g_params, d_params, g_opt, d_opt, state.step + 1)
         metrics = {"d_loss_real": d_lr, "d_loss_fake": d_lf,

@@ -55,21 +55,12 @@ def opt_state_shardings(optimizer, p_shapes, p_shard, mesh: Mesh):
 
 
 def batch_shardings(batch_shapes, mesh: Mesh, batch_dim_for: Optional[dict] = None):
-    """Leading-dim (pod, data) sharding for every batch leaf.  ``positions``
-    (mrope) carries batch on dim 1."""
-    ax = sharding.batch_axes(mesh)
-
-    def leaf(path_key, s):
-        dims = [None] * len(s.shape)
-        bdim = 1 if path_key == "positions" else 0
-        n = 1
-        for a in (ax or ()):
-            n *= mesh.shape[a]
-        if ax and s.shape[bdim] % n == 0 and s.shape[bdim] > 1:
-            dims[bdim] = ax
-        return NamedSharding(mesh, P(*dims))
-
-    return {k: leaf(k, v) for k, v in batch_shapes.items()}
+    """Leading-dim (pod, data) sharding for every batch leaf.  Delegates to
+    the engine's single placement rule (``positions`` carries batch on
+    dim 1; non-dividing dims stay replicated)."""
+    from repro.train import engine as engine_lib
+    return engine_lib.Engine(mesh, "builtin").batch_shardings(
+        batch_shapes, batch_dim_for)
 
 
 def cache_shardings(model, cfg, mesh: Mesh, rules: dict, cache_shapes):
@@ -177,44 +168,36 @@ def build_serve(arch_id: str, shape_name: str, mesh: Mesh, *,
                      "serve")
 
 
-def build_gan_train(mesh: Mesh, *, policy_name: str = "bf16",
-                    reduced: bool = False) -> BuiltStep:
-    """The paper's own architecture: fused Algorithm-1 step, pure DP
-    (mirrored-strategy analogue — params replicated, batch sharded)."""
-    from repro.configs import calo3dgan
-    from repro.core import adversarial
-
-    cfg = calo3dgan.reduced() if reduced else calo3dgan.config()
-    g_opt = opt_lib.rmsprop(1e-4)
-    d_opt = opt_lib.rmsprop(1e-4)
-    fused = adversarial.make_fused_step(cfg, g_opt, d_opt, mesh=mesh,
-                                        policy=get_policy(policy_name))
-
-    state_shapes = jax.eval_shape(
-        lambda: adversarial.init_state(jax.random.key(0), cfg, g_opt, d_opt))
-    rep = NamedSharding(mesh, P())
-    state_shard = jax.tree.map(lambda _: rep, state_shapes)
-
-    # the GAN is PURE data parallelism (mirrored strategy): every mesh
-    # axis carries batch — all 256/512 chips are replicas, per-replica
-    # BS=128 exactly as the paper runs it (paper §4)
-    all_axes = tuple(mesh.axis_names)
-    B = cfg.batch_size * mesh.devices.size
+def gan_batch_shapes(cfg, n_replicas: int) -> dict:
+    """ShapeDtypeStruct batch for the 3DGAN at the paper's per-replica
+    batch size (global batch = batch_size x replicas, weak scaling)."""
+    B = cfg.batch_size * n_replicas
     X, Y, Z = cfg.image_shape
-    b_shapes = {
+    return {
         "image": jax.ShapeDtypeStruct((B, X, Y, Z, 1), jnp.float32),
         "e_p": jax.ShapeDtypeStruct((B,), jnp.float32),
         "theta": jax.ShapeDtypeStruct((B,), jnp.float32),
         "ecal": jax.ShapeDtypeStruct((B,), jnp.float32),
     }
-    b_shard = {
-        k: NamedSharding(mesh, P(all_axes, *([None] * (len(s.shape) - 1))))
-        for k, s in b_shapes.items()
-    }
-    rng = jax.eval_shape(lambda: jax.random.key(0))
 
-    fn = jax.jit(fused,
-                 in_shardings=(state_shard, b_shard, rep),
-                 out_shardings=(state_shard, None),
-                 donate_argnums=(0,))
-    return BuiltStep(fn, (state_shapes, b_shapes, rng), "gan_train")
+
+def build_gan_train(mesh: Mesh, *, policy_name: str = "bf16",
+                    reduced: bool = False,
+                    loop: str = "builtin") -> BuiltStep:
+    """The paper's own architecture: fused Algorithm-1 step, pure DP
+    (mirrored-strategy analogue — params replicated, batch sharded).
+
+    Delegates to the unified engine: ``loop`` selects the paper's
+    built-in (jit + NamedSharding) or custom (shard_map + explicit psum)
+    strategy.  Every mesh axis carries batch — all 256/512 chips are
+    replicas, per-replica BS=128 exactly as the paper runs it (§4)."""
+    from repro.configs import calo3dgan
+    from repro.train import engine as engine_lib
+
+    cfg = calo3dgan.reduced() if reduced else calo3dgan.config()
+    task = engine_lib.gan_task(cfg, opt_lib.rmsprop(1e-4),
+                               opt_lib.rmsprop(1e-4),
+                               policy=get_policy(policy_name))
+    eng = engine_lib.Engine(mesh, loop, dp_axes=tuple(mesh.axis_names))
+    built = eng.build(task, gan_batch_shapes(cfg, mesh.devices.size))
+    return BuiltStep(built.fn, built.args, built.kind)

@@ -2,6 +2,18 @@
 
 Defined as FUNCTIONS so importing this module never touches jax device
 state (the dry-run sets XLA_FLAGS before any jax import; tests see 1 CPU).
+
+Usage::
+
+    mesh = make_dev_mesh(data=len(jax.devices()))   # tests / this container
+    mesh = make_production_mesh()                   # 256-chip pod
+    mesh = make_production_mesh(multi_pod=True)     # 512 chips, 2 pods
+
+Axis conventions across the repo: ``pod`` and ``data`` carry the batch
+(pure data parallelism — the paper's mirrored strategy, and the axes the
+training engine shards over); ``model`` carries tensor/expert parallelism
+for the big LM archs.  ``HARDWARE`` holds the per-chip roofline constants
+the benchmarks divide by.
 """
 from __future__ import annotations
 

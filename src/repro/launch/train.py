@@ -3,8 +3,18 @@
 Runs on whatever devices exist (CPU in this container, TPU pod in prod —
 the same build path the dry-run compiles for 256/512 chips).
 
+Both workloads route through the unified data-parallel engine
+(`train/engine.py`), which implements the paper's two loop strategies:
+
+  --loop builtin   jit + NamedSharding; the compiler places per-device
+                   batches (the tf.distribute analogue)
+  --loop custom    shard_map; explicit per-device batch assignment,
+                   local updates, explicit psum gradient reduction
+  --loop naive     (GAN only) the keras.train_on_batch baseline with
+                   sequential host-side generator-input init
+
 Usage:
-  python -m repro.launch.train --arch calo3dgan --steps 200 --loop fused
+  python -m repro.launch.train --arch calo3dgan --steps 200 --loop custom
   python -m repro.launch.train --arch qwen2-1.5b --reduced --steps 50
 """
 from __future__ import annotations
@@ -18,7 +28,6 @@ import numpy as np
 
 from repro.configs import base as config_base
 from repro.data.calo import CaloSimulator, CaloSpec
-from repro.data.pipeline import prefetch
 from repro.data.tokens import MarkovTokens
 from repro.launch.mesh import make_dev_mesh
 from repro.models import api
@@ -26,40 +35,43 @@ from repro.optim import optimizers as opt_lib
 from repro.parallel import sharding
 from repro.substrate.precision import get_policy
 from repro.train import checkpoint as ckpt_lib
-from repro.train import steps as steps_lib
+from repro.train import engine as engine_lib
 from repro.train.metrics import MetricLog
 
 
 def train_gan(args, mesh, log: MetricLog):
     from repro.configs import calo3dgan
-    from repro.core import adversarial, validation
+    from repro.core import adversarial, gan, validation
 
     cfg = calo3dgan.reduced() if args.reduced else calo3dgan.config()
     g_opt = opt_lib.rmsprop(args.lr)
     d_opt = opt_lib.rmsprop(args.lr)
-    state = adversarial.init_state(jax.random.key(args.seed), cfg, g_opt, d_opt)
 
     sim = CaloSimulator(CaloSpec(image_shape=cfg.image_shape), seed=args.seed)
-    batches = prefetch(sim.batches(args.batch or cfg.batch_size))
+    B = args.batch or cfg.batch_size
 
-    if args.loop == "fused":
-        step = jax.jit(adversarial.make_fused_step(cfg, g_opt, d_opt),
-                       donate_argnums=(0,))
-        rng = jax.random.key(args.seed + 1)
-        for i, batch in zip(range(args.steps), batches):
-            rng, k = jax.random.split(rng)
-            state, m = step(state, batch, k)
-            log.log(i, **{k_: float(v) for k_, v in m.items()})
-    else:
+    if args.loop == "naive":
+        state = adversarial.init_state(jax.random.key(args.seed), cfg,
+                                       g_opt, d_opt)
         step = adversarial.NaiveStep(cfg, g_opt, d_opt, seed=args.seed)
-        for i, batch in zip(range(args.steps), batches):
+        for i, batch in zip(range(args.steps), sim.batches(B)):
             state, m = step(state, batch)
             log.log(i, **m)
+    else:
+        # "fused" is the legacy name for the jit'd single-program loop —
+        # that is exactly the engine's builtin mode.
+        loop = "builtin" if args.loop == "fused" else args.loop
+        task = engine_lib.gan_task(cfg, g_opt, d_opt,
+                                   policy=get_policy(args.policy),
+                                   microbatches=args.microbatches)
+        # the 3DGAN is PURE data parallelism: every mesh axis is a replica
+        eng = engine_lib.Engine(mesh, loop, dp_axes=tuple(mesh.axis_names))
+        state, _ = eng.fit(task, sim.batches(B), args.steps,
+                           rng=jax.random.key(args.seed), log=log)
 
     # physics validation vs fresh Monte Carlo
     mc = next(sim.batches(256))
     noise = jax.random.normal(jax.random.key(7), (256, cfg.latent_dim))
-    from repro.core import gan
     fake = gan.generate(state.g_params, noise, jnp.asarray(mc["e_p"]),
                         jnp.asarray(mc["theta"]), cfg)
     rep = validation.validation_report(np.asarray(fake), mc["image"],
@@ -79,14 +91,11 @@ def train_lm(args, mesh, log: MetricLog):
     policy = get_policy(args.policy)
     optimizer = opt_lib.adamw(opt_lib.warmup_cosine(args.lr, 20, args.steps))
 
-    params = model.init(jax.random.key(args.seed), cfg)
-    opt_state = optimizer.init(params)
-    print(f"{args.arch}: {sharding.count_params(params):,} params "
-          f"({'reduced' if args.reduced else 'full'})")
+    loop = "builtin" if args.loop == "fused" else args.loop
+    task = engine_lib.lm_task(model, cfg, optimizer, policy=policy,
+                              microbatches=args.microbatches)
+    eng = engine_lib.Engine(mesh, loop)
 
-    step = jax.jit(steps_lib.make_train_step(model, cfg, optimizer, policy,
-                                             mesh=mesh),
-                   donate_argnums=(0, 1))
     B, S = args.batch or 8, args.seq or 256
     data = MarkovTokens(cfg.vocab, seed=args.seed)
 
@@ -109,16 +118,17 @@ def train_lm(args, mesh, log: MetricLog):
                 yield {"tokens": data.sample(B, S)}
 
     t0 = time.time()
-    for i, batch in zip(range(args.steps), prefetch(gen())):
-        params, opt_state, m = step(params, opt_state, batch)
-        log.log(i, loss=float(m["loss"]), grad_norm=float(m["grad_norm"]))
+    state, _ = eng.fit(task, gen(), args.steps,
+                       rng=jax.random.key(args.seed), log=log)
     dt = time.time() - t0
+    print(f"{args.arch}: {sharding.count_params(state.params):,} params "
+          f"({'reduced' if args.reduced else 'full'}), loop={loop}")
     print(f"{args.steps} steps in {dt:.1f}s "
           f"({args.steps * B * S / dt:.0f} tok/s)")
     if args.ckpt:
-        ckpt_lib.save(args.ckpt, params, step=args.steps,
+        ckpt_lib.save(args.ckpt, state.params, step=args.steps,
                       extra={"arch": args.arch})
-    return params
+    return state.params
 
 
 def main():
@@ -130,12 +140,21 @@ def main():
     ap.add_argument("--seq", type=int, default=0)
     ap.add_argument("--lr", type=float, default=1e-4)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--loop", default="fused", choices=("fused", "naive"))
+    ap.add_argument("--loop", default="builtin",
+                    choices=("builtin", "custom", "fused", "naive"),
+                    help="builtin: jit+NamedSharding; custom: shard_map "
+                         "with explicit psum; fused: legacy alias of "
+                         "builtin; naive: host-orchestrated GAN baseline")
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="gradient accumulation inside each step")
     ap.add_argument("--policy", default="f32")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--log", default="")
     args = ap.parse_args()
+    if args.loop == "naive" and args.arch != "calo3dgan":
+        ap.error("--loop naive is the GAN train_on_batch baseline; "
+                 "LM archs support builtin/custom/fused")
 
     mesh = make_dev_mesh(data=len(jax.devices()))
     log = MetricLog(args.log or None, print_every=max(args.steps // 20, 1))

@@ -97,6 +97,14 @@ def _walk(jaxpr, mult: float, acc: dict):
             inner = eqn.params["jaxpr"]
             _walk(inner.jaxpr, mult * length, acc)
             continue
+        elif prim == "shard_map":
+            # the inner jaxpr is the PER-DEVICE program (local shapes);
+            # every mesh device executes it, so global cost is x mesh.size
+            mesh = eqn.params["mesh"]
+            n = getattr(mesh, "size", None) or math.prod(mesh.shape.values())
+            sub = eqn.params["jaxpr"]
+            _walk(sub.jaxpr if hasattr(sub, "jaxpr") else sub, mult * n, acc)
+            continue
         elif prim == "while":
             # rarely used directly; body counted once (trip unknown)
             _walk(eqn.params["body_jaxpr"].jaxpr, mult, acc)

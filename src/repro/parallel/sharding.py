@@ -12,6 +12,22 @@ Three rule sets:
 - ``TP_RULES``   — tensor/expert parallelism over ``model`` only.
 - ``FSDP_TP_RULES`` (beyond-paper default for big archs) — tensor/expert
                    parallel over ``model`` + parameter FSDP over ``data``.
+
+Usage — resolve one spec, or shard a whole param tree::
+
+    mesh = make_production_mesh()                  # (data=16, model=16)
+    spec = resolve_spec(("embed", "heads"), (4096, 32), mesh, TP_RULES)
+    # -> PartitionSpec(None, 'model')
+
+    shardings = tree_shardings(model.logical_axes(cfg),
+                               jax.eval_shape(model.init, key, cfg),
+                               mesh, FSDP_TP_RULES)
+    params = jax.device_put(params, shardings)
+
+Activation-side helpers (`constrain_batch` / `constrain_act` /
+`constrain_tree`) are with_sharding_constraint wrappers used INSIDE jitted
+model code; the data-parallel engine (`train/engine.py`) instead relies on
+`batch_axes`/`batch_spec` to place whole input batches.
 """
 from __future__ import annotations
 
@@ -44,6 +60,7 @@ RULE_SETS = {"dp": DP_RULES, "tp": TP_RULES, "fsdp_tp": FSDP_TP_RULES}
 
 
 def mesh_axis_size(mesh: Mesh, name: str) -> int:
+    """Size of mesh axis ``name``, or 1 when the mesh doesn't have it."""
     return mesh.shape[name] if name in mesh.axis_names else 1
 
 
@@ -89,6 +106,8 @@ def tree_specs(axes_tree, shape_tree, mesh: Mesh, rules: dict):
 
 
 def tree_shardings(axes_tree, shape_tree, mesh: Mesh, rules: dict):
+    """Like :func:`tree_specs` but wraps each spec in a ``NamedSharding`` —
+    ready for ``jax.device_put`` / ``jit(in_shardings=...)``."""
     specs = tree_specs(axes_tree, shape_tree, mesh, rules)
     return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
                         is_leaf=lambda x: isinstance(x, P))
@@ -101,6 +120,8 @@ def batch_axes(mesh: Mesh):
 
 
 def batch_spec(mesh: Mesh, rank: int = 2) -> P:
+    """PartitionSpec sharding dim 0 over the data axes, rest replicated:
+    ``batch_spec(mesh, 3) -> P(('pod', 'data'), None, None)``."""
     ax = batch_axes(mesh)
     return P(ax, *([None] * (rank - 1)))
 
@@ -189,4 +210,5 @@ def stacked(axes_tree):
 
 
 def count_params(tree) -> int:
+    """Total element count over every leaf of a param pytree."""
     return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)))

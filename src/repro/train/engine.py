@@ -1,0 +1,351 @@
+"""Unified data-parallel training engine: the paper's two loop strategies.
+
+The source paper's central comparison (§3-§4, Figs. 1-2) is between
+TensorFlow's *built-in* distribution strategy (``MirroredStrategy`` /
+``tf.distribute`` placing per-replica batches automatically) and a
+*custom* training loop that controls exactly which elements land on each
+worker.  This module is the JAX-native version of that comparison, built
+from the pieces the repo already had:
+
+- ``builtin`` loop — ``jax.jit`` + ``NamedSharding`` over the mesh's data
+  axes.  The step is written as a GLOBAL-batch program; the XLA GSPMD
+  partitioner decides how per-device batches are placed and inserts the
+  gradient all-reduce itself (the ``tf.distribute`` analogue).
+- ``custom`` loop — ``shard_map`` over the same mesh.  The step body is a
+  PER-DEVICE program: each replica receives an explicitly-assigned batch
+  shard, folds its replica index into the RNG so it draws its own
+  generator inputs (the paper's "every replica initialises its own
+  inputs"), computes local gradients, and reduces them with an explicit
+  ``psum``-based mean before the (replicated) optimizer update.
+
+Both loops share the rest of the paper's optimisations: the fully-fused
+Algorithm-1 step (`core/adversarial.py`), gradient accumulation via
+``microbatches``, mixed-precision policies (`substrate/precision.py`),
+and double-buffered host->device prefetch (`data/pipeline.py`).
+
+Public API
+----------
+
+``Task``
+    A workload the engine can train: ``init(rng) -> state`` plus a
+    ``make_step(grad_reduce, mesh)`` factory returning a pure
+    ``step(state, batch, rng) -> (state, metrics)``.  Two constructors
+    are provided: :func:`gan_task` (the paper's 3DGAN, Algorithm 1) and
+    :func:`lm_task` (any LM arch via ``train/steps.py``).
+
+``Engine``
+    Binds a mesh and a loop mode, and compiles/runs tasks::
+
+        from repro.launch.mesh import make_dev_mesh
+        from repro.optim import optimizers as opt_lib
+        from repro.train import engine as engine_lib
+        from repro.configs import calo3dgan
+
+        cfg = calo3dgan.reduced()
+        task = engine_lib.gan_task(cfg, opt_lib.rmsprop(1e-4),
+                                   opt_lib.rmsprop(1e-4))
+        eng = engine_lib.Engine(make_dev_mesh(), loop="custom")
+        state, metrics = eng.fit(task, sim.batches(cfg.batch_size),
+                                 steps=100, rng=jax.random.key(0))
+
+    Lower-level pieces (``init_state`` / ``compile_step`` / ``data_iter``)
+    are exposed for benchmarks, and :meth:`Engine.build` produces an
+    AOT-lowerable artifact for the multi-pod dry-run / weak-scaling
+    compile studies.
+
+The engine implements PURE data parallelism — parameters and optimizer
+state replicated, batch sharded — which is exactly the paper's mirrored
+strategy.  Model/FSDP sharding for the big LM archs keeps living in
+``launch/build.py``; the engine is the substrate the scaling PRs
+(multi-host, async checkpointing, pipeline stages) plug into.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Iterable, Iterator, Mapping, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.data import pipeline
+from repro.parallel import sharding
+from repro.train import steps as steps_lib
+
+LOOPS = ("builtin", "custom")
+
+# batch leaves whose batch dimension is not dim 0 (mrope ``positions``
+# carries batch on dim 1); tasks may override via Task.batch_dims
+DEFAULT_BATCH_DIMS: Mapping[str, int] = {"positions": 1}
+
+
+class LMState(NamedTuple):
+    """Replicated LM train state carried through the engine loop."""
+    params: Any
+    opt_state: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    """A trainable workload, decoupled from how the engine distributes it.
+
+    ``make_step(grad_reduce, mesh)`` must return a PURE function
+    ``step(state, batch, rng) -> (state, metrics)``:
+
+    - in the builtin loop it is called with ``grad_reduce=None`` and the
+      real mesh (the step may place sharding constraints; GSPMD inserts
+      gradient all-reduces automatically);
+    - in the custom loop it is called with ``mesh=None`` and a
+      ``grad_reduce`` callable (psum-mean over the data axes) that the
+      step MUST apply to gradients before every optimizer update.
+    """
+    name: str
+    init: Callable[[jax.Array], Any]
+    make_step: Callable[..., Callable]
+    batch_dims: Mapping[str, int] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_BATCH_DIMS))
+
+
+def gan_task(cfg, g_optimizer, d_optimizer, *, policy=None,
+             microbatches: int = 1) -> Task:
+    """The paper's workload: 3DGAN Algorithm 1 as a fully-fused step.
+
+    Example::
+
+        task = gan_task(calo3dgan.config(), opt_lib.rmsprop(1e-4),
+                        opt_lib.rmsprop(1e-4), policy=get_policy("bf16"))
+    """
+    from repro.core import adversarial
+
+    def init(rng):
+        return adversarial.init_state(rng, cfg, g_optimizer, d_optimizer)
+
+    def make_step(grad_reduce=None, mesh=None):
+        return adversarial.make_fused_step(
+            cfg, g_optimizer, d_optimizer, mesh=mesh, policy=policy,
+            grad_reduce=grad_reduce, microbatches=microbatches)
+
+    return Task("gan", init, make_step)
+
+
+def lm_task(model, cfg, optimizer, *, policy, microbatches: int = 1,
+            remat: bool = True) -> Task:
+    """Any LM architecture routed through ``steps.make_train_step``.
+
+    The engine is pure data parallelism, so residual-stream sequence
+    sharding stays off and params are replicated.
+
+    Example::
+
+        cfg = config_base.reduced_config("qwen2-1.5b")
+        task = lm_task(api.get_model(cfg), cfg, opt_lib.adamw(3e-4),
+                       policy=get_policy("bf16"))
+    """
+
+    def init(rng):
+        params = model.init(rng, cfg)
+        return LMState(params, optimizer.init(params))
+
+    def make_step(grad_reduce=None, mesh=None):
+        inner = steps_lib.make_train_step(
+            model, cfg, optimizer, policy, mesh=mesh, remat=remat,
+            microbatches=microbatches, seq_shard=False,
+            grad_reduce=grad_reduce)
+
+        def step(state, batch, rng):
+            del rng  # LM loss is deterministic given the batch
+            params, opt_state, metrics = inner(state.params,
+                                               state.opt_state, batch)
+            return LMState(params, opt_state), metrics
+
+        return step
+
+    return Task("lm", init, make_step)
+
+
+@dataclasses.dataclass
+class Built:
+    """AOT-lowerable step artifact (mirrors launch.build.BuiltStep)."""
+    fn: Any                 # the jitted step
+    args: tuple             # ShapeDtypeStruct args for .lower(*args)
+    kind: str
+
+    def lower(self):
+        return self.fn.lower(*self.args)
+
+
+class Engine:
+    """Data-parallel training engine bound to one mesh and one loop mode.
+
+    Parameters
+    ----------
+    mesh
+        The device mesh.  Batches are sharded over its data axes
+        (``("pod", "data")`` when present), params stay replicated.
+    loop
+        ``"builtin"`` (jit + NamedSharding, compiler-placed batches) or
+        ``"custom"`` (shard_map, explicit per-device batches + psum).
+    dp_axes
+        Override which mesh axes carry the batch.  The GAN dry-run path
+        uses ``tuple(mesh.axis_names)`` — every chip is a pure-DP
+        replica, exactly as the paper runs 3DGAN on 256/512 chips.
+    donate
+        Donate the input state buffers to each step (default True).
+    """
+
+    def __init__(self, mesh: Mesh, loop: str = "builtin", *,
+                 dp_axes: Optional[tuple] = None, donate: bool = True):
+        if loop not in LOOPS:
+            raise ValueError(f"loop must be one of {LOOPS}, got {loop!r}")
+        self.mesh = mesh
+        self.loop = loop
+        self.donate = donate
+        axes = dp_axes if dp_axes is not None else sharding.batch_axes(mesh)
+        self.axes: tuple = tuple(axes) if axes else ()
+        self.n_shards = 1
+        for a in self.axes:
+            self.n_shards *= mesh.shape[a]
+
+    # -- batch placement ----------------------------------------------------
+
+    def batch_pspecs(self, batch_like: Mapping[str, Any],
+                     batch_dims: Optional[Mapping[str, int]] = None) -> dict:
+        """PartitionSpec per batch leaf: data axes on the batch dim.
+
+        In the builtin loop a leaf whose batch dim does not divide the
+        data-axis size is silently replicated (GSPMD handles it); the
+        custom loop requires exact divisibility — per-device batch
+        assignment is the point — and raises ``ValueError`` otherwise.
+        """
+        dims = dict(DEFAULT_BATCH_DIMS, **(batch_dims or {}))
+        out = {}
+        for k, v in batch_like.items():
+            bdim = dims.get(k, 0)
+            entries = [None] * len(v.shape)
+            divisible = self.axes and v.shape[bdim] % self.n_shards == 0
+            if self.axes and not divisible and self.loop == "custom":
+                raise ValueError(
+                    f"custom loop requires batch dim {bdim} of {k!r} "
+                    f"(= {v.shape[bdim]}) divisible by the "
+                    f"{self.n_shards} data shards")
+            if divisible and v.shape[bdim] > 1:
+                entries[bdim] = (self.axes if len(self.axes) > 1
+                                 else self.axes[0])
+            out[k] = P(*entries)
+        return out
+
+    def batch_shardings(self, batch_like: Mapping[str, Any],
+                        batch_dims: Optional[Mapping[str, int]] = None) -> dict:
+        """NamedSharding per batch leaf — feed to ``pipeline.prefetch``."""
+        return {k: NamedSharding(self.mesh, s)
+                for k, s in self.batch_pspecs(batch_like, batch_dims).items()}
+
+    def data_iter(self, batches: Iterable[dict], *, size: int = 2,
+                  batch_dims: Optional[Mapping[str, int]] = None) -> Iterator[dict]:
+        """Double-buffered host->device prefetch with per-mode sharding.
+
+        Wraps ``data.pipeline.prefetch``: the NEXT batch is placed on
+        device (sharded over the data axes) while the CURRENT step runs —
+        the paper's host/accelerator overlap, identical for both loops.
+        """
+        it = iter(batches)
+        try:
+            first = next(it)
+        except StopIteration:
+            return iter(())
+        shardings = self.batch_shardings(first, batch_dims)
+        return pipeline.prefetch(itertools.chain([first], it), size=size,
+                                 sharding=shardings)
+
+    # -- state & step compilation -------------------------------------------
+
+    def init_state(self, task: Task, rng: jax.Array):
+        """Initialise the task state, replicated over the whole mesh."""
+        return jax.device_put(task.init(rng), NamedSharding(self.mesh, P()))
+
+    def _grad_reduce(self, tree):
+        """Explicit gradient reduction for the custom loop: psum / n."""
+        return jax.lax.pmean(tree, self.axes) if self.axes else tree
+
+    def compile_step(self, task: Task, batch_like: Mapping[str, Any]):
+        """Compile ``step(state, batch, rng) -> (state, metrics)``.
+
+        ``batch_like`` fixes the batch pytree (real arrays or
+        ``ShapeDtypeStruct`` leaves are both fine — only shapes are read).
+        State and metrics are replicated in both modes; the returned
+        callable donates its state argument when ``donate=True``.
+        """
+        rep = NamedSharding(self.mesh, P())
+        b_specs = self.batch_pspecs(batch_like, task.batch_dims)
+        b_shard = {k: NamedSharding(self.mesh, s) for k, s in b_specs.items()}
+        donate = (0,) if self.donate else ()
+
+        if self.loop == "builtin":
+            step = task.make_step(grad_reduce=None, mesh=self.mesh)
+            return jax.jit(step, in_shardings=(rep, b_shard, rep),
+                           out_shardings=(rep, rep), donate_argnums=donate)
+
+        local = task.make_step(grad_reduce=self._grad_reduce, mesh=None)
+        axes, shape = self.axes, dict(self.mesh.shape)
+
+        def local_step(state, batch, rng):
+            if axes:
+                # each replica draws its OWN generator inputs (paper §3)
+                idx = jnp.int32(0)
+                for a in axes:
+                    idx = idx * shape[a] + jax.lax.axis_index(a)
+                rng = jax.random.fold_in(rng, idx)
+            state, metrics = local(state, batch, rng)
+            if axes:    # per-replica scalars -> global means for logging
+                metrics = jax.lax.pmean(metrics, axes)
+            return state, metrics
+
+        smapped = shard_map(local_step, mesh=self.mesh,
+                            in_specs=(P(), b_specs, P()),
+                            out_specs=(P(), P()), check_rep=False)
+        return jax.jit(smapped, in_shardings=(rep, b_shard, rep),
+                       out_shardings=(rep, rep), donate_argnums=donate)
+
+    def build(self, task: Task, batch_shapes: Mapping[str, Any]) -> Built:
+        """AOT artifact: jitted step + ShapeDtypeStruct args for .lower().
+
+        Used by the weak-scaling benchmark and the multi-pod dry-run to
+        compile either loop for meshes far larger than this host.
+        """
+        fn = self.compile_step(task, batch_shapes)
+        state_shapes = jax.eval_shape(lambda: task.init(jax.random.key(0)))
+        rng_shape = jax.eval_shape(lambda: jax.random.key(0))
+        return Built(fn, (state_shapes, batch_shapes, rng_shape),
+                     f"{task.name}_{self.loop}")
+
+    # -- the training loop ---------------------------------------------------
+
+    def fit(self, task: Task, batches: Iterable[dict], steps: int, *,
+            rng: jax.Array, state=None, log=None, prefetch_size: int = 2):
+        """Run ``steps`` training steps; returns (state, last_metrics).
+
+        Composes the whole paper pipeline: replicated init, compiled
+        step (builtin or custom), sharded double-buffered prefetch, and
+        per-step metric logging via ``log.log(i, **metrics)``.
+        """
+        it = iter(batches)
+        try:
+            first = next(it)
+        except StopIteration:
+            raise ValueError("fit() got an empty batches iterable") from None
+        step = self.compile_step(task, first)
+        init_key, rng = jax.random.split(rng)
+        if state is None:
+            state = self.init_state(task, init_key)
+        stream = self.data_iter(itertools.chain([first], it),
+                                size=prefetch_size,
+                                batch_dims=task.batch_dims)
+        metrics: dict = {}
+        for i, batch in zip(range(steps), stream):
+            rng, k = jax.random.split(rng)
+            state, metrics = step(state, batch, k)
+            if log is not None:
+                log.log(i, **{m: float(v) for m, v in metrics.items()})
+        return state, metrics

@@ -32,7 +32,8 @@ def _split_microbatches(batch, n: int):
 
 def make_train_step(model, cfg, optimizer, policy, mesh=None,
                     clip_norm: float = 1.0, remat: bool = True,
-                    microbatches: int = 1, seq_shard: bool = True):
+                    microbatches: int = 1, seq_shard: bool = True,
+                    grad_reduce=None):
     """One fully-compiled train step (the paper's fused-loop discipline).
 
     ``microbatches`` > 1 runs gradient accumulation INSIDE the step via
@@ -44,6 +45,12 @@ def make_train_step(model, cfg, optimizer, policy, mesh=None,
     default (remat-saved activations shrink by the model-axis factor) and
     OFF for prefill/serve (§Perf: it only buys gathers there).  The flag
     is applied at TRACE time so it holds wherever the step is jitted.
+
+    ``grad_reduce``: applied to the (accumulated) gradients before
+    clipping and the optimizer update.  The data-parallel engine's
+    custom loop passes an explicit psum-mean here (the step then runs as
+    a per-device program under shard_map); leave ``None`` under jit,
+    where GSPMD inserts the gradient all-reduce itself.
     """
     from repro.parallel import sharding as sharding_lib
 
@@ -74,6 +81,8 @@ def make_train_step(model, cfg, optimizer, policy, mesh=None,
             metrics = {}
         else:
             (l, metrics), grads = grad_of(params, batch)
+        if grad_reduce is not None:
+            grads = grad_reduce(grads)
         if clip_norm:
             grads, gnorm = opt_lib.clip_by_global_norm(grads, clip_norm)
         else:

@@ -18,6 +18,12 @@ from repro.train import steps as steps_lib
 POLICY = get_policy("f32")
 
 
+def _cost(compiled) -> dict:
+    """cost_analysis() returns a per-device list on newer jax versions."""
+    ca = compiled.cost_analysis()
+    return ca[0] if isinstance(ca, list) else ca
+
+
 def test_lm_training_reduces_loss():
     """40 steps on the low-entropy Markov stream: loss must drop clearly."""
     cfg = config_base.reduced_config("qwen2-1.5b")
@@ -92,7 +98,7 @@ def test_build_lowers_and_compiles_on_dev_mesh():
             b = {"tokens": jax.ShapeDtypeStruct((2, 256), jnp.int32)}
             lowered = built.fn.lower(built.args[0], built.args[1], b)
             compiled = lowered.compile()
-            assert compiled.cost_analysis().get("flops", 0) > 0
+            assert _cost(compiled).get("flops", 0) > 0
     finally:
         cb.get_config = orig
 
@@ -104,7 +110,7 @@ def test_gan_build_lowers_on_dev_mesh():
         built = build_lib.build_gan_train(mesh, reduced=True,
                                           policy_name="f32")
         compiled = built.lower().compile()
-        assert compiled.cost_analysis().get("flops", 0) > 0
+        assert _cost(compiled).get("flops", 0) > 0
 
 
 def test_ragged_engine_matches_single_request():
