@@ -1,0 +1,139 @@
+"""Kernel benchmark: fused Pallas conv3d vs the lax.conv reference.
+
+Times forward and forward+backward on the per-layer shapes of the
+3DGAN (`configs/calo3dgan`) — every transposed conv of the generator and
+every strided conv of the discriminator — for both routes:
+
+- ``pallas``: the fused implicit-GEMM kernel family (conv+bias fused,
+  Pallas backward).  On the CPU stand-in this runs in INTERPRET mode,
+  which measures the emulation, not the MXU — the numbers seed the perf
+  trajectory and become meaningful on the TPU target.
+- ``lax``: XLA's conv_general_dilated / conv_transpose (the oracle).
+
+Writes machine-readable results to results/BENCH_kernel_conv3d.json.
+
+  PYTHONPATH=src python -m benchmarks.bench_kernel_conv3d \
+      [--config bench|reduced|full] [--batch 2] [--steps 3]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import calo3dgan
+from repro.kernels.conv3d import (conv3d_bias_act, conv3d_bias_act_ref,
+                                  conv3d_transpose_bias_act,
+                                  conv3d_transpose_bias_act_ref)
+
+HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(HERE, "results", "BENCH_kernel_conv3d.json")
+
+
+def layer_shapes(cfg):
+    """(name, kind, spatial, ci, co, stride) for every conv in the GAN."""
+    shapes = []
+    ups = len(cfg.gen_channels) - 1
+    dims = tuple(-(-d // 2 ** ups) for d in cfg.image_shape)
+    for i in range(ups):
+        shapes.append((f"gen_up{i}", "conv_t", dims, cfg.gen_channels[i],
+                       cfg.gen_channels[i + 1], 2))
+        dims = tuple(d * 2 for d in dims)
+    shapes.append(("gen_out", "conv", cfg.image_shape,
+                   cfg.gen_channels[-1], 1, 1))
+    dims, ci = cfg.image_shape, 1
+    for i, c in enumerate(cfg.disc_channels):
+        shapes.append((f"disc_conv{i}", "conv", dims, ci, c, 2))
+        dims = tuple(-(-d // 2) for d in dims)
+        ci = c
+    return shapes
+
+
+def _timed(fn, args, steps):
+    out = fn(*args)                       # warmup / compile
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / steps
+
+
+def bench_layer(name, kind, spatial, ci, co, stride, batch, steps, rng):
+    x = jnp.asarray(rng.normal(0, 1, (batch, *spatial, ci)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 0.1, (3, 3, 3, ci, co)), jnp.float32)
+    b = jnp.zeros((co,), jnp.float32)
+    ops = {
+        "pallas": (conv3d_transpose_bias_act if kind == "conv_t"
+                   else conv3d_bias_act),
+        "lax": (conv3d_transpose_bias_act_ref if kind == "conv_t"
+                else conv3d_bias_act_ref),
+    }
+    row = {"layer": name, "kind": kind, "batch": batch, "spatial": spatial,
+           "ci": ci, "co": co, "stride": stride}
+    for route, op in ops.items():
+        fwd = jax.jit(lambda x_, w_, b_, op=op: op(x_, w_, b_, stride))
+        row[f"{route}_fwd_ms"] = 1e3 * _timed(fwd, (x, w, b), steps)
+        fwdbwd = jax.jit(jax.grad(
+            lambda x_, w_, b_, op=op: jnp.sum(op(x_, w_, b_, stride) ** 2),
+            argnums=(0, 1)))
+        row[f"{route}_fwdbwd_ms"] = 1e3 * _timed(fwdbwd, (x, w, b), steps)
+    row["fwd_speedup"] = row["lax_fwd_ms"] / row["pallas_fwd_ms"]
+    row["fwdbwd_speedup"] = row["lax_fwdbwd_ms"] / row["pallas_fwdbwd_ms"]
+    return row
+
+
+def run(config="bench", batch=2, steps=3, seed=0):
+    cfg = {"bench": calo3dgan.bench, "reduced": calo3dgan.reduced,
+           "full": calo3dgan.config}[config]()
+    rng = np.random.default_rng(seed)
+    rows = []
+    for spec in layer_shapes(cfg):
+        rows.append(bench_layer(*spec, batch=batch, steps=steps, rng=rng))
+    return rows
+
+
+def write_json(rows, path=OUT_PATH, **meta):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    payload = {"benchmark": "kernel_conv3d",
+               "backend": jax.default_backend(),
+               "interpret": jax.default_backend() != "tpu", **meta,
+               "rows": rows}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=str)
+    return path
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="bench",
+                    choices=("bench", "reduced", "full"))
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=3)
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args(argv)
+    rows = run(args.config, args.batch, args.steps)
+    print(f"bench_kernel_conv3d: Pallas fused vs lax.conv "
+          f"({args.config} config, B={args.batch}, "
+          f"backend={jax.default_backend()})")
+    hdr = (f"{'layer':>12} {'kind':>7} {'ci':>4} {'co':>4} "
+           f"{'pallas_fwd':>11} {'lax_fwd':>9} {'pallas_fb':>10} "
+           f"{'lax_fb':>8} {'fb_speedup':>10}")
+    print(hdr)
+    for r in rows:
+        print(f"{r['layer']:>12} {r['kind']:>7} {r['ci']:>4} {r['co']:>4} "
+              f"{r['pallas_fwd_ms']:>9.1f}ms {r['lax_fwd_ms']:>7.1f}ms "
+              f"{r['pallas_fwdbwd_ms']:>8.1f}ms {r['lax_fwdbwd_ms']:>6.1f}ms "
+              f"{r['fwdbwd_speedup']:>10.2f}")
+    path = write_json(rows, args.out, config=args.config, batch=args.batch)
+    print(f"wrote {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

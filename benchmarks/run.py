@@ -1,27 +1,57 @@
 """Benchmark harness: one benchmark per paper table/figure.
 
-In-process (1 CPU device): fig1 loop, fig2 batch-size, physics, fig5 cost.
-Subprocess (own device pool): fig2 weak scaling (128 devs), fig4 layout
-(32 devs), and the §Roofline report (reads results/dryrun_baseline.json
-produced by repro.launch.dryrun).
+In-process (1 CPU device): fig1 loop, fig2 batch-size, physics, fig5 cost,
+the conv3d kernel bench.  Subprocess (own device pool): fig2 weak scaling
+(128 devs), fig4 layout (32 devs), and the §Roofline report (reads
+results/dryrun_baseline.json produced by repro.launch.dryrun).
+
+Every in-process benchmark's returned rows are written to
+results/BENCH_<name>.json (machine-readable — the perf-trajectory record
+that successive PRs diff against), in addition to the printed tables.
 
   PYTHONPATH=src python -m benchmarks.run [--skip-subprocess]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import subprocess
 import sys
 import time
 
 HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS = os.path.join(HERE, "results")
 
 
 def _banner(name):
     print("\n" + "=" * 72)
     print(f"== {name}")
     print("=" * 72, flush=True)
+
+
+def _write_bench_json(name, rows, seconds):
+    """BENCH_<name>.json: whatever the benchmark's main() returned."""
+    if rows is None:
+        return
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump({"benchmark": name, "seconds": round(seconds, 3),
+                   "rows": rows}, f, indent=2, default=str)
+    print(f"[wrote {path}]")
+
+
+def _run_inproc(name, main_fn, failures, write=True):
+    t0 = time.time()
+    try:
+        rows = main_fn()
+    except Exception as e:          # keep the harness going; record it
+        print(f"[{name}: FAILED — {e}]")
+        failures.append(name)
+        return
+    if write:                       # benches that write their own richer
+        _write_bench_json(name, rows, time.time() - t0)  # JSON skip this
 
 
 def _sub(mod):
@@ -45,23 +75,29 @@ def main():
 
     _banner("Fig.1 — naive vs fused adversarial loop")
     from benchmarks import bench_fig1_loop
-    bench_fig1_loop.main()
+    _run_inproc("fig1_loop", bench_fig1_loop.main, failures)
 
     _banner("Fig.2 (left/center) — batch-size impact")
     from benchmarks import bench_fig2_batchsize
-    bench_fig2_batchsize.main()
+    _run_inproc("fig2_batchsize", bench_fig2_batchsize.main, failures)
 
     _banner("Fig.3/7 — physics validation (GAN vs MC)")
     from benchmarks import bench_physics
-    bench_physics.main()
+    _run_inproc("physics", bench_physics.main, failures)
 
     _banner("Fig.5 — cloud cost per epoch")
     from benchmarks import bench_fig5_cost
-    bench_fig5_cost.main()
+    _run_inproc("fig5_cost", bench_fig5_cost.main, failures)
 
     _banner("Fig.6 — data-pipeline prefetch overlap")
     from benchmarks import bench_fig6_pipeline
-    bench_fig6_pipeline.main()
+    _run_inproc("fig6_pipeline", bench_fig6_pipeline.main, failures)
+
+    _banner("Kernel — fused Pallas conv3d vs lax.conv (fwd / fwd+bwd)")
+    from benchmarks import bench_kernel_conv3d
+    # writes its own BENCH_kernel_conv3d.json with backend/config metadata
+    _run_inproc("kernel_conv3d", lambda: bench_kernel_conv3d.main([]),
+                failures, write=False)
 
     if not args.skip_subprocess:
         _banner("Fig.2 (right) — weak scaling 8..128 cores [subprocess]")

@@ -2,7 +2,7 @@
 electromagnetic-calorimeter shower simulation (3DGAN, Khattak et al. 2019,
 as trained in this paper). [paper §2-§4]"""
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -22,6 +22,10 @@ class GANConfig:
     aux_angle_weight: float = 0.1
     batch_size: int = 128          # paper: BS=128 matches the 128x128 MXU
     decode_supported: bool = False
+    # Pallas fused-conv hot path: None defers to the process/env toggle
+    # (core/gan.py pallas_conv_enabled); True/False pins it per config.
+    # Train steps freeze the resolved value at trace time.
+    use_pallas_conv: Optional[bool] = None
 
 
 def config() -> GANConfig:

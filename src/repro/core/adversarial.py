@@ -19,6 +19,7 @@ Both follow Algorithm 1 faithfully: D on real, D on fake, then G twice.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import NamedTuple
 
@@ -28,6 +29,20 @@ import numpy as np
 
 from repro.core import gan
 from repro.optim import optimizers as opt_lib
+
+
+def _freeze_pallas_conv(cfg):
+    """Pin the Pallas fused-conv decision into the config at STEP
+    CONSTRUCTION time.  The toggle is otherwise ambient (global setter /
+    env var); resolving it here means the traced program is deterministic
+    no matter when jit recompiles the step."""
+    resolved = gan.pallas_conv_enabled(cfg)
+    if getattr(cfg, "use_pallas_conv", resolved) == resolved:
+        return cfg
+    try:
+        return dataclasses.replace(cfg, use_pallas_conv=resolved)
+    except TypeError:
+        return cfg                      # config without the field
 
 
 class GANState(NamedTuple):
@@ -59,6 +74,7 @@ class NaiveStep:
     """
 
     def __init__(self, cfg, g_optimizer, d_optimizer, seed=0):
+        cfg = _freeze_pallas_conv(cfg)
         self.cfg = cfg
         self.g_opt_lib = g_optimizer
         self.d_opt_lib = d_optimizer
@@ -164,6 +180,7 @@ def make_fused_step(cfg, g_optimizer, d_optimizer, mesh=None, policy=None,
     single optimizer update, so Algorithm 1's update order is preserved
     while the live activation footprint shrinks by the microbatch factor.
     """
+    cfg = _freeze_pallas_conv(cfg)      # kernel route fixed at trace time
     M = int(microbatches)
     assert M >= 1, microbatches
     reduce_grads = grad_reduce if grad_reduce is not None else (lambda g: g)

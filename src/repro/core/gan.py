@@ -17,7 +17,8 @@ lax.conv path is the reference).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+import os
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,38 +27,77 @@ from repro.substrate import layers
 
 DN = ("NDHWC", "DHWIO", "NDHWC")
 
-# Pallas implicit-GEMM conv path (kernels/conv3d).  OFF by default on the
-# CPU stand-in (interpret mode is slow); flip on for the TPU target where
-# the MXU-tiled GEMM is the point.  Toggle via use_pallas_conv().
-_PALLAS_CONV = [False]
+# Pallas fused implicit-GEMM conv path (kernels/conv3d).  Resolution order:
+#   1. cfg.use_pallas_conv when not None (per-model config),
+#   2. the process-wide setting (set_pallas_conv / use_pallas_conv ctx),
+#   3. the REPRO_PALLAS_CONV environment variable (default: off — the CPU
+#      stand-in runs the kernels in interpret mode, which is slow; flip on
+#      for the TPU target where the MXU-tiled GEMM is the point).
+_PALLAS_CONV: list = [None]
+
+
+def _env_pallas_conv() -> bool:
+    return os.environ.get("REPRO_PALLAS_CONV", "0").lower() \
+        not in ("", "0", "false", "no")
+
+
+def pallas_conv_enabled(cfg=None) -> bool:
+    """Resolve the Pallas-conv toggle: config > global setter > env."""
+    if cfg is not None and getattr(cfg, "use_pallas_conv", None) is not None:
+        return bool(cfg.use_pallas_conv)
+    if _PALLAS_CONV[0] is not None:
+        return bool(_PALLAS_CONV[0])
+    return _env_pallas_conv()
+
+
+def set_pallas_conv(on: Optional[bool]):
+    """Set the process-wide toggle (None reverts to the env default).
+    Returns the previous value for save/restore."""
+    prev = _PALLAS_CONV[0]
+    _PALLAS_CONV[0] = on
+    return prev
 
 
 class use_pallas_conv:
+    """Scoped toggle (kept for interactive use; config/env are the
+    jit-friendly routes — they resolve BEFORE tracing)."""
+
     def __init__(self, on: bool = True):
         self.on = on
 
     def __enter__(self):
-        self.prev = _PALLAS_CONV[0]
-        _PALLAS_CONV[0] = self.on
+        self.prev = set_pallas_conv(self.on)
 
     def __exit__(self, *a):
-        _PALLAS_CONV[0] = self.prev
+        set_pallas_conv(self.prev)
 
 
-def _conv(x, w, stride=1, padding="SAME"):
-    if _PALLAS_CONV[0]:
-        from repro.kernels.conv3d import conv3d
-        return conv3d(x, w.astype(x.dtype), stride)
-    return jax.lax.conv_general_dilated(
-        x, w.astype(x.dtype), (stride,) * 3, padding, dimension_numbers=DN)
-
-
-def _conv_t(x, w, stride=2):
-    if _PALLAS_CONV[0]:
-        from repro.kernels.conv3d import conv3d_transpose
-        return conv3d_transpose(x, w.astype(x.dtype), stride)
-    return jax.lax.conv_transpose(
-        x, w.astype(x.dtype), (stride,) * 3, "SAME", dimension_numbers=DN)
+def _conv_layer(x, w, b=None, stride=1, *, activation="none", slope=0.2,
+                transpose=False, pallas=None):
+    """One conv layer; on the Pallas path conv+bias+activation are ONE
+    fused kernel launch, on the lax path the same math is left to XLA."""
+    if pallas is None:
+        pallas = pallas_conv_enabled()
+    if pallas:
+        from repro.kernels.conv3d import (conv3d_bias_act,
+                                          conv3d_transpose_bias_act)
+        op = conv3d_transpose_bias_act if transpose else conv3d_bias_act
+        bias = b if b is not None else jnp.zeros((w.shape[-1],), x.dtype)
+        # w stays in param dtype: the kernel casts for compute, the custom
+        # vjp hands back dw in param dtype (bf16 policy safe)
+        return op(x, w, bias, stride, activation, slope, None)
+    out = (jax.lax.conv_transpose(x, w.astype(x.dtype), (stride,) * 3,
+                                  "SAME", dimension_numbers=DN)
+           if transpose else
+           jax.lax.conv_general_dilated(x, w.astype(x.dtype), (stride,) * 3,
+                                        "SAME", dimension_numbers=DN))
+    if b is not None:
+        out = out + b.astype(out.dtype)
+    if activation == "leaky_relu":
+        out = jax.nn.leaky_relu(out, slope)
+    elif activation == "softplus":
+        out = jax.nn.softplus(out)
+    return out
 
 
 def _start_dims(image_shape, ups: int) -> Tuple[int, int, int]:
@@ -106,6 +146,7 @@ def generate(p, noise, e_p, theta, cfg):
     chs = cfg.gen_channels
     ups = len(chs) - 1
     d0 = _start_dims(cfg.image_shape, ups)
+    pallas = pallas_conv_enabled(cfg)
     e_n = (e_p / 100.0)[:, None].astype(noise.dtype)
     t_n = theta[:, None].astype(noise.dtype)
     z = jnp.concatenate([noise, e_n, t_n], axis=-1)
@@ -113,15 +154,20 @@ def generate(p, noise, e_p, theta, cfg):
     x = jax.nn.leaky_relu(x, 0.2)
     x = x.reshape(-1, *d0, chs[0])
     for i in range(ups):
-        x = _conv_t(x, p[f"up{i}"]["w"], 2) + p[f"up{i}"]["b"].astype(x.dtype)
+        # bias folds into the kernel epilogue; the activation cannot (a
+        # layernorm sits between), so it stays outside
+        x = _conv_layer(x, p[f"up{i}"]["w"], p[f"up{i}"]["b"], 2,
+                        transpose=True, pallas=pallas)
         x = layers.apply_norm(p[f"up{i}"]["gn"], x, "layernorm")
         x = jax.nn.leaky_relu(x, 0.2)
     X, Y, Z = cfg.image_shape
     x = x[:, :X, :Y, :Z]
-    x = _conv(x, p["out"]["w"]) + p["out"]["b"].astype(x.dtype)
-    # softplus keeps cell energies non-negative; scale with E_p so the
-    # generator does not have to learn the dynamic range from scratch
-    return jax.nn.softplus(x) * (e_n[:, None, None, None] * 0.025)
+    # softplus keeps cell energies non-negative (fused into the conv
+    # epilogue on the Pallas path); scale with E_p so the generator does
+    # not have to learn the dynamic range from scratch
+    x = _conv_layer(x, p["out"]["w"], p["out"]["b"], 1,
+                    activation="softplus", pallas=pallas)
+    return x * (e_n[:, None, None, None] * 0.025)
 
 
 # ---------------------------------------------------------------------------
@@ -164,9 +210,10 @@ def discriminate(p, img, cfg):
     """img: (B, X, Y, Z, 1) -> (validity_logit, e_p_pred, theta_pred)."""
     x = jnp.log1p(img * 50.0)          # compress the energy dynamic range
     n = len(cfg.disc_channels)
+    pallas = pallas_conv_enabled(cfg)
     for i in range(n):
-        x = _conv(x, p[f"conv{i}"]["w"], stride=2) \
-            + p[f"conv{i}"]["b"].astype(x.dtype)
+        x = _conv_layer(x, p[f"conv{i}"]["w"], p[f"conv{i}"]["b"], 2,
+                        pallas=pallas)
         x = layers.apply_norm(p[f"conv{i}"]["ln"], x, "layernorm")
         x = jax.nn.leaky_relu(x, 0.2)
     x = x.reshape(x.shape[0], -1)

@@ -1,5 +1,17 @@
-from repro.kernels.conv3d.ops import conv3d, conv3d_transpose
-from repro.kernels.conv3d.ref import conv3d_ref, conv3d_transpose_ref
-from repro.kernels.conv3d.conv3d import gemm
+from repro.kernels.conv3d.conv3d import default_interpret, gemm
+from repro.kernels.conv3d.ops import (ACTIVATIONS, conv3d, conv3d_bias_act,
+                                      conv3d_transpose,
+                                      conv3d_transpose_bias_act)
+from repro.kernels.conv3d.ref import (conv3d_bias_act_ref, conv3d_ref,
+                                      conv3d_transpose_bias_act_ref,
+                                      conv3d_transpose_ref)
+from repro.kernels.conv3d.tiles import (ConvTiles, autotune, get_tiles,
+                                        register_tiles, signature)
 
-__all__ = ["conv3d", "conv3d_transpose", "conv3d_ref", "conv3d_transpose_ref", "gemm"]
+__all__ = [
+    "ACTIVATIONS", "ConvTiles", "autotune", "conv3d", "conv3d_bias_act",
+    "conv3d_bias_act_ref", "conv3d_ref", "conv3d_transpose",
+    "conv3d_transpose_bias_act", "conv3d_transpose_bias_act_ref",
+    "conv3d_transpose_ref", "default_interpret", "gemm", "get_tiles",
+    "register_tiles", "signature",
+]

@@ -1,33 +1,70 @@
-"""Pallas TPU conv3d as implicit GEMM — the 3DGAN hot-spot.
+"""Pallas TPU conv3d as a *fused* implicit GEMM — the 3DGAN hot path.
 
-TPU adaptation of the paper's 3-D convolutions (the GAN's compute bottleneck
-on V100s):  a CUDA direct conv relies on per-thread scalar accumulation;
-the TPU version reformulates each conv as a GEMM over gathered patches so
-the MXU's 128x128 systolic array does the work:
+TPU adaptation of the paper's 3-D convolutions (the GAN's compute
+bottleneck on V100s): a CUDA direct conv relies on per-thread scalar
+accumulation; the TPU version reformulates each conv as a GEMM over
+gathered patches so the MXU's 128x128 systolic array does the work:
 
     out[p, co] = sum_k patches[p, k] * w2[k, co]
     p = (n, od, oh, ow) output position,  k = (kd, kh, kw, ci) tap
 
-- Patch gathering (the "im2col" staging) happens in jnp at trace time by
-  stacking KD*KH*KW shifted, stride-sampled views of the padded input —
-  XLA fuses those slices; the GEMM itself is the Pallas kernel below with
-  (bm, bk, bn) VMEM tiles and an f32 accumulator carried across the
-  sequential k grid dimension.
-- Transposed conv (generator upsampling) = input dilation + spatially
-  flipped weights + the same stride-1 path, so BOTH GAN networks hit the
-  same GEMM kernel.
-- Tile sizes default to the MXU-native 128; m/k/n are padded up to tile
-  multiples (the roofline counts real FLOPs; padding waste shows up in the
-  MODEL_FLOPS / HLO_FLOPs ratio tracked in EXPERIMENTS.md).
+Unlike a classical im2col lowering there is NO materialized
+(P, KD*KH*KW*Ci) patches matrix in HBM (27x the input for 3^3 kernels).
+Patch gathering happens *inside* the kernel:
+
+- the grid walks (n*od rows, co tiles, kd taps); the BLOCK INDEX MAP over
+  the padded input selects the (n, od*stride + kd) slab for each step, so
+  the only HBM-resident staging is the SAME-padded input itself;
+- the (kh, kw) taps are gathered in-kernel as static strided views of the
+  VMEM slab, each feeding a (OH*OW, Ci) x (Ci, bn) MXU contraction into an
+  f32 VMEM accumulator carried across the sequential kd grid dimension;
+- the epilogue (bias add + LeakyReLU / softplus) is fused into the final
+  kd step, so conv+bias+activation is one kernel launch.
+
+Transposed conv (generator upsampling) = input dilation + the same
+stride-1 path, so BOTH GAN networks hit the same kernel.  The backward
+pass also routes through this file: dx is a transposed conv through the
+same fused GEMM (spatially flipped, ci/co-swapped weights), dw is a
+patches^T @ grad GEMM with the identical in-kernel gather (`_dw_kernel`).
+
+Tile sizes come from `kernels/conv3d/tiles.py` (registry + autotune
+hook); Co is padded up to the bn tile (weights only — cheap), m/k stay
+structural.  Ci is deliberately NOT padded to the 128-lane width: for the
+discriminator's Ci=1 input layer that padding would inflate HBM traffic
+128x, and the MXU cost of a ragged K is already counted by the roofline's
+MODEL_FLOPS / HLO_FLOPs ratio.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.conv3d import tiles as tiles_lib
+
+
+def default_interpret() -> bool:
+    """Interpret (CPU stand-in) unless running on a real TPU backend.
+
+    Override with REPRO_PALLAS_INTERPRET=0/1.
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "")
+    if env != "":                        # empty string == unset
+        return env.lower() not in ("0", "false", "no")
+    return jax.default_backend() != "tpu"
+
+
+def _resolve_interpret(interpret):
+    return default_interpret() if interpret is None else interpret
+
+
+# ---------------------------------------------------------------------------
+# standalone tiled GEMM (kept for the roofline + gemm-level tests)
+# ---------------------------------------------------------------------------
 
 
 def _gemm_kernel(x_ref, w_ref, o_ref, acc_ref):
@@ -55,8 +92,13 @@ def gemm(x, w, *, bm: int = 128, bk: int = 128, bn: int = 128,
     out_dtype = out_dtype or x.dtype
     bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
     gm, gk, gn = -(-M // bm), -(-K // bk), -(-N // bn)
-    xp = jnp.pad(x, ((0, gm * bm - M), (0, gk * bk - K)))
-    wp = jnp.pad(w, ((0, gk * bk - K), (0, gn * bn - N)))
+    Mp, Kp, Np = gm * bm, gk * bk, gn * bn
+    # skip no-op pads: when M/K/N already land on tile multiples the pad
+    # (and the trailing slice) would be a pure HBM copy
+    if (Mp, Kp) != (M, K):
+        x = jnp.pad(x, ((0, Mp - M), (0, Kp - K)))
+    if (Kp, Np) != (K, N):
+        w = jnp.pad(w, ((0, Kp - K), (0, Np - N)))
     out = pl.pallas_call(
         _gemm_kernel,
         grid=(gm, gn, gk),
@@ -65,76 +107,311 @@ def gemm(x, w, *, bm: int = 128, bk: int = 128, bn: int = 128,
             pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((gm * bm, gn * bn), out_dtype),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-    )(xp, wp)
-    return out[:M, :N]
+    )(x, w)
+    return out[:M, :N] if (Mp, Np) != (M, N) else out
+
+
+# ---------------------------------------------------------------------------
+# padding geometry
+# ---------------------------------------------------------------------------
 
 
 def _same_pads(size: int, k: int, stride: int):
-    """TF-style SAME padding for one spatial dim."""
+    """TF-style SAME padding for one spatial dim -> (lo, hi, out)."""
     out = -(-size // stride)
     pad = max((out - 1) * stride + k - size, 0)
     return pad // 2, pad - pad // 2, out
 
 
-def conv3d_gemm(x, w, stride: int = 1, *, interpret: bool = True,
-                bm: int = 128, bn: int = 128):
-    """SAME conv via implicit GEMM.  x: (N,D,H,W,Ci); w: (KD,KH,KW,Ci,Co)."""
-    N, D, H, W, Ci = x.shape
-    KD, KH, KW, _, Co = w.shape
-    (pd0, pd1, OD) = _same_pads(D, KD, stride)
-    (ph0, ph1, OH) = _same_pads(H, KH, stride)
-    (pw0, pw1, OW) = _same_pads(W, KW, stride)
-    xp = jnp.pad(x, ((0, 0), (pd0, pd1), (ph0, ph1), (pw0, pw1), (0, 0)))
+def _transpose_pads(k: int, stride: int):
+    """lax.conv_transpose 'SAME' rule for the dilated-input stride-1 conv."""
+    pad_len = k + stride - 2
+    pad_a = k - 1 if stride > k - 1 else -(-pad_len // 2)
+    return pad_a, pad_len - pad_a
 
-    # implicit-GEMM patch matrix: KD*KH*KW stride-sampled shifted views
-    cols = []
-    for kd in range(KD):
-        for kh in range(KH):
-            for kw in range(KW):
-                sl = xp[:, kd:kd + (OD - 1) * stride + 1:stride,
-                        kh:kh + (OH - 1) * stride + 1:stride,
-                        kw:kw + (OW - 1) * stride + 1:stride, :]
-                cols.append(sl.reshape(N * OD * OH * OW, Ci))
-    patches = jnp.concatenate(cols, axis=-1)          # (P, KD*KH*KW*Ci)
-    w2 = w.reshape(KD * KH * KW * Ci, Co)
-    out = gemm(patches, w2.astype(patches.dtype), bm=bm, bn=bn,
-               interpret=interpret)
+
+def _prepare_input(x, kdims, *, stride: int, pads, in_dilation: int):
+    """Dilate + pad (negative pads crop) -> (xp, out_dims).
+
+    ``pads`` is ((lo, hi),)*3 over (D, H, W); ``out_dims`` are the conv
+    output sizes (Lp - K)//stride + 1 of the prepared input.
+    """
+    N, D, H, W, Ci = x.shape
+    if in_dilation > 1:
+        s = in_dilation
+        dil = ((D - 1) * s + 1, (H - 1) * s + 1, (W - 1) * s + 1)
+        xd = jnp.zeros((N, *dil, Ci), x.dtype)
+        x = xd.at[:, ::s, ::s, ::s].set(x)
+    # crop any negative pad amounts before jnp.pad (which requires >= 0)
+    starts = [max(-lo, 0) for (lo, _hi) in pads]
+    stops = [x.shape[1 + i] - max(-hi, 0) for i, (_lo, hi) in enumerate(pads)]
+    if any(s != 0 for s in starts) or \
+            any(stops[i] != x.shape[1 + i] for i in range(3)):
+        x = x[:, starts[0]:stops[0], starts[1]:stops[1], starts[2]:stops[2]]
+    pos = [(max(lo, 0), max(hi, 0)) for (lo, hi) in pads]
+    if any(p != (0, 0) for p in pos):
+        x = jnp.pad(x, ((0, 0), pos[0], pos[1], pos[2], (0, 0)))
+    outs = tuple((x.shape[1 + i] - kdims[i]) // stride + 1 for i in range(3))
+    return x, outs
+
+
+# ---------------------------------------------------------------------------
+# fused forward kernel: in-kernel patch gather + GEMM + bias/activation
+# ---------------------------------------------------------------------------
+
+
+def _apply_act(y, activation: str, slope: float):
+    if activation == "leaky_relu":
+        return jnp.where(y >= 0, y, y * slope)
+    if activation == "softplus":
+        return jax.nn.softplus(y)
+    assert activation == "none", activation
+    return y
+
+
+def _fused_conv_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, KH, KW, OH, OW,
+                       stride, activation, slope, n_kd):
+    kd = pl.program_id(2)
+
+    @pl.when(kd == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0, 0]                      # (Hp, Wp, Ci) VMEM slab
+    ci = x.shape[-1]
+    for kh in range(KH):
+        for kw in range(KW):
+            # static strided view of the slab == this tap's patch column
+            patch = x[kh:kh + (OH - 1) * stride + 1:stride,
+                      kw:kw + (OW - 1) * stride + 1:stride, :]
+            patch = patch.reshape(OH * OW, ci)
+            acc_ref[...] += jax.lax.dot_general(
+                patch, w_ref[0, kh * KW + kw], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+
+    @pl.when(kd == n_kd - 1)
+    def _():
+        y = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        o_ref[0] = _apply_act(y, activation, slope).astype(o_ref.dtype)
+
+
+def _conv_core(x, w, b=None, *, stride: int, pads, in_dilation: int = 1,
+               activation: str = "none", slope: float = 0.2,
+               interpret=None, tile_cfg: tiles_lib.ConvTiles | None = None):
+    """Driver for the fused kernel; returns (N, OD, OH, OW, Co).
+
+    All conv3d entry points (fwd, transpose fwd, dx of both) reduce to
+    this one routine with different (stride, pads, in_dilation, weights).
+    """
+    interpret = _resolve_interpret(interpret)
+    N, _, _, _, Ci = x.shape
+    KD, KH, KW, Ci2, Co = w.shape
+    assert Ci == Ci2, (x.shape, w.shape)
+    xp, (OD, OH, OW) = _prepare_input(x, (KD, KH, KW), stride=stride,
+                                      pads=pads, in_dilation=in_dilation)
+    if tile_cfg is None:
+        tile_cfg = tiles_lib.get_tiles(tiles_lib.signature(
+            "conv" if in_dilation == 1 else "conv_t",
+            x.shape[1:4], Ci, Co, KD, stride))
+    bn = min(tile_cfg.bn, max(Co, 1))
+    gn = -(-Co // bn)
+    Cop = gn * bn
+    w4 = w.reshape(KD, KH * KW, Ci, Co).astype(x.dtype)
+    if Cop != Co:
+        w4 = jnp.pad(w4, ((0, 0), (0, 0), (0, 0), (0, Cop - Co)))
+    if b is None:
+        b2 = jnp.zeros((1, Cop), x.dtype)
+    else:
+        b2 = b.reshape(1, Co).astype(x.dtype)
+        if Cop != Co:
+            b2 = jnp.pad(b2, ((0, 0), (0, Cop - Co)))
+    M = N * OD
+    Hp, Wp = xp.shape[2], xp.shape[3]
+    kernel = functools.partial(
+        _fused_conv_kernel, KH=KH, KW=KW, OH=OH, OW=OW, stride=stride,
+        activation=activation, slope=slope, n_kd=KD)
+    out = pl.pallas_call(
+        kernel,
+        grid=(M, gn, KD),
+        in_specs=[
+            # the implicit-GEMM gather: dims 0/1 have block size 1, so the
+            # index map picks the (n, od*stride + kd) slab of the padded
+            # input for each grid step — no patches matrix is ever formed
+            pl.BlockSpec((1, 1, Hp, Wp, Ci),
+                         lambda m, j, kd, OD=OD, s=stride:
+                         (m // OD, (m % OD) * s + kd, 0, 0, 0)),
+            pl.BlockSpec((1, KH * KW, Ci, bn),
+                         lambda m, j, kd: (kd, 0, 0, j)),
+            pl.BlockSpec((1, bn), lambda m, j, kd: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, OH * OW, bn),
+                               lambda m, j, kd: (m, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((M, OH * OW, Cop), x.dtype),
+        scratch_shapes=[pltpu.VMEM((OH * OW, bn), jnp.float32)],
+        interpret=interpret,
+    )(xp, w4, b2)
+    if Cop != Co:
+        out = out[..., :Co]
     return out.reshape(N, OD, OH, OW, Co)
 
 
-def conv3d_transpose_gemm(x, w, stride: int = 2, *, interpret: bool = True):
-    """SAME transposed conv = input dilation + stride-1 implicit GEMM.
+# ---------------------------------------------------------------------------
+# dw kernel: patches^T @ grad, same in-kernel gather
+# ---------------------------------------------------------------------------
 
-    Matches jax.lax.conv_transpose(..., 'SAME') exactly: the kernel is used
-    UNFLIPPED (conv_transpose's transpose_kernel=False default) and the
-    fractionally-strided input is padded with lax's SAME-transpose rule
-    (pad_a = k-1 if s > k-1 else ceil((k+s-2)/2)); output = input * stride.
+
+def _dw_kernel(x_ref, g_ref, o_ref, acc_ref, *, KH, KW, OH, OW, stride, n_m):
+    m = pl.program_id(1)
+
+    @pl.when(m == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0, 0]                      # (Hp, Wp, Ci)
+    g = g_ref[0]                         # (OH*OW, Co)
+    ci = x.shape[-1]
+    for kh in range(KH):
+        for kw in range(KW):
+            patch = x[kh:kh + (OH - 1) * stride + 1:stride,
+                      kw:kw + (OW - 1) * stride + 1:stride, :]
+            patch = patch.reshape(OH * OW, ci)
+            # patches^T @ grad: contract the P row dimension
+            acc_ref[kh * KW + kw] += jax.lax.dot_general(
+                patch, g, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+
+    @pl.when(m == n_m - 1)
+    def _():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _conv_dw_core(x, g, kdims, *, stride: int, pads, in_dilation: int = 1,
+                  interpret=None):
+    """dw[kd,kh,kw,ci,co] = sum_p patches[p, (kd,kh,kw,ci)] * g[p, co].
+
+    ``g`` is the conv output cotangent (N, OD, OH, OW, Co); the input is
+    prepared exactly as in the forward pass so the in-kernel gather sees
+    the same patch geometry.
     """
-    N, D, H, W, Ci = x.shape
-    KD, KH, KW, _, Co = w.shape
-    s = stride
-    # dilate input with (s-1) zeros between elements
-    xd = jnp.zeros((N, (D - 1) * s + 1, (H - 1) * s + 1, (W - 1) * s + 1, Ci),
-                   x.dtype)
-    xd = xd.at[:, ::s, ::s, ::s].set(x)
-    outs = (D * s, H * s, W * s)
-    pads = []
-    for k in (KD, KH, KW):
-        pad_len = k + s - 2
-        pad_a = k - 1 if s > k - 1 else -(-pad_len // 2)
-        pads.append((pad_a, pad_len - pad_a))
-    xp = jnp.pad(xd, ((0, 0), pads[0], pads[1], pads[2], (0, 0)))
+    interpret = _resolve_interpret(interpret)
+    KD, KH, KW = kdims
+    N, _, _, _, Ci = x.shape
+    Co = g.shape[-1]
+    xp, (OD, OH, OW) = _prepare_input(x, kdims, stride=stride, pads=pads,
+                                      in_dilation=in_dilation)
+    assert g.shape[1:4] == (OD, OH, OW), (g.shape, (OD, OH, OW))
+    M = N * OD
+    Hp, Wp = xp.shape[2], xp.shape[3]
+    g3 = g.reshape(M, OH * OW, Co).astype(x.dtype)
+    kernel = functools.partial(_dw_kernel, KH=KH, KW=KW, OH=OH, OW=OW,
+                               stride=stride, n_m=M)
+    dw = pl.pallas_call(
+        kernel,
+        grid=(KD, M),
+        in_specs=[
+            pl.BlockSpec((1, 1, Hp, Wp, Ci),
+                         lambda kd, m, OD=OD, s=stride:
+                         (m // OD, (m % OD) * s + kd, 0, 0, 0)),
+            pl.BlockSpec((1, OH * OW, Co), lambda kd, m: (m, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, KH * KW, Ci, Co),
+                               lambda kd, m: (kd, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((KD, KH * KW, Ci, Co), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((KH * KW, Ci, Co), jnp.float32)],
+        interpret=interpret,
+    )(xp, g3)
+    return dw.reshape(KD, KH, KW, Ci, Co)
 
-    cols = []
-    for kd in range(KD):
-        for kh in range(KH):
-            for kw in range(KW):
-                sl = xp[:, kd:kd + outs[0], kh:kh + outs[1], kw:kw + outs[2], :]
-                cols.append(sl.reshape(N * outs[0] * outs[1] * outs[2], Ci))
-    patches = jnp.concatenate(cols, axis=-1)
-    w2 = w.reshape(KD * KH * KW * Ci, Co)
-    out = gemm(patches, w2.astype(patches.dtype), interpret=interpret)
-    return out.reshape(N, *outs, Co)
+
+# ---------------------------------------------------------------------------
+# public trace-time entry points
+# ---------------------------------------------------------------------------
+
+
+def conv3d_fwd(x, w, b=None, stride: int = 1, *, activation: str = "none",
+               slope: float = 0.2, interpret=None):
+    """SAME conv via the fused implicit-GEMM kernel.
+
+    x: (N, D, H, W, Ci); w: (KD, KH, KW, Ci, Co); optional bias (Co,) and
+    activation are fused into the kernel epilogue.
+    """
+    _, D, H, W, _ = x.shape
+    KD, KH, KW = w.shape[:3]
+    pads = (_same_pads(D, KD, stride)[:2], _same_pads(H, KH, stride)[:2],
+            _same_pads(W, KW, stride)[:2])
+    return _conv_core(x, w, b, stride=stride, pads=pads,
+                      activation=activation, slope=slope, interpret=interpret)
+
+
+def conv3d_transpose_fwd(x, w, b=None, stride: int = 2, *,
+                         activation: str = "none", slope: float = 0.2,
+                         interpret=None):
+    """SAME transposed conv = input dilation + stride-1 fused GEMM.
+
+    Matches jax.lax.conv_transpose(..., 'SAME') exactly: the kernel is
+    used UNFLIPPED (conv_transpose's transpose_kernel=False default) and
+    the fractionally-strided input is padded with lax's SAME-transpose
+    rule; output spatial dims = input * stride.
+    """
+    pads = tuple(_transpose_pads(k, stride) for k in w.shape[:3])
+    return _conv_core(x, w, b, stride=1, pads=pads, in_dilation=stride,
+                      activation=activation, slope=slope, interpret=interpret)
+
+
+def _flip_t(w):
+    """Spatially flipped, ci/co-swapped weights for the dx routes."""
+    return w[::-1, ::-1, ::-1].swapaxes(3, 4)
+
+
+def conv3d_dx(g, w, stride: int, in_spatial, *, interpret=None):
+    """dx of the SAME stride-s conv: a transposed conv routed through the
+    same fused GEMM (dilate g by s, flipped/swapped weights, stride 1)."""
+    KD, KH, KW = w.shape[:3]
+    pads = []
+    for L, k in zip(in_spatial, (KD, KH, KW)):
+        lo, _hi, O = _same_pads(L, k, stride)
+        pads.append((k - 1 - lo, L + lo - 1 - (O - 1) * stride))
+    return _conv_core(g, _flip_t(w), None, stride=1, pads=tuple(pads),
+                      in_dilation=stride, interpret=interpret)
+
+
+def conv3d_dw(x, g, kdims, stride: int, *, interpret=None):
+    """dw of the SAME stride-s conv: patches^T @ grad GEMM."""
+    pads = tuple(_same_pads(L, k, stride)[:2]
+                 for L, k in zip(x.shape[1:4], kdims))
+    return _conv_dw_core(x, g, kdims, stride=stride, pads=pads,
+                         interpret=interpret)
+
+
+def conv3d_transpose_dx(g, w, stride: int, *, interpret=None):
+    """dx of the SAME transposed conv: a stride-s conv of the cotangent
+    with flipped/swapped weights through the same fused GEMM."""
+    pads = []
+    for k in w.shape[:3]:
+        pa, _pb = _transpose_pads(k, stride)
+        pads.append((k - 1 - pa, pa + 1 - stride))
+    return _conv_core(g, _flip_t(w), None, stride=stride, pads=tuple(pads),
+                      interpret=interpret)
+
+
+def conv3d_transpose_dw(x, g, kdims, stride: int, *, interpret=None):
+    """dw of the SAME transposed conv: the same patches^T @ grad GEMM over
+    the dilated input."""
+    pads = tuple(_transpose_pads(k, stride) for k in kdims)
+    return _conv_dw_core(x, g, kdims, stride=1, pads=pads,
+                         in_dilation=stride, interpret=interpret)
+
+
+# -- backward-compat aliases (pre-fusion API) --------------------------------
+
+
+def conv3d_gemm(x, w, stride: int = 1, *, interpret=None, bm=None, bn=None):
+    del bm, bn  # tile selection moved to tiles.py
+    return conv3d_fwd(x, w, None, stride, interpret=interpret)
+
+
+def conv3d_transpose_gemm(x, w, stride: int = 2, *, interpret=None):
+    return conv3d_transpose_fwd(x, w, None, stride, interpret=interpret)

@@ -1,49 +1,127 @@
-"""jit'd public wrappers for the conv3d implicit-GEMM kernel.
+"""jit'd public wrappers for the fused conv3d implicit-GEMM kernels.
 
-Forward = Pallas kernel; backward differentiates the ref oracle (identical
-math) so the ops are usable inside the adversarial training step.
+Forward AND backward are Pallas kernels: the `custom_vjp` no longer
+detours through the `lax.conv` reference —
+
+- dx is a transposed conv routed through the same fused GEMM kernel
+  (spatially flipped, ci/co-swapped weights);
+- dw is a patches^T @ grad GEMM with the identical in-kernel patch gather;
+- db is a plain reduction of the epilogue cotangent (XLA handles it).
+
+The bias+activation epilogue is fused into the forward kernel; its
+backward needs only the activation OUTPUT (saved as a residual — it is
+the op's result anyway):
+
+    leaky_relu:  d/dz = where(y >= 0, 1, slope)        (y >= 0 <=> z >= 0)
+    softplus:    d/dz = sigmoid(z) = 1 - exp(-y)       (y = log(1+e^z))
+
+so no pre-activation buffer is kept and nothing is recomputed.
 """
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
-from repro.kernels.conv3d.conv3d import conv3d_gemm, conv3d_transpose_gemm
-from repro.kernels.conv3d.ref import conv3d_ref, conv3d_transpose_ref
+from repro.kernels.conv3d.conv3d import (
+    conv3d_dw, conv3d_dx, conv3d_fwd, conv3d_transpose_dw,
+    conv3d_transpose_dx, conv3d_transpose_fwd)
 
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
-def conv3d(x, w, stride: int = 1, interpret: bool = True):
-    return conv3d_gemm(x, w, stride, interpret=interpret)
-
-
-def _c_fwd(x, w, stride, interpret):
-    return conv3d_gemm(x, w, stride, interpret=interpret), (x, w)
+ACTIVATIONS = ("none", "leaky_relu", "softplus")
 
 
-def _c_bwd(stride, interpret, res, g):
-    x, w = res
-    _, vjp = jax.vjp(lambda x_, w_: conv3d_ref(x_, w_, stride), x, w)
-    return vjp(g)
+def _act_grad_from_y(y, activation: str, slope: float):
+    """d activation / d preactivation, recovered from the OUTPUT y."""
+    if activation == "leaky_relu":
+        return jnp.where(y >= 0, jnp.ones_like(y), jnp.full_like(y, slope))
+    if activation == "softplus":
+        return 1.0 - jnp.exp(-y)          # = sigmoid(z); y >= 0 so stable
+    raise AssertionError(activation)
 
 
-conv3d.defvjp(_c_fwd, _c_bwd)
+def _epilogue_cotangent(g, y, activation, slope):
+    if activation == "none":
+        return g
+    return g * _act_grad_from_y(y, activation, slope).astype(g.dtype)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
-def conv3d_transpose(x, w, stride: int = 2, interpret: bool = True):
-    return conv3d_transpose_gemm(x, w, stride, interpret=interpret)
+# ---------------------------------------------------------------------------
+# conv3d (+ fused bias/activation)
+# ---------------------------------------------------------------------------
 
 
-def _t_fwd(x, w, stride, interpret):
-    return conv3d_transpose_gemm(x, w, stride, interpret=interpret), (x, w)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def conv3d_bias_act(x, w, b, stride: int = 1, activation: str = "none",
+                    slope: float = 0.2, interpret=None):
+    """Fused SAME conv + bias + activation; one Pallas kernel launch."""
+    assert activation in ACTIVATIONS, activation
+    return conv3d_fwd(x, w, b, stride, activation=activation, slope=slope,
+                      interpret=interpret)
 
 
-def _t_bwd(stride, interpret, res, g):
-    x, w = res
-    _, vjp = jax.vjp(lambda x_, w_: conv3d_transpose_ref(x_, w_, stride), x, w)
-    return vjp(g)
+def _cba_fwd(x, w, b, stride, activation, slope, interpret):
+    y = conv3d_fwd(x, w, b, stride, activation=activation, slope=slope,
+                   interpret=interpret)
+    return y, (x, w, b, y if activation != "none" else None)
 
 
-conv3d_transpose.defvjp(_t_fwd, _t_bwd)
+def _cba_bwd(stride, activation, slope, interpret, res, g):
+    x, w, b, y = res
+    dz = _epilogue_cotangent(g, y, activation, slope)
+    dx = conv3d_dx(dz, w, stride, x.shape[1:4],
+                   interpret=interpret).astype(x.dtype)
+    dw = conv3d_dw(x, dz, w.shape[:3], stride,
+                   interpret=interpret).astype(w.dtype)
+    db = jnp.sum(dz, axis=(0, 1, 2, 3)).astype(b.dtype)
+    return dx, dw, db
+
+
+conv3d_bias_act.defvjp(_cba_fwd, _cba_bwd)
+
+
+def conv3d(x, w, stride: int = 1, interpret=None):
+    """SAME conv via the fused kernel (no bias/activation epilogue)."""
+    b = jnp.zeros((w.shape[-1],), x.dtype)
+    return conv3d_bias_act(x, w, b, stride, "none", 0.2, interpret)
+
+
+# ---------------------------------------------------------------------------
+# conv3d_transpose (+ fused bias/activation)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def conv3d_transpose_bias_act(x, w, b, stride: int = 2,
+                              activation: str = "none", slope: float = 0.2,
+                              interpret=None):
+    """Fused SAME transposed conv + bias + activation."""
+    assert activation in ACTIVATIONS, activation
+    return conv3d_transpose_fwd(x, w, b, stride, activation=activation,
+                                slope=slope, interpret=interpret)
+
+
+def _tba_fwd(x, w, b, stride, activation, slope, interpret):
+    y = conv3d_transpose_fwd(x, w, b, stride, activation=activation,
+                             slope=slope, interpret=interpret)
+    return y, (x, w, b, y if activation != "none" else None)
+
+
+def _tba_bwd(stride, activation, slope, interpret, res, g):
+    x, w, b, y = res
+    dz = _epilogue_cotangent(g, y, activation, slope)
+    dx = conv3d_transpose_dx(dz, w, stride,
+                             interpret=interpret).astype(x.dtype)
+    dw = conv3d_transpose_dw(x, dz, w.shape[:3], stride,
+                             interpret=interpret).astype(w.dtype)
+    db = jnp.sum(dz, axis=(0, 1, 2, 3)).astype(b.dtype)
+    return dx, dw, db
+
+
+conv3d_transpose_bias_act.defvjp(_tba_fwd, _tba_bwd)
+
+
+def conv3d_transpose(x, w, stride: int = 2, interpret=None):
+    """SAME transposed conv via the fused kernel (no epilogue)."""
+    b = jnp.zeros((w.shape[-1],), x.dtype)
+    return conv3d_transpose_bias_act(x, w, b, stride, "none", 0.2, interpret)

@@ -1,4 +1,5 @@
-"""Pure-jnp oracle for the conv3d kernel: lax.conv in NDHWC/DHWIO layout."""
+"""Pure-jnp oracle for the conv3d kernels: lax.conv in NDHWC/DHWIO layout,
+plus unfused bias/activation compositions mirroring the fused epilogue."""
 from __future__ import annotations
 
 import jax
@@ -17,3 +18,26 @@ def conv3d_transpose_ref(x, w, stride: int = 2):
     """SAME-padded stride-s transposed conv (the 3DGAN generator op)."""
     return jax.lax.conv_transpose(
         x, w.astype(x.dtype), (stride,) * 3, "SAME", dimension_numbers=DN)
+
+
+def _act_ref(y, activation: str, slope: float):
+    if activation == "leaky_relu":
+        return jax.nn.leaky_relu(y, slope)
+    if activation == "softplus":
+        return jax.nn.softplus(y)
+    assert activation == "none", activation
+    return y
+
+
+def conv3d_bias_act_ref(x, w, b, stride: int = 1, activation: str = "none",
+                        slope: float = 0.2):
+    """Unfused conv + bias + activation — oracle for the fused epilogue."""
+    return _act_ref(conv3d_ref(x, w, stride) + b.astype(x.dtype),
+                    activation, slope)
+
+
+def conv3d_transpose_bias_act_ref(x, w, b, stride: int = 2,
+                                  activation: str = "none",
+                                  slope: float = 0.2):
+    return _act_ref(conv3d_transpose_ref(x, w, stride) + b.astype(x.dtype),
+                    activation, slope)

@@ -1,0 +1,99 @@
+"""Tile-size selection for the conv3d Pallas kernels.
+
+The fused implicit-GEMM kernels tile the output-channel (N of the GEMM)
+dimension and, for the standalone ``gemm``, all three of (bm, bk, bn).
+Which tile wins depends on the problem shape: the 3DGAN layers range from
+Ci=1 (discriminator input) to Ci=Co=128 (MXU-native), and the spatial row
+length OH*OW ranges from 25 to 2601 — a single hard-coded 128 is right for
+the big layers and wasteful for the small ones.
+
+This module is the one place that decision lives:
+
+- :func:`get_tiles` — registry lookup by problem signature, falling back
+  to a shape heuristic (MXU-native 128 lanes, shrunk to the padded problem).
+- :func:`register_tiles` — pin a tile config for a signature (what a
+  sweep on the real TPU target would persist).
+- :func:`autotune` — the hook such a sweep plugs into: measure a callable
+  over candidate configs and register the argmin.
+
+Registered entries take priority, so an offline autotune run changes
+kernel behaviour without touching call sites.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Iterable, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvTiles:
+    """Tile config for the fused conv kernels.
+
+    ``bn``   — output-channel (GEMM N) tile, MXU lane dimension.
+    ``bm``/``bk`` — row/contraction tiles; used by the standalone
+    :func:`repro.kernels.conv3d.conv3d.gemm`.  The fused conv kernels tile
+    rows structurally (one padded-input slab per (n, od) grid row), so for
+    them only ``bn`` is load-bearing.
+    """
+    bn: int = 128
+    bm: int = 128
+    bk: int = 128
+
+
+Signature = Tuple  # (kind, spatial..., Ci, Co, K, stride) — see signature()
+
+_REGISTRY: Dict[Signature, ConvTiles] = {}
+
+
+def signature(kind: str, spatial: Sequence[int], ci: int, co: int,
+              k: int, stride: int) -> Signature:
+    """Hashable problem identity: kernel kind + the shape that drives tiling."""
+    return (kind, tuple(int(s) for s in spatial), int(ci), int(co),
+            int(k), int(stride))
+
+
+def register_tiles(sig: Signature, tiles: ConvTiles) -> None:
+    _REGISTRY[sig] = tiles
+
+
+def clear_registry() -> None:
+    _REGISTRY.clear()
+
+
+def default_tiles(sig: Signature) -> ConvTiles:
+    """Shape heuristic: MXU-native 128, shrunk when the problem is smaller.
+
+    Tiles never exceed the (padded) problem extent — a 128-lane tile over
+    Co=8 would spend 94% of the MXU on padding.
+    """
+    _kind, _spatial, _ci, co, _k, _stride = sig
+    bn = min(128, _round_up(co, 8))
+    return ConvTiles(bn=bn)
+
+
+def get_tiles(sig: Signature) -> ConvTiles:
+    """Registered config if present, else the heuristic default."""
+    return _REGISTRY.get(sig, default_tiles(sig))
+
+
+def autotune(sig: Signature, measure: Callable[[ConvTiles], float],
+             candidates: Optional[Iterable[ConvTiles]] = None) -> ConvTiles:
+    """Measure ``candidates`` (seconds, lower is better), register the best.
+
+    ``measure`` runs the kernel with a given config and returns its cost;
+    a TPU sweep passes timed executions, tests pass analytic stand-ins.
+    """
+    if candidates is None:
+        candidates = [ConvTiles(bn=bn) for bn in (32, 64, 128, 256)]
+    best, best_cost = None, float("inf")
+    for cand in candidates:
+        cost = measure(cand)
+        if cost < best_cost:
+            best, best_cost = cand, cost
+    assert best is not None, "autotune needs at least one candidate"
+    register_tiles(sig, best)
+    return best
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m

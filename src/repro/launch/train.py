@@ -67,7 +67,9 @@ def train_gan(args, mesh, log: MetricLog):
         # the 3DGAN is PURE data parallelism: every mesh axis is a replica
         eng = engine_lib.Engine(mesh, loop, dp_axes=tuple(mesh.axis_names))
         state, _ = eng.fit(task, sim.batches(B), args.steps,
-                           rng=jax.random.key(args.seed), log=log)
+                           rng=jax.random.key(args.seed), log=log,
+                           log_every=args.log_every,
+                           sync_every=args.sync_every or None)
 
     # physics validation vs fresh Monte Carlo
     mc = next(sim.batches(256))
@@ -119,7 +121,9 @@ def train_lm(args, mesh, log: MetricLog):
 
     t0 = time.time()
     state, _ = eng.fit(task, gen(), args.steps,
-                       rng=jax.random.key(args.seed), log=log)
+                       rng=jax.random.key(args.seed), log=log,
+                       log_every=args.log_every,
+                       sync_every=args.sync_every or None)
     dt = time.time() - t0
     print(f"{args.arch}: {sharding.count_params(state.params):,} params "
           f"({'reduced' if args.reduced else 'full'}), loop={loop}")
@@ -151,6 +155,12 @@ def main():
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--log", default="")
+    ap.add_argument("--log-every", type=int, default=1,
+                    help="steps per metric window; >1 removes the "
+                         "per-step device->host sync (async dispatch)")
+    ap.add_argument("--sync-every", type=int, default=0,
+                    help="force a device sync every N steps to bound "
+                         "run-ahead (0: never)")
     args = ap.parse_args()
     if args.loop == "naive" and args.arch != "calo3dgan":
         ap.error("--loop naive is the GAN train_on_batch baseline; "

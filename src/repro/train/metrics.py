@@ -1,9 +1,47 @@
-"""Structured metric logging (the Grafana/Prometheus stand-in)."""
+"""Structured metric logging (the Grafana/Prometheus stand-in) and the
+device-side windowed accumulator behind the engine's async-dispatch loop."""
 from __future__ import annotations
 
 import json
 import time
 from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class MetricAccumulator:
+    """Windowed metric accumulation WITHOUT per-step host syncs.
+
+    ``update`` folds one step's (device-resident) scalar metrics into
+    running device-side sums — that is an async dispatch, so the host
+    keeps issuing work while the device computes.  ``means`` does ONE
+    ``jax.device_get`` for the whole window and returns host floats;
+    call it once per logging window, not per step.
+    """
+
+    def __init__(self):
+        self.sums = None
+        self.count = 0
+
+    def update(self, metrics) -> None:
+        self.count += 1
+        if self.sums is None:
+            self.sums = dict(metrics)
+        else:
+            self.sums = {k: jnp.add(self.sums[k], metrics[k])
+                         for k in self.sums}
+
+    def means(self) -> dict:
+        """Host-side means of the current window (one device transfer)."""
+        if not self.count:
+            return {}
+        host = jax.device_get(self.sums)
+        return {k: float(v) / self.count for k, v in host.items()}
+
+    def reset(self) -> None:
+        self.sums = None
+        self.count = 0
 
 
 class MetricLog:

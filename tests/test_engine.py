@@ -192,3 +192,98 @@ def test_engine_data_iter_shards_batches():
     for got, src in zip(out, batches):
         assert isinstance(got["image"], jax.Array)
         np.testing.assert_allclose(np.asarray(got["image"]), src["image"])
+
+
+# ---------------------------------------------------------------------------
+# async-dispatch fit loop: windowed metric logging, no per-step host sync
+# ---------------------------------------------------------------------------
+
+
+def test_fit_windowed_logging_dispatch_count():
+    """With log_every=N the loop performs one host transfer per window —
+    not per step — and logs at the window-end step indices."""
+    from repro.train.metrics import MetricLog
+    eng = engine_lib.Engine(make_dev_mesh(), "builtin")
+    log = MetricLog(print_every=0)
+    state, metrics = eng.fit(_gan_task(), iter(_gan_batches(8, batch=4)), 8,
+                             rng=jax.random.key(0), log=log, log_every=4)
+    assert eng.last_fit_stats == {"steps": 8, "host_transfers": 2}
+    assert [r["step"] for r in log.rows] == [3, 7]
+    assert "d_loss_real" in log.rows[0]
+
+    # a partial final window still flushes
+    log2 = MetricLog(print_every=0)
+    eng.fit(_gan_task(), iter(_gan_batches(5, batch=4)), 5,
+            rng=jax.random.key(0), log=log2, log_every=4)
+    assert eng.last_fit_stats["host_transfers"] == 2
+    assert [r["step"] for r in log2.rows] == [3, 4]
+
+    # log_every=1 reproduces the old per-step cadence
+    log3 = MetricLog(print_every=0)
+    eng.fit(_gan_task(), iter(_gan_batches(3, batch=4)), 3,
+            rng=jax.random.key(0), log=log3, log_every=1)
+    assert eng.last_fit_stats["host_transfers"] == 3
+    assert [r["step"] for r in log3.rows] == [0, 1, 2]
+
+
+def test_fit_window_means_match_per_step_logs():
+    """The windowed means are exactly the mean of the per-step metrics
+    (same rng => same step stream on both runs)."""
+    from repro.train.metrics import MetricLog
+    eng = engine_lib.Engine(make_dev_mesh(), "builtin")
+    per_step, windowed = MetricLog(print_every=0), MetricLog(print_every=0)
+    eng.fit(_gan_task(), iter(_gan_batches(4, batch=4)), 4,
+            rng=jax.random.key(5), log=per_step, log_every=1)
+    eng.fit(_gan_task(), iter(_gan_batches(4, batch=4)), 4,
+            rng=jax.random.key(5), log=windowed, log_every=4)
+    assert len(windowed.rows) == 1
+    for key in ("d_loss_real", "d_loss_fake", "g_loss"):
+        want = np.mean([r[key] for r in per_step.rows])
+        np.testing.assert_allclose(windowed.rows[0][key], want, rtol=1e-6)
+
+
+def test_fit_no_device_to_host_transfers_without_log():
+    """The loop itself must not read from device: with logging off, a
+    whole fit under a disallow-transfers guard completes cleanly."""
+    eng = engine_lib.Engine(make_dev_mesh(), "builtin")
+    task = _gan_task()
+    batches = _gan_batches(3, batch=4)
+    state = eng.init_state(task, jax.random.key(0))
+    with jax.transfer_guard_device_to_host("disallow"):
+        state, metrics = eng.fit(task, iter(batches), 3,
+                                 rng=jax.random.key(1), state=state)
+    assert eng.last_fit_stats["host_transfers"] == 0
+    assert np.isfinite(float(metrics["g_loss"]))
+
+
+def test_fit_sync_every_escape_hatch():
+    from repro.train.metrics import MetricLog
+    eng = engine_lib.Engine(make_dev_mesh(), "builtin")
+    log = MetricLog(print_every=0)
+    eng.fit(_gan_task(), iter(_gan_batches(4, batch=4)), 4,
+            rng=jax.random.key(0), log=log, log_every=4, sync_every=2)
+    assert eng.last_fit_stats["host_transfers"] == 1
+
+
+def test_metric_accumulator_single_transfer():
+    from repro.train.metrics import MetricAccumulator
+    acc = MetricAccumulator()
+    for i in range(3):
+        acc.update({"a": jnp.float32(i), "b": jnp.float32(2 * i)})
+    means = acc.means()
+    assert means == {"a": 1.0, "b": 2.0}
+    acc.reset()
+    assert acc.means() == {}
+
+
+def test_fit_flushes_partial_window_on_stream_exhaustion():
+    """If the batch stream runs dry before ``steps``, the trailing
+    partial window is still flushed (the old per-step logger never
+    dropped completed steps)."""
+    from repro.train.metrics import MetricLog
+    eng = engine_lib.Engine(make_dev_mesh(), "builtin")
+    log = MetricLog(print_every=0)
+    eng.fit(_gan_task(), iter(_gan_batches(6, batch=4)), 10,
+            rng=jax.random.key(0), log=log, log_every=4)
+    assert eng.last_fit_stats == {"steps": 6, "host_transfers": 2}
+    assert [r["step"] for r in log.rows] == [3, 5]
