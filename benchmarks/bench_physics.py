@@ -19,8 +19,13 @@ from repro.data.calo import CaloSimulator, CaloSpec
 from repro.optim import optimizers as opt_lib
 
 
-def run(steps=30, batch=16, seed=0):
-    cfg = calo3dgan.bench()
+def train_state(cfg, steps=30, batch=16, seed=0):
+    """Short fused-step training burst; shared with bench_serve_fastsim so
+    the serving gate is measured on EXACTLY the training-time generator.
+
+    Returns ``(state, sim, train_s)`` — ``train_s`` times ONLY the step
+    loop (setup/init excluded), preserving the timing boundary of the
+    recorded BENCH_physics.json trajectory."""
     g_opt = opt_lib.rmsprop(2e-4)
     d_opt = opt_lib.rmsprop(2e-4)
     state = adversarial.init_state(jax.random.key(seed), cfg, g_opt, d_opt)
@@ -30,11 +35,16 @@ def run(steps=30, batch=16, seed=0):
     rng = jax.random.key(seed + 1)
     it = sim.batches(batch)
     t0 = time.time()
-    for i in range(steps):
+    for _ in range(steps):
         b = {k: jnp.asarray(v) for k, v in next(it).items()}
         rng, k = jax.random.split(rng)
         state, m = fused(state, b, k)
-    train_s = time.time() - t0
+    return state, sim, time.time() - t0
+
+
+def run(steps=30, batch=16, seed=0):
+    cfg = calo3dgan.bench()
+    state, sim, train_s = train_state(cfg, steps, batch, seed)
 
     # GAN samples vs fresh MC at matched labels
     mc = next(sim.batches(256))

@@ -1,0 +1,168 @@
+"""Fast-simulation serving benchmark: throughput, latency, physics gate.
+
+The serving-side deliverable of the paper: train the (bench-sized) 3DGAN
+with the fused loop, hand the generator to `serve/simulate.SimulateEngine`,
+and push a request mix through it.  Reports
+
+- sustained events/sec over the whole run,
+- p50/p99 REQUEST latency, overall and grouped by the bucket a request's
+  size maps to (the tuning signal for bucket selection — see
+  docs/fastsim_service.md),
+- the rolling physics gate's per-window profile divergences, compared
+  against the TRAINING-TIME divergence of the same generator on the same
+  config (`bench_physics`-style validation) — the acceptance bar is that
+  serving-gate divergence stays within 2x of training-time divergence.
+
+Writes results/BENCH_serve_fastsim.json.
+
+  PYTHONPATH=src:. python benchmarks/bench_serve_fastsim.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import calo3dgan
+from repro.core import gan, validation
+from repro.data.calo import CaloSimulator, CaloSpec
+from repro.launch.mesh import make_dev_mesh
+from repro.serve.simulate import PhysicsGate, SimRequest, SimulateEngine
+
+from benchmarks.bench_physics import train_state
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+
+BUCKETS = (8, 32, 128)
+
+
+def _pct(sorted_vals, q):
+    if not sorted_vals:
+        return 0.0
+    return sorted_vals[min(len(sorted_vals) - 1, int(len(sorted_vals) * q))]
+
+
+def _natural_bucket(n):
+    for b in BUCKETS:
+        if b >= n:
+            return b
+    return BUCKETS[-1]
+
+
+def run(train_steps=30, requests=24, max_events=96, gate_window=256, seed=0):
+    cfg = calo3dgan.bench()
+
+    # -- train, then measure the training-time physics fidelity -----------
+    state, sim, train_s = train_state(cfg, steps=train_steps, seed=seed)
+    mc = next(sim.batches(256))
+    noise = jax.random.normal(jax.random.key(99), (256, cfg.latent_dim))
+    fake = gan.generate(state.g_params, noise, jnp.asarray(mc["e_p"]),
+                        jnp.asarray(mc["theta"]), cfg)
+    train_rep = validation.validation_report(np.asarray(fake), mc["image"],
+                                             mc["e_p"], mc["e_p"])
+
+    # -- serve the same generator through the fast-sim engine -------------
+    ref_mc = next(sim.batches(512))
+    gate = PhysicsGate(validation.reference_profiles(ref_mc["image"],
+                                                     ref_mc["e_p"]),
+                       window=gate_window)
+    eng = SimulateEngine(cfg, state.g_params, buckets=BUCKETS,
+                         mesh=make_dev_mesh(data=len(jax.devices())),
+                         gate=gate)
+    t0 = time.time()
+    eng.warmup()
+    compile_s = time.time() - t0
+
+    rng = np.random.default_rng(seed)
+    reqs = [SimRequest(rid=rid,
+                       primary_energy=float(rng.uniform(10.0, 500.0)),
+                       n_events=int(rng.integers(1, max_events + 1)),
+                       seed=int(rng.integers(0, 2**31 - 1)))
+            for rid in range(requests)]
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.time()
+    done = eng.run()
+    serve_s = time.time() - t0
+    gate.flush()
+
+    n_ev = eng.stats["events_generated"]
+    lats = sorted(r.latency_s for r in done)
+    by_bucket = {}
+    for r in done:
+        by_bucket.setdefault(_natural_bucket(r.n_events), []).append(
+            r.latency_s)
+    bucket_latency = {
+        str(b): {"requests": len(v),
+                 "p50_ms": 1e3 * _pct(sorted(v), 0.50),
+                 "p99_ms": 1e3 * _pct(sorted(v), 0.99)}
+        for b, v in sorted(by_bucket.items())}
+
+    # -- gate vs training-time fidelity (the 2x acceptance bar) -----------
+    # judge on FULL windows only: the trailing flush() window may hold a
+    # handful of events whose profile estimate is pure noise
+    full = [rep for rep in gate.reports if rep["count"] >= gate_window]
+    judged = full or gate.reports
+    worst = {k: max(rep[k] for rep in judged)
+             for k in ("longitudinal_kl", "transverse_x_kl",
+                       "transverse_y_kl")}
+    ratios = {k: worst[k] / max(train_rep[k], 1e-9) for k in worst}
+    within_2x = all(r <= 2.0 for r in ratios.values())
+
+    return {
+        "config": "calo3dgan.bench",
+        "train_steps": train_steps,
+        "train_s": round(train_s, 2),
+        "compile_s": round(compile_s, 2),
+        "buckets": list(BUCKETS),
+        "requests": requests,
+        "events": n_ev,
+        "serve_s": round(serve_s, 3),
+        "events_per_s": round(n_ev / serve_s, 1),
+        "latency_p50_ms": round(1e3 * _pct(lats, 0.50), 1),
+        "latency_p99_ms": round(1e3 * _pct(lats, 0.99), 1),
+        "latency_per_bucket": bucket_latency,
+        "engine_stats": {k: v for k, v in eng.stats.items()},
+        "compile_count": eng.compile_count,
+        "gate_windows": gate.reports,
+        "gate_worst_kl": worst,
+        "train_kl": {k: train_rep[k] for k in worst},
+        "gate_over_train_ratio": {k: round(v, 3) for k, v in ratios.items()},
+        "gate_within_2x_of_training": within_2x,
+    }
+
+
+def main():
+    rows = run()
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "BENCH_serve_fastsim.json")
+    with open(path, "w") as f:
+        json.dump({"benchmark": "serve_fastsim", "rows": rows}, f, indent=2,
+                  default=str)
+    print(f"bench_serve_fastsim: {rows['events']} events / "
+          f"{rows['requests']} requests in {rows['serve_s']}s "
+          f"-> {rows['events_per_s']} events/s "
+          f"(p50 {rows['latency_p50_ms']}ms, p99 {rows['latency_p99_ms']}ms)")
+    for b, d in rows["latency_per_bucket"].items():
+        print(f"  bucket {b:>4}: {d['requests']:3d} requests "
+              f"p50={d['p50_ms']:.0f}ms p99={d['p99_ms']:.0f}ms")
+    print(f"  compiles={rows['compile_count']} "
+          f"steps={rows['engine_stats']['steps']} "
+          f"padded={rows['engine_stats']['padded_events']} "
+          f"transfers={rows['engine_stats']['device_transfers']}")
+    for k, v in rows["gate_over_train_ratio"].items():
+        print(f"  gate/train {k}: {rows['gate_worst_kl'][k]:.4f} / "
+              f"{rows['train_kl'][k]:.4f} = {v}")
+    print("  gate within 2x of training-time divergence: "
+          f"{rows['gate_within_2x_of_training']}")
+    print(f"[wrote {path}]")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -93,6 +93,12 @@ def main():
     from benchmarks import bench_fig6_pipeline
     _run_inproc("fig6_pipeline", bench_fig6_pipeline.main, failures)
 
+    _banner("Serving — 3DGAN fast-simulation engine (events/s, gate)")
+    from benchmarks import bench_serve_fastsim
+    # writes its own BENCH_serve_fastsim.json with gate/ratio metadata
+    _run_inproc("serve_fastsim", bench_serve_fastsim.main, failures,
+                write=False)
+
     _banner("Kernel — fused Pallas conv3d vs lax.conv (fwd / fwd+bwd)")
     from benchmarks import bench_kernel_conv3d
     # writes its own BENCH_kernel_conv3d.json with backend/config metadata

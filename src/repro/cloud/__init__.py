@@ -1,3 +1,4 @@
+"""Cloud cost modelling (paper Fig. 5): TPU vs GPU price per epoch."""
 from repro.cloud.costs import EpochCost, PRICES, gpu_epoch_cost, scaling_cost_table, tpu_epoch_cost
 
 __all__ = ["EpochCost", "PRICES", "gpu_epoch_cost", "scaling_cost_table", "tpu_epoch_cost"]

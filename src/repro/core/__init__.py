@@ -1,3 +1,4 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""The paper's core workload: the 3DGAN model (`gan.py`), Algorithm-1
+adversarial training steps (`adversarial.py` — naive baseline and the
+fully-fused custom-loop rewrite), and the physics validation used both
+at training time and by the serving gate (`validation.py`)."""

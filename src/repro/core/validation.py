@@ -10,9 +10,20 @@ Reproduces the paper's Fig. 3 / Fig. 7 comparisons numerically:
 
 Each comparison returns a scalar divergence so tests/benchmarks can assert
 "agreement remains overall very good" quantitatively.
+
+Two halves:
+
+- host-side numpy comparisons (`validation_report` and friends) used by the
+  training benchmarks,
+- device-side accumulators (`profile_sums` / `gate_report` /
+  `reference_profiles`) behind the serving engine's rolling physics gate
+  (`serve/simulate.py`): per-step masked profile sums stay on the
+  accelerator, the host drains ONE small pytree per gate window and turns
+  it into the same divergences the training benchmarks report.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -46,6 +57,74 @@ def edge_ratio_error(p: np.ndarray, q: np.ndarray, edge_cells: int = 5) -> float
     pe = p[:edge_cells].sum() + p[-edge_cells:].sum()
     qe = q[:edge_cells].sum() + q[-edge_cells:].sum()
     return float(abs(pe - qe) / max(qe, 1e-12))
+
+
+# ---------------------------------------------------------------------------
+# Device-side gate accumulators (serving: one small drain per window)
+# ---------------------------------------------------------------------------
+
+
+def profile_sums(images, e_p, mask=None) -> dict:
+    """Masked per-batch profile accumulators, computed ON DEVICE.
+
+    ``images``: (B, X, Y, Z, 1); ``mask``: (B,) — padded bucket rows
+    contribute nothing.  The returned pytree of small jnp arrays is meant
+    to be summed across steps (still on device) and drained once per gate
+    window; after normalisation the profiles equal what the host-side
+    ``longitudinal_profile`` / ``transverse_profile`` compute over the
+    same (unpadded) events.
+    """
+    img = images.astype(jnp.float32)
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        img = img * m[:, None, None, None, None]
+        ep = e_p.astype(jnp.float32) * m
+        n = m.sum()
+    else:
+        ep = e_p.astype(jnp.float32)
+        n = jnp.float32(img.shape[0])
+    # per-event response (E_CAL_i / E_p_i) summed, NOT sum(E_CAL)/sum(E_p):
+    # the reference (`energy_response(...).mean()`) weights events equally,
+    # so an energy-weighted ratio-of-sums would report spurious drift
+    # whenever response varies with E_p across a window's request mix
+    resp = img.sum(axis=(1, 2, 3, 4)) / jnp.maximum(
+        e_p.astype(jnp.float32), 1e-12)
+    return {
+        "longitudinal": img.sum(axis=(1, 2, 4)).sum(axis=0),   # (Z,)
+        "transverse_x": img.sum(axis=(2, 3, 4)).sum(axis=0),   # (X,)
+        "transverse_y": img.sum(axis=(1, 3, 4)).sum(axis=0),   # (Y,)
+        "response": resp.sum(),
+        "e_cal": img.sum(),
+        "e_p": ep.sum(),
+        "count": n,
+    }
+
+
+def reference_profiles(images, e_p) -> dict:
+    """The Monte-Carlo side of the serving gate (host numpy, computed once)."""
+    return {
+        "longitudinal": longitudinal_profile(images),
+        "transverse_x": transverse_profile(images, "x"),
+        "transverse_y": transverse_profile(images, "y"),
+        "response_mean": float(np.mean(energy_response(images, e_p))),
+    }
+
+
+def gate_report(sums: dict, reference: dict) -> dict:
+    """Drained (host) gate sums -> the same divergences `validation_report`
+    computes at training time, against a fixed MC reference."""
+    rep = {}
+    for name in ("longitudinal", "transverse_x", "transverse_y"):
+        prof = np.asarray(sums[name], np.float64)
+        prof = prof / max(prof.sum(), 1e-12)
+        rep[f"{name}_kl"] = profile_divergence(prof, reference[name])
+        rep[f"{name}_edge_err"] = edge_ratio_error(prof, reference[name])
+    resp = float(sums["response"]) / max(float(sums["count"]), 1e-12)
+    rep["response_mean"] = resp
+    rep["response_rel_err"] = float(abs(resp - reference["response_mean"])
+                                    / max(reference["response_mean"], 1e-12))
+    rep["count"] = float(sums["count"])
+    return rep
 
 
 def validation_report(gan_images, mc_images, gan_ep, mc_ep) -> dict:

@@ -1,3 +1,5 @@
+"""Fused implicit-GEMM Pallas conv3d family (fwd + bwd) — the 3DGAN hot
+path — with the `lax.conv` reference implementations and tile registry."""
 from repro.kernels.conv3d.conv3d import default_interpret, gemm
 from repro.kernels.conv3d.ops import (ACTIVATIONS, conv3d, conv3d_bias_act,
                                       conv3d_transpose,

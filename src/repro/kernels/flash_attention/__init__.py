@@ -1,3 +1,4 @@
+"""Blockwise flash-attention Pallas kernel and its reference path."""
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 

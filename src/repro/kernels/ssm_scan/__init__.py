@@ -1,3 +1,4 @@
+"""Associative SSM-scan Pallas kernel and its reference path."""
 from repro.kernels.ssm_scan.ops import ssm_scan
 from repro.kernels.ssm_scan.ref import ssm_scan_ref
 

@@ -1,14 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
-                           + os.environ.get("XLA_FLAGS", ""))
-# ^ MUST precede any jax import: jax locks the device count on first init.
-if not os.environ.get("REPRO_XLA_FULL_OPT"):
-    # Reduce LLVM codegen effort for the CPU stand-in backend (8x faster
-    # compiles).  GSPMD partitioning, layout & memory assignment — the
-    # things the dry-run proves — run identically; cost/memory analysis
-    # values were verified unchanged vs. full optimization.
-    os.environ["XLA_FLAGS"] += (" --xla_backend_optimization_level=0"
-                                " --xla_llvm_disable_expensive_passes=true")
 """Multi-pod dry-run: prove the distribution config is coherent.
 
 For every (architecture x input-shape) pair this lowers + compiles the real
@@ -26,6 +15,17 @@ Usage:
   python -m repro.launch.dryrun --all --out results/dryrun
   python -m repro.launch.dryrun --arch calo3dgan --multi-pod
 """
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede any jax import: jax locks the device count on first init.
+if not os.environ.get("REPRO_XLA_FULL_OPT"):
+    # Reduce LLVM codegen effort for the CPU stand-in backend (8x faster
+    # compiles).  GSPMD partitioning, layout & memory assignment — the
+    # things the dry-run proves — run identically; cost/memory analysis
+    # values were verified unchanged vs. full optimization.
+    os.environ["XLA_FLAGS"] += (" --xla_backend_optimization_level=0"
+                                " --xla_llvm_disable_expensive_passes=true")
 import argparse
 import json
 import time

@@ -1,3 +1,30 @@
-from repro.serve.engine import Request, ServeEngine
+"""Serving engines — two workloads, one discipline (state stays on device).
 
-__all__ = ["Request", "ServeEngine"]
+Two engines live here, matching the repo's two workload families:
+
+- :class:`ServeEngine` (`serve/engine.py`) — the **LM** continuous-batching
+  decode engine: a fixed slot pool over ONE compiled ``serve_step``; every
+  slot advances a token per call, prompt insertion reuses free slots, and
+  all per-slot state (KV cache / recurrent state, positions) lives on the
+  accelerator in the precision policy's compute dtype.
+
+- :class:`SimulateEngine` (`serve/simulate.py`) — the **GAN fast-simulation**
+  engine, the deployment surface the paper trains 3DGAN for: event-
+  generation requests are micro-batched into fixed, padded+masked batch
+  buckets (one AOT-compiled, data-parallel-sharded generator step per
+  bucket), shower tensors stay on device until a whole request is ready
+  (one transfer per request), and a rolling :class:`PhysicsGate` reports
+  the paper's Fig. 3/7 profile divergences per window to catch generator
+  drift in production.
+
+The split mirrors the workloads' shapes: LM serving is *stateful and
+incremental* (a request is a sequence of dependent steps over a cache),
+fast-sim serving is *stateless and bulk* (a request is an independent
+batch of samples) — so the LM engine optimises slot reuse while the GAN
+engine optimises bucket packing and transfer counts.
+"""
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.simulate import PhysicsGate, SimRequest, SimulateEngine
+
+__all__ = ["PhysicsGate", "Request", "ServeEngine", "SimRequest",
+           "SimulateEngine"]

@@ -49,8 +49,13 @@ class ServeEngine:
 
         self._decode = jax.jit(steps_lib.make_serve_step(
             self.model, cfg, self.policy, mesh=mesh))
-        # per-slot state: one cache of batch=slots; per-slot positions
-        self.cache = self.model.init_cache(cfg, slots, max_len, jnp.bfloat16)
+        # per-slot state: one cache of batch=slots; per-slot positions.
+        # The cache holds activations, so it lives in the policy's COMPUTE
+        # dtype (bf16 under the bf16 policy, f32 under f32) — not a
+        # hardcoded bf16 that would silently down-cast an f32 deployment.
+        self.cache_dtype = self.policy.compute_dtype
+        self.cache = self.model.init_cache(cfg, slots, max_len,
+                                           self.cache_dtype)
         self._cache_axes = self.model.cache_logical_axes(cfg)
         self.pos = np.zeros((slots,), np.int32)
         self.slot_req: List[Optional[Request]] = [None] * slots
@@ -110,7 +115,7 @@ class ServeEngine:
 
     def _zero_slot(self, slot: int):
         zeros = self.model.init_cache(self.cfg, self.slots, self.max_len,
-                                      jnp.bfloat16)
+                                      self.cache_dtype)
         self.cache = self._merge_slot(zeros, self.cache, slot)
 
     def _prefill_slot(self, s: int, req: Request):

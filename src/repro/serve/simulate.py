@@ -1,0 +1,353 @@
+"""Fast-simulation serving engine: batched, sharded 3DGAN event generation.
+
+The paper trains the 3DGAN so it can REPLACE Monte Carlo in production —
+this module is that deployment surface.  Requests ask for showers
+(``primary_energy``, ``n_events``, ``seed``); the engine turns them into
+accelerator work the same way the training side does:
+
+- **fixed batch buckets** — event work from the head of the host-side
+  queue is packed into the smallest bucket that fits (padded + masked),
+  so the whole service runs on a handful of AOT-compiled programs, one
+  per bucket, instead of recompiling per request shape;
+- **data-parallel sharding** — with a mesh, every bucket batch is sharded
+  over the data axes exactly like a training batch
+  (`parallel/sharding.batch_axes`), params stay replicated, and the
+  generator runs through the same `core/gan.py` path (including the
+  Pallas fused conv3d kernels when `gan.pallas_conv_enabled(cfg)`);
+- **on-device results** — generated shower tensors stay on the
+  accelerator until a request's LAST event is generated; the drain is
+  one device->host transfer per request (`SimulateEngine._finalize`);
+- **deterministic per-event RNG** — event ``i`` of a request is generated
+  from ``fold_in(fold_in(key(0), request.seed), i)``, so a request's
+  showers are bit-identical no matter which bucket they were packed into
+  or which other requests shared the batch;
+- **rolling physics gate** — every step's masked profile sums
+  (`core/validation.profile_sums`) accumulate on device; once per
+  ``window`` events the gate drains ONE small pytree and reports the
+  paper's Fig. 3/7 divergences against a fixed MC reference
+  (:class:`PhysicsGate`), so generator drift in production is detected
+  with the same numbers that validate training fidelity.
+
+Typical use::
+
+    from repro.configs import calo3dgan
+    from repro.core import validation
+    from repro.data.calo import CaloSimulator, CaloSpec
+    from repro.serve.simulate import PhysicsGate, SimRequest, SimulateEngine
+
+    cfg = calo3dgan.reduced()
+    mc = next(CaloSimulator(CaloSpec(cfg.image_shape)).batches(512))
+    gate = PhysicsGate(validation.reference_profiles(mc["image"], mc["e_p"]))
+    eng = SimulateEngine(cfg, g_params, buckets=(8, 32, 128), gate=gate)
+    eng.submit(SimRequest(rid=0, primary_energy=250.0, n_events=100, seed=7))
+    (req,) = eng.run()
+    req.images            # (100, X, Y, Z, 1) — exactly n_events
+    gate.latest()         # {'longitudinal_kl': ..., 'response_rel_err': ...}
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import gan, validation
+from repro.parallel import sharding
+from repro.substrate.precision import get_policy
+
+
+@dataclasses.dataclass
+class SimRequest:
+    """One event-generation request: n_events showers at one beam setting."""
+    rid: int
+    primary_energy: float          # E_p in GeV (conditioning label)
+    n_events: int
+    seed: int = 0
+    theta: float = float(np.pi / 2)   # incidence angle (rad); 90 deg = normal
+    # filled by the engine:
+    images: Optional[np.ndarray] = None   # (n_events, X, Y, Z, 1)
+    latency_s: float = 0.0
+    done: bool = False
+
+
+@dataclasses.dataclass
+class _Cursor:
+    """Engine-internal progress through one request's event range."""
+    req: SimRequest
+    t0: float
+    next_ev: int = 0
+    chunks: List[jax.Array] = dataclasses.field(default_factory=list)
+
+
+class PhysicsGate:
+    """Rolling on-device physics validation for a serving deployment.
+
+    ``update`` folds one step's masked profile sums into device-side
+    running sums (an async dispatch — no host sync); window accounting
+    uses the HOST-side real-event count, so deciding when to drain never
+    blocks on the device.  Every ``window`` generated events the gate
+    drains once and appends a report with the training-time divergences
+    (`core/validation.gate_report`) against the fixed MC ``reference``
+    (`core/validation.reference_profiles`).
+    """
+
+    def __init__(self, reference: dict, window: int = 512):
+        self.reference = reference
+        self.window = int(window)
+        self.reports: List[dict] = []
+        self._sums: Optional[dict] = None
+        self._pending = 0
+
+    def update(self, sums: dict, n_real: int) -> None:
+        self._pending += int(n_real)
+        if self._sums is None:
+            self._sums = dict(sums)
+        else:
+            self._sums = {k: jnp.add(self._sums[k], sums[k])
+                          for k in self._sums}
+        if self._pending >= self.window:
+            self.flush()
+
+    def flush(self) -> Optional[dict]:
+        """Drain the current (possibly partial) window: ONE device->host
+        transfer, one appended report.  No-op when nothing accumulated."""
+        if not self._pending:
+            return None
+        host = jax.device_get(self._sums)
+        rep = validation.gate_report(host, self.reference)
+        self.reports.append(rep)
+        self._sums, self._pending = None, 0
+        return rep
+
+    def latest(self) -> Optional[dict]:
+        return self.reports[-1] if self.reports else None
+
+    def drifted(self, max_kl: float) -> bool:
+        """True when the latest window's worst profile KL exceeds the
+        budget — the deploy-time analogue of the paper's >64-GPU check."""
+        rep = self.latest()
+        if rep is None:
+            return False
+        worst = max(rep["longitudinal_kl"], rep["transverse_x_kl"],
+                    rep["transverse_y_kl"])
+        return worst > max_kl
+
+
+class SimulateEngine:
+    """Micro-batching 3DGAN event-generation service over bucketed steps.
+
+    Parameters
+    ----------
+    cfg
+        A `configs/calo3dgan.GANConfig` (the generator architecture; its
+        ``use_pallas_conv`` field picks the kernel route as in training).
+    g_params
+        Trained generator params (e.g. restored via
+        `train/checkpoint.restore_gan_generator`).
+    buckets
+        Ascending fixed batch sizes.  Each gets exactly ONE compiled
+        program (``compile_count`` tracks this); work is padded to the
+        smallest bucket that fits the queue's remaining events.
+    mesh
+        Optional device mesh — bucket batches are sharded over its data
+        axes (`sharding.batch_axes`), params replicated, exactly the
+        training engine's pure-DP placement.  Every bucket must divide
+        by the number of data shards.
+    policy_name
+        Precision policy (`substrate/precision.get_policy`): noise and the
+        conv stacks run in ``compute_dtype``, returned images are cast to
+        ``output_dtype``.
+    gate
+        Optional :class:`PhysicsGate`; fed once per step, drains itself
+        once per window.
+    """
+
+    def __init__(self, cfg, g_params, *, buckets: Sequence[int] = (8, 32, 128),
+                 mesh=None, policy_name: str = "f32",
+                 gate: Optional[PhysicsGate] = None):
+        self.cfg = cfg
+        self.policy = get_policy(policy_name)
+        self.mesh = mesh
+        axes = sharding.batch_axes(mesh) if mesh is not None else None
+        self.axes: tuple = tuple(axes) if axes else ()
+        self.n_shards = 1
+        for a in self.axes:
+            self.n_shards *= mesh.shape[a]
+        self.buckets = tuple(sorted(int(b) for b in buckets))
+        if not self.buckets:
+            raise ValueError("need at least one batch bucket")
+        for b in self.buckets:
+            if b <= 0 or b % self.n_shards:
+                raise ValueError(
+                    f"bucket {b} must be positive and divisible by the "
+                    f"{self.n_shards} data shards")
+        if mesh is not None:
+            self.params = jax.device_put(g_params, NamedSharding(mesh, P()))
+        else:
+            self.params = g_params
+        self.gate = gate
+        self._compiled: Dict[int, object] = {}
+        self.compile_count = 0
+        self._queue: List[_Cursor] = []
+        self._finished: List[SimRequest] = []
+        self.stats = {"steps": 0, "events_generated": 0, "padded_events": 0,
+                      "device_transfers": 0,
+                      "bucket_steps": {b: 0 for b in self.buckets}}
+
+    # -- host API ----------------------------------------------------------
+
+    def warmup(self) -> None:
+        """Pre-compile every bucket's program so the first requests don't
+        pay compile time (deployments call this before opening traffic)."""
+        for b in self.buckets:
+            if b not in self._compiled:
+                self._compiled[b] = self._compile_bucket(b)
+
+    def submit(self, req: SimRequest) -> None:
+        if req.n_events <= 0:
+            raise ValueError(f"request {req.rid}: n_events must be positive")
+        self._queue.append(_Cursor(req, time.perf_counter()))
+
+    def run(self, max_steps: int = 100_000) -> List[SimRequest]:
+        """Drain the queue (or stop after ``max_steps`` bucket steps);
+        returns every request finished so far, FIFO order."""
+        for _ in range(max_steps):
+            if not self._queue:
+                break
+            bucket, inputs, spans, n_real = self._pack()
+            img, sums = self._dispatch(bucket, inputs)
+            if self.gate is not None:
+                self.gate.update(sums, n_real)
+            self.stats["padded_events"] += bucket - n_real
+            for cur, row, take in spans:
+                cur.chunks.append(img[row:row + take])
+                if cur.next_ev == cur.req.n_events:
+                    self._finalize(cur)
+            self._queue = [c for c in self._queue if not c.req.done]
+        return list(self._finished)
+
+    def generate_events(self, primary_energy: float, n_events: int,
+                        seed: int = 0) -> np.ndarray:
+        """One-shot convenience: serve a single request, return its images."""
+        rid = len(self._finished) + len(self._queue)
+        req = SimRequest(rid=rid, primary_energy=primary_energy,
+                         n_events=n_events, seed=seed)
+        self.submit(req)
+        self.run()
+        return req.images
+
+    # -- packing -----------------------------------------------------------
+
+    def _pick_bucket(self, remaining: int) -> int:
+        for b in self.buckets:
+            if b >= remaining:
+                return b
+        return self.buckets[-1]
+
+    def _pack(self):
+        """Fill one bucket batch from the queue head (FIFO, requests may
+        split across steps or share one).  Padded rows carry a benign
+        mid-range E_p and mask=0 so they never reach the gate or a user."""
+        remaining = sum(c.req.n_events - c.next_ev for c in self._queue)
+        bucket = self._pick_bucket(remaining)
+        seeds = np.zeros((bucket,), np.int32)
+        ev_idx = np.zeros((bucket,), np.int32)
+        e_p = np.full((bucket,), 100.0, np.float32)
+        theta = np.full((bucket,), np.pi / 2, np.float32)
+        mask = np.zeros((bucket,), np.float32)
+        spans = []
+        row = 0
+        for cur in self._queue:
+            if row == bucket:
+                break
+            take = min(bucket - row, cur.req.n_events - cur.next_ev)
+            if take == 0:
+                continue
+            seeds[row:row + take] = cur.req.seed
+            ev_idx[row:row + take] = np.arange(cur.next_ev,
+                                               cur.next_ev + take)
+            e_p[row:row + take] = cur.req.primary_energy
+            theta[row:row + take] = cur.req.theta
+            mask[row:row + take] = 1.0
+            spans.append((cur, row, take))
+            cur.next_ev += take
+            row += take
+        return bucket, (seeds, ev_idx, e_p, theta, mask), spans, row
+
+    # -- compiled steps ----------------------------------------------------
+
+    def _make_step(self):
+        cfg, latent = self.cfg, self.cfg.latent_dim
+        compute = self.policy.compute_dtype
+        output = self.policy.output_dtype
+
+        def step(params, req_seed, ev_idx, e_p, theta, mask):
+            def ev_key(s, i):
+                return jax.random.fold_in(
+                    jax.random.fold_in(jax.random.key(0), s), i)
+
+            keys = jax.vmap(ev_key)(req_seed, ev_idx)
+            noise = jax.vmap(
+                lambda k: jax.random.normal(k, (latent,), compute))(keys)
+            img = gan.generate(params, noise, e_p, theta, cfg)
+            sums = validation.profile_sums(img, e_p, mask)
+            return img.astype(output), sums
+
+        return step
+
+    def _bucket_shardings(self):
+        """(replicated, batch-sharded-1d, batch-sharded-image) shardings."""
+        rep = NamedSharding(self.mesh, P())
+        ax = self.axes if len(self.axes) > 1 else self.axes[0]
+        vec = NamedSharding(self.mesh, P(ax))
+        img = NamedSharding(self.mesh, P(ax, None, None, None, None))
+        return rep, vec, img
+
+    def _compile_bucket(self, bucket: int):
+        """ONE AOT-compiled program per bucket: lower + compile now, so
+        serving never hides a recompile inside a request."""
+        step = self._make_step()
+        if self.mesh is not None and self.axes:
+            rep, vec, img = self._bucket_shardings()
+            fn = jax.jit(step,
+                         in_shardings=(rep, vec, vec, vec, vec, vec),
+                         out_shardings=(img, rep))
+        else:
+            fn = jax.jit(step)
+        sds = jax.ShapeDtypeStruct
+        compiled = fn.lower(
+            self.params,
+            sds((bucket,), jnp.int32), sds((bucket,), jnp.int32),
+            sds((bucket,), jnp.float32), sds((bucket,), jnp.float32),
+            sds((bucket,), jnp.float32)).compile()
+        self.compile_count += 1
+        return compiled
+
+    def _place(self, arrs):
+        if self.mesh is not None and self.axes:
+            _, vec, _ = self._bucket_shardings()
+            return tuple(jax.device_put(a, vec) for a in arrs)
+        return tuple(jnp.asarray(a) for a in arrs)
+
+    def _dispatch(self, bucket: int, inputs):
+        if bucket not in self._compiled:
+            self._compiled[bucket] = self._compile_bucket(bucket)
+        img, sums = self._compiled[bucket](self.params, *self._place(inputs))
+        self.stats["steps"] += 1
+        self.stats["bucket_steps"][bucket] += 1
+        return img, sums
+
+    def _finalize(self, cur: _Cursor) -> None:
+        dev = (cur.chunks[0] if len(cur.chunks) == 1
+               else jnp.concatenate(cur.chunks, axis=0))
+        cur.req.images = np.asarray(dev)   # the ONE transfer per request
+        cur.chunks = []
+        self.stats["device_transfers"] += 1
+        self.stats["events_generated"] += cur.req.n_events
+        cur.req.latency_s = time.perf_counter() - cur.t0
+        cur.req.done = True
+        self._finished.append(cur.req)

@@ -54,3 +54,22 @@ def restore(path: str, template):
 def latest_step(path: str) -> int:
     with open(os.path.join(path, "manifest.json")) as f:
         return json.load(f)["step"]
+
+
+def manifest(path: str) -> dict:
+    """The checkpoint's manifest (step, keys, caller-supplied extra)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)
+
+
+def restore_gan_generator(path: str, cfg):
+    """Load trained 3DGAN generator params for serving.
+
+    The train->serve handoff: `launch/train.py --ckpt` saves
+    ``state.g_params``; this restores them against a freshly-initialised
+    template for ``cfg`` (shapes must match — i.e. the serving config must
+    be the training config), ready for `serve.simulate.SimulateEngine`.
+    """
+    from repro.core import gan
+    template = gan.init_generator(jax.random.key(0), cfg)
+    return restore(path, template)

@@ -1,0 +1,227 @@
+"""Fast-simulation serving engine: bucket packing/masking must hand back
+exactly the requested events, compilation must be one program per bucket,
+generation must be bit-identical across packings and across a checkpoint
+round-trip, and the rolling physics gate must count only real (unmasked)
+events.  Plus the ServeEngine cache-dtype-follows-policy fix."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base as config_base, calo3dgan
+from repro.core import adversarial, gan, validation
+from repro.data.calo import CaloSimulator, CaloSpec
+from repro.launch.mesh import make_dev_mesh
+from repro.optim import optimizers as opt_lib
+from repro.serve.simulate import PhysicsGate, SimRequest, SimulateEngine
+from repro.train import checkpoint as ckpt_lib
+
+CFG = calo3dgan.bench()
+
+
+@pytest.fixture(scope="module")
+def g_params():
+    return gan.init_generator(jax.random.key(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def mc_reference():
+    mc = next(CaloSimulator(CaloSpec(image_shape=CFG.image_shape),
+                            seed=0).batches(64))
+    return validation.reference_profiles(mc["image"], mc["e_p"])
+
+
+def _engine(g_params, buckets=(4, 16), gate=None):
+    return SimulateEngine(CFG, g_params, buckets=buckets,
+                          mesh=make_dev_mesh(), gate=gate)
+
+
+# ---------------------------------------------------------------------------
+# bucket packing / masking
+# ---------------------------------------------------------------------------
+
+
+def test_odd_request_sizes_get_exactly_n_events(g_params):
+    """Non-bucket-aligned sizes (3, 5, 17, 1) span padding, bucket sharing
+    and multi-step requests — each must get back exactly n_events."""
+    eng = _engine(g_params)
+    sizes = [3, 5, 17, 1]
+    for rid, n in enumerate(sizes):
+        eng.submit(SimRequest(rid=rid, primary_energy=100.0 + rid,
+                              n_events=n, seed=rid))
+    done = eng.run()
+    assert [r.rid for r in sorted(done, key=lambda r: r.rid)] == [0, 1, 2, 3]
+    for r, n in zip(sorted(done, key=lambda r: r.rid), sizes):
+        assert r.done and r.images.shape == (n, *CFG.image_shape, 1)
+        assert np.all(np.isfinite(r.images))
+        assert np.all(r.images >= 0)          # softplus output
+    assert eng.stats["events_generated"] == sum(sizes)
+    # one device->host drain per request, never per step
+    assert eng.stats["device_transfers"] == len(sizes)
+
+
+def test_one_compiled_program_per_bucket(g_params):
+    """Many request shapes, ONE compile per bucket actually used."""
+    eng = _engine(g_params, buckets=(4, 16))
+    for rid, n in enumerate([1, 2, 3, 4]):     # all fit the 4-bucket
+        eng.submit(SimRequest(rid=rid, primary_energy=50.0, n_events=n,
+                              seed=rid))
+        eng.run()
+    assert eng.compile_count == 1
+    eng.submit(SimRequest(rid=9, primary_energy=50.0, n_events=30, seed=9))
+    eng.run()
+    assert eng.compile_count == 2              # the 16-bucket, once
+    for rid, n in enumerate([7, 19, 33], start=10):
+        eng.submit(SimRequest(rid=rid, primary_energy=50.0, n_events=n,
+                              seed=rid))
+    eng.run()
+    assert eng.compile_count == 2              # nothing new to compile
+    assert eng.stats["bucket_steps"][4] > 0
+    assert eng.stats["bucket_steps"][16] > 0
+
+
+def test_warmup_precompiles_all_buckets(g_params):
+    eng = _engine(g_params, buckets=(4, 16))
+    eng.warmup()
+    assert eng.compile_count == 2
+    eng.warmup()                               # idempotent
+    assert eng.compile_count == 2
+    eng.submit(SimRequest(rid=0, primary_energy=80.0, n_events=5, seed=0))
+    eng.run()
+    assert eng.compile_count == 2
+
+
+def test_bucket_validation_errors(g_params):
+    with pytest.raises(ValueError):
+        SimulateEngine(CFG, g_params, buckets=())
+    with pytest.raises(ValueError):
+        SimulateEngine(CFG, g_params, buckets=(0, 8))
+    eng = _engine(g_params)
+    with pytest.raises(ValueError):
+        eng.submit(SimRequest(rid=0, primary_energy=10.0, n_events=0))
+
+
+# ---------------------------------------------------------------------------
+# determinism: packing invariance + checkpoint round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_generation_bit_identical_across_packings(g_params):
+    """Per-event RNG keys make a request's showers independent of which
+    other requests shared its bucket batch."""
+    alone = _engine(g_params).generate_events(200.0, 5, seed=7)
+    eng = _engine(g_params)
+    eng.submit(SimRequest(rid=0, primary_energy=200.0, n_events=5, seed=7))
+    eng.submit(SimRequest(rid=1, primary_energy=40.0, n_events=9, seed=8))
+    done = {r.rid: r for r in eng.run()}
+    assert np.array_equal(alone, done[0].images)
+
+
+def test_checkpoint_roundtrip_bit_identical_generation(g_params, tmp_path):
+    """Save trained generator params, restore them through the serving
+    loader, and require bit-identical showers vs the in-process params."""
+    g_opt, d_opt = opt_lib.rmsprop(2e-4), opt_lib.rmsprop(2e-4)
+    state = adversarial.init_state(jax.random.key(1), CFG, g_opt, d_opt)
+    fused = jax.jit(adversarial.make_fused_step(CFG, g_opt, d_opt))
+    sim = CaloSimulator(CaloSpec(image_shape=CFG.image_shape), seed=1)
+    it = sim.batches(8)
+    for i in range(2):
+        b = {k: jnp.asarray(v) for k, v in next(it).items()}
+        state, _ = fused(state, b, jax.random.key(i + 2))
+
+    ckpt = str(tmp_path / "gan")
+    ckpt_lib.save(ckpt, state.g_params, step=2, extra={"kind": "gan_generator"})
+    restored = ckpt_lib.restore_gan_generator(ckpt, CFG)
+
+    in_proc = _engine(state.g_params).generate_events(250.0, 11, seed=3)
+    from_ckpt = _engine(restored).generate_events(250.0, 11, seed=3)
+    assert in_proc.shape == (11, *CFG.image_shape, 1)
+    assert np.array_equal(in_proc, from_ckpt)
+
+
+# ---------------------------------------------------------------------------
+# physics gate
+# ---------------------------------------------------------------------------
+
+
+def test_gate_counts_only_real_events(g_params, mc_reference):
+    """Padded bucket rows must not reach the gate: window counts add up to
+    exactly the requested events despite padding on every step."""
+    gate = PhysicsGate(mc_reference, window=8)
+    eng = _engine(g_params, gate=gate)
+    sizes = [3, 5, 17, 1]                      # 26 events, heavy padding
+    for rid, n in enumerate(sizes):
+        eng.submit(SimRequest(rid=rid, primary_energy=120.0, n_events=n,
+                              seed=rid))
+    eng.run()
+    gate.flush()
+    assert gate.reports                         # windows drained during run
+    assert sum(rep["count"] for rep in gate.reports) == sum(sizes)
+    for rep in gate.reports:
+        for k in ("longitudinal_kl", "transverse_x_kl", "transverse_y_kl",
+                  "response_rel_err"):
+            assert np.isfinite(rep[k]) and rep[k] >= 0
+    assert gate.flush() is None                 # nothing pending
+
+
+def test_gate_profiles_match_host_validation(g_params):
+    """The gate's masked on-device sums must reproduce the host-side
+    profile functions over the same (unpadded) events."""
+    imgs = jnp.asarray(np.random.default_rng(0).gamma(
+        2.0, 1.0, size=(6, *CFG.image_shape, 1)).astype(np.float32))
+    e_p = jnp.asarray(np.linspace(50, 400, 6, dtype=np.float32))
+    mask = jnp.asarray(np.array([1, 1, 1, 1, 0, 0], np.float32))
+    sums = jax.device_get(validation.profile_sums(imgs, e_p, mask))
+    sub = np.asarray(imgs)[:4]
+    for name, fn in (("longitudinal", validation.longitudinal_profile),
+                     ("transverse_x",
+                      lambda im: validation.transverse_profile(im, "x")),
+                     ("transverse_y",
+                      lambda im: validation.transverse_profile(im, "y"))):
+        prof = sums[name] / sums[name].sum()
+        np.testing.assert_allclose(prof, fn(sub), rtol=1e-5)
+    assert sums["count"] == 4
+    np.testing.assert_allclose(
+        sums["e_cal"] / sums["e_p"],
+        np.sum(sub) / np.sum(np.asarray(e_p)[:4]), rtol=1e-5)
+    # response estimator is the UNWEIGHTED per-event mean, matching
+    # energy_response(...).mean() in the training-time report
+    np.testing.assert_allclose(
+        sums["response"] / sums["count"],
+        validation.energy_response(sub, np.asarray(e_p)[:4]).mean(),
+        rtol=1e-5)
+
+
+def test_gate_drift_detection(g_params, mc_reference):
+    gate = PhysicsGate(mc_reference, window=4)
+    eng = _engine(g_params, gate=gate)
+    eng.generate_events(300.0, 8, seed=0)
+    gate.flush()
+    assert gate.drifted(max_kl=0.0)            # untrained G always "drifts"
+    assert not gate.drifted(max_kl=1e9)
+
+
+# ---------------------------------------------------------------------------
+# ServeEngine cache dtype follows the precision policy (regression)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy_name,expect", [("f32", jnp.float32),
+                                                ("bf16", jnp.bfloat16)])
+def test_serve_engine_cache_dtype_follows_policy(policy_name, expect):
+    from repro.models import api
+    from repro.serve.engine import ServeEngine
+
+    cfg = config_base.reduced_config("qwen2-1.5b")
+    model = api.get_model(cfg)
+    params = model.init(jax.random.key(0), cfg)
+    eng = ServeEngine(cfg, params, slots=2, max_len=16,
+                      policy_name=policy_name)
+    assert eng.cache_dtype == expect
+    floats = [l for l in jax.tree.leaves(eng.cache)
+              if jnp.issubdtype(l.dtype, jnp.floating)]
+    assert floats and all(l.dtype == expect for l in floats)
+    eng._zero_slot(0)                          # refill keeps the dtype
+    floats = [l for l in jax.tree.leaves(eng.cache)
+              if jnp.issubdtype(l.dtype, jnp.floating)]
+    assert all(l.dtype == expect for l in floats)

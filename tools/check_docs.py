@@ -1,0 +1,67 @@
+"""Docs hygiene gate (CI: the docs-and-examples job).
+
+Two checks, both fail-fast with a non-zero exit:
+
+1. every module under src/repro has a module docstring (the repo's API
+   surface is documented at module granularity — see README / paper_map);
+2. every relative markdown link in docs/*.md and README.md resolves to a
+   real file in the repo (external http(s) links and pure #anchors are
+   skipped).
+
+  python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+# [text](target) — target captured up to the closing paren; images included
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def missing_docstrings() -> list:
+    bad = []
+    for p in sorted((ROOT / "src" / "repro").rglob("*.py")):
+        try:
+            tree = ast.parse(p.read_text())
+        except SyntaxError as e:
+            bad.append(f"{p.relative_to(ROOT)}: SYNTAX ERROR {e}")
+            continue
+        if not ast.get_docstring(tree):
+            bad.append(f"{p.relative_to(ROOT)}: missing module docstring")
+    return bad
+
+
+def broken_links() -> list:
+    bad = []
+    files = sorted((ROOT / "docs").glob("*.md")) + [ROOT / "README.md"]
+    for md in files:
+        for m in _LINK.finditer(md.read_text()):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            if not (md.parent / path).exists():
+                bad.append(f"{md.relative_to(ROOT)}: broken link -> {target}")
+    return bad
+
+
+def main() -> int:
+    problems = missing_docstrings() + broken_links()
+    for p in problems:
+        print(f"FAIL {p}")
+    if problems:
+        print(f"\n{len(problems)} docs problem(s)")
+        return 1
+    n_mod = len(list((ROOT / "src" / "repro").rglob("*.py")))
+    print(f"docs OK: {n_mod} modules documented, all markdown links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
