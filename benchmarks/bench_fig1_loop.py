@@ -10,10 +10,15 @@ baseline against BOTH loop strategies of the unified engine
 - custom:  shard_map, explicit per-device batches + psum gradient mean
 
 and report the host-init share — the quantity that blows up in the paper's
-left/right panels.
+left/right panels.  ``--precision`` adds a mixed-precision row: the SAME
+builtin fused loop with the policy's compute dtype threaded through the
+whole adversarial step (conv stacks + generator inputs at bf16, f32
+master params / losses / optimizer state), so the JSON records what the
+precision policy buys on top of the loop fusion.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -25,12 +30,13 @@ from repro.core import adversarial
 from repro.data.calo import CaloSimulator, CaloSpec
 from repro.launch.mesh import make_dev_mesh
 from repro.optim import optimizers as opt_lib
+from repro.substrate.precision import get_policy
 from repro.train import engine as engine_lib
 
 
-def _time_engine_loop(loop, cfg, batch, steps, mesh):
+def _time_engine_loop(loop, cfg, batch, steps, mesh, policy=None):
     task = engine_lib.gan_task(cfg, opt_lib.rmsprop(1e-4),
-                               opt_lib.rmsprop(1e-4))
+                               opt_lib.rmsprop(1e-4), policy=policy)
     eng = engine_lib.Engine(mesh, loop, dp_axes=tuple(mesh.axis_names),
                             donate=False)
     state = eng.init_state(task, jax.random.key(0))
@@ -47,10 +53,11 @@ def _time_engine_loop(loop, cfg, batch, steps, mesh):
     return (time.perf_counter() - t0) / steps
 
 
-def run(batches=(8, 16, 32), steps=2, reduced=True):
+def run(batches=(8, 16, 32), steps=2, reduced=True, precision="f32"):
     cfg = calo3dgan.bench() if reduced else calo3dgan.config()
     g_opt = opt_lib.rmsprop(1e-4)
     d_opt = opt_lib.rmsprop(1e-4)
+    policy = get_policy(precision) if precision != "f32" else None
     sim = CaloSimulator(CaloSpec(image_shape=cfg.image_shape), seed=0)
     mesh = make_dev_mesh(data=len(jax.devices()))
     rows = []
@@ -75,24 +82,40 @@ def run(batches=(8, 16, 32), steps=2, reduced=True):
         t_builtin = _time_engine_loop("builtin", cfg, batch, steps, mesh)
         t_custom = _time_engine_loop("custom", cfg, batch, steps, mesh)
 
-        rows.append({"global_batch": B,
-                     "naive_ms": 1e3 * t_naive,
-                     "builtin_ms": 1e3 * t_builtin,
-                     "custom_ms": 1e3 * t_custom,
-                     "host_init_ms": 1e3 * t_host,
-                     "speedup": t_naive / t_builtin})
+        row = {"global_batch": B,
+               "naive_ms": 1e3 * t_naive,
+               "builtin_ms": 1e3 * t_builtin,
+               "custom_ms": 1e3 * t_custom,
+               "host_init_ms": 1e3 * t_host,
+               "speedup": t_naive / t_builtin}
+        if policy is not None:
+            t_mixed = _time_engine_loop("builtin", cfg, batch, steps, mesh,
+                                        policy=policy)
+            row[f"builtin_{precision}_ms"] = 1e3 * t_mixed
+            row[f"{precision}_speedup"] = t_builtin / t_mixed
+        rows.append(row)
     return rows
 
 
-def main():
-    rows = run()
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--precision", default="bf16",
+                    help="mixed-precision row for the builtin loop "
+                         "(f32 disables it)")
+    ap.add_argument("--steps", type=int, default=2)
+    args = ap.parse_args(argv)
+    rows = run(steps=args.steps, precision=args.precision)
     print("bench_fig1_loop: naive vs engine builtin/custom adversarial step")
+    extra = (f" {'builtin_' + args.precision + '_ms':>16}"
+             if args.precision != "f32" else "")
     print(f"{'B':>5} {'naive_ms':>10} {'builtin_ms':>11} {'custom_ms':>10} "
-          f"{'host_ms':>9} {'speedup':>8}")
+          f"{'host_ms':>9} {'speedup':>8}" + extra)
     for r in rows:
+        mixed = (f" {r[f'builtin_{args.precision}_ms']:>16.1f}"
+                 if args.precision != "f32" else "")
         print(f"{r['global_batch']:>5} {r['naive_ms']:>10.1f} "
               f"{r['builtin_ms']:>11.1f} {r['custom_ms']:>10.1f} "
-              f"{r['host_init_ms']:>9.2f} {r['speedup']:>8.2f}")
+              f"{r['host_init_ms']:>9.2f} {r['speedup']:>8.2f}" + mixed)
     # the paper's claim: host-init time grows ~linearly with global batch
     h = [r["host_init_ms"] for r in rows]
     growth = h[-1] / max(h[0], 1e-9)

@@ -10,17 +10,26 @@ every strided conv of the discriminator — for both routes:
   trajectory and become meaningful on the TPU target.
 - ``lax``: XLA's conv_general_dilated / conv_transpose (the oracle).
 
+``--precision`` selects the operand dtype (the mixed-precision policy's
+compute dtype; the kernels keep their f32 VMEM accumulators either way).
+The ``tile_rows`` section is the autotuner's report card: each layer is
+timed on the Pallas route with the HEURISTIC default tiles at f32 —
+the pre-autotune configuration — against the AUTOTUNED tiles at
+``--precision`` (tuned via `kernels/conv3d/tiles.autotune_signature`,
+persisted under results/autotune/), and the summary aggregates the
+end-to-end speedup the autotuner + precision policy bought.
+
 Writes machine-readable results to results/BENCH_kernel_conv3d.json.
 
   PYTHONPATH=src python -m benchmarks.bench_kernel_conv3d \
-      [--config bench|reduced|full] [--batch 2] [--steps 3]
+      [--config bench|reduced|full] [--batch 2] [--steps 3] \
+      [--precision bf16] [--no-tile-rows]
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
-import time
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +39,8 @@ from repro.configs import calo3dgan
 from repro.kernels.conv3d import (conv3d_bias_act, conv3d_bias_act_ref,
                                   conv3d_transpose_bias_act,
                                   conv3d_transpose_bias_act_ref)
+from repro.kernels.conv3d import tiles as tiles_lib
+from repro.substrate.precision import get_policy
 
 HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 OUT_PATH = os.path.join(HERE, "results", "BENCH_kernel_conv3d.json")
@@ -54,20 +65,36 @@ def layer_shapes(cfg):
     return shapes
 
 
-def _timed(fn, args, steps):
-    out = fn(*args)                       # warmup / compile
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(steps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / steps
+def _timed(fn, args, steps, repeats=3):
+    """Min-of-repeats per-step time — the autotuner's clock
+    (`tiles.time_min_of_repeats`), so recorded numbers and tuning
+    winners are measured identically."""
+    return tiles_lib.time_min_of_repeats(fn, args, steps, repeats)
 
 
-def bench_layer(name, kind, spatial, ci, co, stride, batch, steps, rng):
-    x = jnp.asarray(rng.normal(0, 1, (batch, *spatial, ci)), jnp.float32)
-    w = jnp.asarray(rng.normal(0, 0.1, (3, 3, 3, ci, co)), jnp.float32)
-    b = jnp.zeros((co,), jnp.float32)
+def _layer_args(spatial, ci, co, batch, rng, dtype):
+    x = jnp.asarray(rng.normal(0, 1, (batch, *spatial, ci)), dtype)
+    w = jnp.asarray(rng.normal(0, 0.1, (3, 3, 3, ci, co)), dtype)
+    b = jnp.zeros((co,), dtype)
+    return x, w, b
+
+
+def _time_pallas(kind, stride, args, steps):
+    op = conv3d_transpose_bias_act if kind == "conv_t" else conv3d_bias_act
+    fwd = jax.jit(lambda x_, w_, b_: op(x_, w_, b_, stride))
+    # loss math in f32 as the GAN step does (core/gan.disc_loss casts
+    # logits/sums to f32 before the loss regardless of compute dtype)
+    fwdbwd = jax.jit(jax.grad(
+        lambda x_, w_, b_: jnp.sum(
+            op(x_, w_, b_, stride).astype(jnp.float32) ** 2),
+        argnums=(0, 1)))
+    return (1e3 * _timed(fwd, args, steps),
+            1e3 * _timed(fwdbwd, args, steps))
+
+
+def bench_layer(name, kind, spatial, ci, co, stride, batch, steps, rng,
+                dtype):
+    args = _layer_args(spatial, ci, co, batch, rng, dtype)
     ops = {
         "pallas": (conv3d_transpose_bias_act if kind == "conv_t"
                    else conv3d_bias_act),
@@ -78,24 +105,105 @@ def bench_layer(name, kind, spatial, ci, co, stride, batch, steps, rng):
            "ci": ci, "co": co, "stride": stride}
     for route, op in ops.items():
         fwd = jax.jit(lambda x_, w_, b_, op=op: op(x_, w_, b_, stride))
-        row[f"{route}_fwd_ms"] = 1e3 * _timed(fwd, (x, w, b), steps)
+        row[f"{route}_fwd_ms"] = 1e3 * _timed(fwd, args, steps)
         fwdbwd = jax.jit(jax.grad(
-            lambda x_, w_, b_, op=op: jnp.sum(op(x_, w_, b_, stride) ** 2),
+            lambda x_, w_, b_, op=op: jnp.sum(
+                op(x_, w_, b_, stride).astype(jnp.float32) ** 2),
             argnums=(0, 1)))
-        row[f"{route}_fwdbwd_ms"] = 1e3 * _timed(fwdbwd, (x, w, b), steps)
+        row[f"{route}_fwdbwd_ms"] = 1e3 * _timed(fwdbwd, args, steps)
     row["fwd_speedup"] = row["lax_fwd_ms"] / row["pallas_fwd_ms"]
     row["fwdbwd_speedup"] = row["lax_fwdbwd_ms"] / row["pallas_fwdbwd_ms"]
     return row
 
 
-def run(config="bench", batch=2, steps=3, seed=0):
+def _layer_sigs(kind, spatial, ci, co, stride, dtype):
+    """The fwd + bwd tile signatures one layer's step hits."""
+    fwd = tiles_lib.signature(kind, spatial, ci, co, 3, stride, dtype)
+    return [fwd] + tiles_lib._bwd_signatures(kind, tuple(spatial), ci, co,
+                                             3, stride, dtype)
+
+
+def bench_layer_tiles(name, kind, spatial, ci, co, stride, batch, steps,
+                      rng, precision, autotune_steps=2):
+    """Autotuned-vs-default-tile row: the PRE-PR configuration (f32
+    operands, heuristic default tiles) against the tuned one (compute
+    dtype of ``precision``, autotuned tiles for fwd AND bwd)."""
+    policy = get_policy(precision)
+    dtype = policy.compute_dtype
+    snapshot = dict(tiles_lib._REGISTRY)
+    row = {"layer": name, "kind": kind, "ci": ci, "co": co,
+           "stride": stride, "precision": precision}
+    try:
+        # -- baseline: pin heuristic defaults for every involved sig ----
+        pinned = _layer_sigs(kind, spatial, ci, co, stride, jnp.float32)
+        for sig in pinned:
+            tiles_lib.register_tiles(sig, tiles_lib.default_tiles(sig))
+        args32 = _layer_args(spatial, ci, co, batch, rng, jnp.float32)
+        f32_fwd, f32_fwdbwd = _time_pallas(kind, stride, args32, steps)
+        for sig in pinned:
+            # unpin BEFORE autotuning: autotune_signature persists the
+            # whole registry, and these heuristic baselines must not
+            # overwrite genuinely tuned f32 cache entries
+            tiles_lib._REGISTRY.pop(sig, None)
+
+        # -- tuned: real measurements via the autotune driver ------------
+        measured = 0
+        for sig in _layer_sigs(kind, spatial, ci, co, stride, dtype):
+            best, n = tiles_lib.autotune_signature(sig,
+                                                   steps=autotune_steps)
+            measured += n
+            if sig[0] == kind:            # the fwd signature's winner
+                row["tiles"] = {"bn": best.bn, "fuse_taps": best.fuse_taps}
+        args_p = _layer_args(spatial, ci, co, batch, rng, dtype)
+        at_fwd, at_fwdbwd = _time_pallas(kind, stride, args_p, steps)
+    finally:
+        tiles_lib._REGISTRY.clear()
+        tiles_lib._REGISTRY.update(snapshot)
+    row.update({
+        "default_f32_fwd_ms": f32_fwd, "default_f32_fwdbwd_ms": f32_fwdbwd,
+        "autotuned_fwd_ms": at_fwd, "autotuned_fwdbwd_ms": at_fwdbwd,
+        "autotune_measurements": measured,
+        "fwd_speedup": f32_fwd / at_fwd,
+        "fwdbwd_speedup": f32_fwdbwd / at_fwdbwd,
+    })
+    return row
+
+
+def run(config="bench", batch=2, steps=3, seed=0, precision="f32"):
     cfg = {"bench": calo3dgan.bench, "reduced": calo3dgan.reduced,
            "full": calo3dgan.config}[config]()
+    dtype = get_policy(precision).compute_dtype
     rng = np.random.default_rng(seed)
     rows = []
     for spec in layer_shapes(cfg):
-        rows.append(bench_layer(*spec, batch=batch, steps=steps, rng=rng))
+        rows.append(bench_layer(*spec, batch=batch, steps=steps, rng=rng,
+                                dtype=dtype))
     return rows
+
+
+def run_tiles(config="bench", batch=2, steps=3, seed=0, precision="bf16"):
+    cfg = {"bench": calo3dgan.bench, "reduced": calo3dgan.reduced,
+           "full": calo3dgan.config}[config]()
+    rng = np.random.default_rng(seed)
+    return [bench_layer_tiles(*spec, batch=batch, steps=steps, rng=rng,
+                              precision=precision)
+            for spec in layer_shapes(cfg)]
+
+
+def tile_summary(tile_rows, precision):
+    tot_def = sum(r["default_f32_fwdbwd_ms"] for r in tile_rows)
+    tot_at = sum(r["autotuned_fwdbwd_ms"] for r in tile_rows)
+    tot_def_f = sum(r["default_f32_fwd_ms"] for r in tile_rows)
+    tot_at_f = sum(r["autotuned_fwd_ms"] for r in tile_rows)
+    return {
+        "precision": precision,
+        "default_f32_fwd_ms_total": tot_def_f,
+        "autotuned_fwd_ms_total": tot_at_f,
+        "default_f32_fwdbwd_ms_total": tot_def,
+        "autotuned_fwdbwd_ms_total": tot_at,
+        "fwd_speedup": tot_def_f / tot_at_f,
+        "fwdbwd_speedup": tot_def / tot_at,
+    }
 
 
 def write_json(rows, path=OUT_PATH, **meta):
@@ -115,12 +223,18 @@ def main(argv=None):
                     choices=("bench", "reduced", "full"))
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--steps", type=int, default=3)
+    ap.add_argument("--precision", default="bf16",
+                    help="compute dtype for the route rows and the "
+                         "autotuned side of the tile rows")
+    ap.add_argument("--no-tile-rows", action="store_true",
+                    help="skip the autotuned-vs-default-tile comparison")
     ap.add_argument("--out", default=OUT_PATH)
     args = ap.parse_args(argv)
-    rows = run(args.config, args.batch, args.steps)
+    rows = run(args.config, args.batch, args.steps,
+               precision=args.precision)
     print(f"bench_kernel_conv3d: Pallas fused vs lax.conv "
           f"({args.config} config, B={args.batch}, "
-          f"backend={jax.default_backend()})")
+          f"precision={args.precision}, backend={jax.default_backend()})")
     hdr = (f"{'layer':>12} {'kind':>7} {'ci':>4} {'co':>4} "
            f"{'pallas_fwd':>11} {'lax_fwd':>9} {'pallas_fb':>10} "
            f"{'lax_fb':>8} {'fb_speedup':>10}")
@@ -130,7 +244,30 @@ def main(argv=None):
               f"{r['pallas_fwd_ms']:>9.1f}ms {r['lax_fwd_ms']:>7.1f}ms "
               f"{r['pallas_fwdbwd_ms']:>8.1f}ms {r['lax_fwdbwd_ms']:>6.1f}ms "
               f"{r['fwdbwd_speedup']:>10.2f}")
-    path = write_json(rows, args.out, config=args.config, batch=args.batch)
+    meta = {"config": args.config, "batch": args.batch,
+            "precision": args.precision}
+    if not args.no_tile_rows:
+        tile_rows = run_tiles(args.config, args.batch, args.steps,
+                              precision=args.precision)
+        summary = tile_summary(tile_rows, args.precision)
+        print(f"\ntile autotuner: {args.precision}+autotuned vs "
+              "f32+default tiles (Pallas route, fwd+bwd)")
+        print(f"{'layer':>12} {'tiles':>18} {'f32_def_fb':>11} "
+              f"{'tuned_fb':>9} {'speedup':>8}")
+        for r in tile_rows:
+            t = r.get("tiles", {})
+            tl = f"bn={t.get('bn', '?')},fuse={t.get('fuse_taps', '?')}"
+            print(f"{r['layer']:>12} {tl:>18} "
+                  f"{r['default_f32_fwdbwd_ms']:>9.1f}ms "
+                  f"{r['autotuned_fwdbwd_ms']:>7.1f}ms "
+                  f"{r['fwdbwd_speedup']:>8.2f}")
+        print(f"{'TOTAL':>12} {'':>18} "
+              f"{summary['default_f32_fwdbwd_ms_total']:>9.1f}ms "
+              f"{summary['autotuned_fwdbwd_ms_total']:>7.1f}ms "
+              f"{summary['fwdbwd_speedup']:>8.2f}")
+        meta["tile_rows"] = tile_rows
+        meta["tile_summary"] = summary
+    path = write_json(rows, args.out, **meta)
     print(f"wrote {path}")
     return rows
 

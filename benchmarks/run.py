@@ -69,13 +69,19 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-subprocess", action="store_true",
                     help="only the in-process benches (single device)")
+    ap.add_argument("--precision", default="bf16",
+                    help="mixed-precision policy passed through to the "
+                         "fig1 loop and conv3d kernel benches, so the "
+                         "BENCH_*.json files record the policy speedup")
     args = ap.parse_args()
 
     failures = []
 
     _banner("Fig.1 — naive vs fused adversarial loop")
     from benchmarks import bench_fig1_loop
-    _run_inproc("fig1_loop", bench_fig1_loop.main, failures)
+    _run_inproc("fig1_loop",
+                lambda: bench_fig1_loop.main(["--precision",
+                                              args.precision]), failures)
 
     _banner("Fig.2 (left/center) — batch-size impact")
     from benchmarks import bench_fig2_batchsize
@@ -102,7 +108,12 @@ def main():
     _banner("Kernel — fused Pallas conv3d vs lax.conv (fwd / fwd+bwd)")
     from benchmarks import bench_kernel_conv3d
     # writes its own BENCH_kernel_conv3d.json with backend/config metadata
-    _run_inproc("kernel_conv3d", lambda: bench_kernel_conv3d.main([]),
+    # + the autotuned-vs-default tile rows; reduced config — the layers
+    # are big enough to time above the container's noise floor
+    _run_inproc("kernel_conv3d",
+                lambda: bench_kernel_conv3d.main(
+                    ["--config", "reduced", "--steps", "5",
+                     "--precision", args.precision]),
                 failures, write=False)
 
     if not args.skip_subprocess:

@@ -59,18 +59,19 @@ def main():
     state = train_briefly(cfg, args.train_steps, args.seed)
     ckpt_dir = tempfile.mkdtemp(prefix="gan_ckpt_")
     ckpt_lib.save(ckpt_dir, state.g_params, step=args.train_steps,
-                  extra={"kind": "gan_generator"})
+                  extra={"kind": "gan_generator", "precision": "f32"})
     print(f"saved generator checkpoint to {ckpt_dir}")
 
-    # -- restore into the serving engine (the production handoff) ---------
-    params = ckpt_lib.restore_gan_generator(ckpt_dir, cfg)
+    # -- restore into the serving engine (the production handoff);
+    #    from_checkpoint also picks up the recorded precision policy ------
     sim = CaloSimulator(CaloSpec(image_shape=cfg.image_shape),
                         seed=args.seed + 1)
     mc = next(sim.batches(max(128, args.gate_window)))
     gate = PhysicsGate(validation.reference_profiles(mc["image"], mc["e_p"]),
                        window=args.gate_window)
     buckets = tuple(int(b) for b in args.buckets.split(","))
-    eng = SimulateEngine(cfg, params, buckets=buckets, gate=gate)
+    eng = SimulateEngine.from_checkpoint(ckpt_dir, cfg, buckets=buckets,
+                                         gate=gate)
     eng.warmup()
 
     # -- serve a mix of odd-sized requests --------------------------------

@@ -26,6 +26,12 @@ class GANConfig:
     # (core/gan.py pallas_conv_enabled); True/False pins it per config.
     # Train steps freeze the resolved value at trace time.
     use_pallas_conv: Optional[bool] = None
+    # Mixed-precision policy name (substrate/precision.get_policy): the
+    # paper's TPU runs train bf16-compute / f32-master.  launch/train.py
+    # --precision and launch/build.build_gan_train(policy_name=...)
+    # override per run; checkpoints record the resolved value so serving
+    # restores showers at the precision the generator trained in.
+    precision: str = "bf16"
 
 
 def config() -> GANConfig:

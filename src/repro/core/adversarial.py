@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.core import gan
 from repro.optim import optimizers as opt_lib
+from repro.substrate import precision as precision_lib
 
 
 def _freeze_pallas_conv(cfg):
@@ -51,14 +52,21 @@ class GANState(NamedTuple):
     g_opt: dict
     d_opt: dict
     step: jax.Array
+    # dynamic loss-scale state (precision_lib.LossScaleState) when the
+    # policy enables it; None keeps the pytree identical to the pre-policy
+    # layout, so old checkpoints and f32 runs are untouched
+    loss_scale: Any = None
 
 
-def init_state(rng, cfg, g_optimizer, d_optimizer) -> GANState:
+def init_state(rng, cfg, g_optimizer, d_optimizer, policy=None) -> GANState:
+    """Master params + optimizer state are ALWAYS f32; ``policy`` only
+    adds the loss-scale state its scaling mode needs."""
     kg, kd = jax.random.split(rng)
     g_params = gan.init_generator(kg, cfg)
     d_params = gan.init_discriminator(kd, cfg)
     return GANState(g_params, d_params, g_optimizer.init(g_params),
-                    d_optimizer.init(d_params), jnp.zeros((), jnp.int32))
+                    d_optimizer.init(d_params), jnp.zeros((), jnp.int32),
+                    precision_lib.init_loss_scale(policy))
 
 
 # ---------------------------------------------------------------------------
@@ -166,8 +174,16 @@ def make_fused_step(cfg, g_optimizer, d_optimizer, mesh=None, policy=None,
     per-device program under shard_map and ``batch`` is already local.
 
     ``policy``: mixed-precision policy (paper §4: bf16 on the MXU).  The
-    conv stacks run in ``policy.compute_dtype``; losses, gradients and
-    optimizer state stay f32 (§Perf G1: halves the memory-bound term).
+    batch AND both networks' params are cast to ``policy.compute_dtype``
+    at phase entry, so every conv (Pallas kernels included — they keep
+    their f32 VMEM accumulators) and every norm runs at compute precision;
+    losses, gradients, master params and optimizer state stay f32 (§Perf
+    G1: halves the memory-bound term).  When ``policy.loss_scale`` is
+    nonzero, each phase's loss is scaled before the backward pass, its
+    UNSCALED reduced gradients are checked for finiteness, and a
+    nonfinite phase SKIPS its optimizer update (params/opt state carried
+    through unchanged) while halving the dynamic scale — the state rides
+    in ``GANState.loss_scale`` (see `substrate/precision.py`).
 
     ``grad_reduce``: applied to the gradients of EVERY phase (D-real,
     D-fake, each G step) before its optimizer update — the engine's
@@ -185,6 +201,9 @@ def make_fused_step(cfg, g_optimizer, d_optimizer, mesh=None, policy=None,
     assert M >= 1, microbatches
     reduce_grads = grad_reduce if grad_reduce is not None else (lambda g: g)
     compute_dtype = policy.compute_dtype if policy is not None else None
+    to_compute = (policy.cast_to_compute if compute_dtype is not None
+                  else (lambda t: t))
+    scaling = policy is not None and bool(policy.loss_scale)
     if mesh is not None:
         from jax.sharding import NamedSharding, PartitionSpec as P
         _axes = tuple(mesh.axis_names)
@@ -242,47 +261,90 @@ def make_fused_step(cfg, g_optimizer, d_optimizer, mesh=None, policy=None,
             lambda x: x.reshape(M, mb, *x.shape[1:]),
             {"image": img, "e_p": e_p, "theta": theta, "ecal": ecal})
 
+        # scaling is only live when the state actually carries the
+        # LossScaleState (a trace-time structure fact), so a state built
+        # without the policy keeps the exact pre-policy program
+        ls = state.loss_scale if scaling else None
+
+        def phase(loss_fn, params, xs, opt_state, optimizer, ls):
+            """One Algorithm-1 phase: accumulate grads, reduce, update.
+
+            Under a scaling policy the loss is multiplied by the dynamic
+            scale before the backward pass; the reduced UNSCALED grads
+            are checked for finiteness (after the psum, so every replica
+            agrees) and a nonfinite phase skips its update entirely.
+            Returns (loss, aux, params, opt_state, ls, finite).
+            """
+            if ls is None:
+                l, aux, g = accum(loss_fn, params, xs)
+                upd, new_opt = optimizer.update(reduce_grads(g), opt_state,
+                                                params)
+                return (l, aux, opt_lib.apply_updates(params, upd), new_opt,
+                        None, jnp.float32(1.0))
+
+            def scaled(p, x):
+                l_, aux_ = loss_fn(p, x)
+                return l_ * ls.scale, aux_
+
+            l, aux, g = accum(scaled, params, xs)
+            g = reduce_grads(precision_lib.unscale(ls, g))
+            finite = precision_lib.all_finite(g)
+            upd, new_opt = optimizer.update(g, opt_state, params)
+            new_params = precision_lib.select_finite(
+                finite, opt_lib.apply_updates(params, upd), params)
+            new_opt = precision_lib.select_finite(finite, new_opt, opt_state)
+            ls2 = precision_lib.next_loss_scale(ls, finite,
+                                                policy.growth_interval)
+            return (l / ls.scale, aux, new_params, new_opt, ls2,
+                    finite.astype(jnp.float32))
+
+        g_params_c = to_compute(state.g_params)   # fake-path G, nondiff
+
         # ---- D on real ------------------------------------------------
         def d_loss_real(dp, x):
-            return gan.disc_loss(dp, x["image"],
+            return gan.disc_loss(to_compute(dp), x["image"],
                                  (x["e_p"], x["theta"], x["ecal"]), cfg,
                                  real=True)
-        d_lr, d_mr, grads = accum(d_loss_real, state.d_params, real)
-        upd, d_opt = d_optimizer.update(reduce_grads(grads), state.d_opt,
-                                        state.d_params)
-        d_params = opt_lib.apply_updates(state.d_params, upd)
+        d_lr, d_mr, d_params, d_opt, ls, fin_r = phase(
+            d_loss_real, state.d_params, real, state.d_opt, d_optimizer, ls)
 
         # ---- D on fake (generation INSIDE the compiled program) -------
         def d_loss_fake(dp, k):
             noise, f_ep, f_th = sample_inputs(k)
-            fake = gan.generate(state.g_params, noise, f_ep, f_th, cfg)
-            return gan.disc_loss(dp, jax.lax.stop_gradient(fake),
+            fake = gan.generate(g_params_c, noise, f_ep, f_th, cfg)
+            return gan.disc_loss(to_compute(dp), jax.lax.stop_gradient(fake),
                                  (f_ep, f_th, f_ep * ecal_frac), cfg,
                                  real=False)
-        d_lf, d_mf, grads = accum(d_loss_fake, d_params, d_keys)
-        upd, d_opt = d_optimizer.update(reduce_grads(grads), d_opt, d_params)
-        d_params = opt_lib.apply_updates(d_params, upd)
+        d_lf, d_mf, d_params, d_opt, ls, fin_f = phase(
+            d_loss_fake, d_params, d_keys, d_opt, d_optimizer, ls)
+
+        d_params_c = to_compute(d_params)         # G-phase D, nondiff
 
         # ---- G twice ---------------------------------------------------
         def one_g(carry, ks):
-            g_params, g_opt = carry
+            g_params, g_opt, ls = carry
 
             def loss(gp, k):
                 noise, f_ep, f_th = sample_inputs(k)
-                return gan.gen_loss(gp, d_params, noise,
+                return gan.gen_loss(to_compute(gp), d_params_c, noise,
                                     (f_ep, f_th, f_ep * ecal_frac), cfg)
-            g_l, _, grads = accum(loss, g_params, ks)
-            upd, g_opt = g_optimizer.update(reduce_grads(grads), g_opt,
-                                            g_params)
-            return (opt_lib.apply_updates(g_params, upd), g_opt), g_l
+            g_l, _, g_params, g_opt, ls, fin = phase(
+                loss, g_params, ks, g_opt, g_optimizer, ls)
+            return (g_params, g_opt, ls), (g_l, fin)
 
-        (g_params, g_opt), g_ls = jax.lax.scan(
-            one_g, (state.g_params, state.g_opt), g_keys)
+        (g_params, g_opt, ls), (g_ls, g_fins) = jax.lax.scan(
+            one_g, (state.g_params, state.g_opt, ls), g_keys)
 
-        new = GANState(g_params, d_params, g_opt, d_opt, state.step + 1)
+        new = GANState(g_params, d_params, g_opt, d_opt, state.step + 1,
+                       ls if scaling else state.loss_scale)
         metrics = {"d_loss_real": d_lr, "d_loss_fake": d_lf,
                    "g_loss": jnp.mean(g_ls), "d_acc_real": d_mr["acc"],
                    "d_acc_fake": d_mf["acc"]}
+        if ls is not None:
+            n_phases = 2.0 + cfg.gen_steps_per_disc
+            metrics["loss_scale"] = ls.scale
+            metrics["nonfinite_skips"] = (
+                n_phases - (fin_r + fin_f + jnp.sum(g_fins)))
         return new, metrics
 
     return fused_step

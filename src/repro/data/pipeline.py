@@ -6,16 +6,23 @@ equivalent implemented here:
 
 - `ShardStore`: fixed-size memmapped .npy shards on disk (the "TF Records"
   analogue — sequential reads, no per-item deserialisation),
-- `prefetch`: a double-buffered iterator that moves the NEXT batch to device
-  (`jax.device_put`, optionally with a NamedSharding) while the CURRENT step
-  is running — host prep and accelerator compute overlap exactly as in the
-  paper's custom loop.
+- `prefetch` / `Prefetcher`: a double-buffered device prefetcher.  The
+  PRODUCER thread issues `jax.device_put` (against the target sharding
+  when given) for batch N+1 while the consumer's dispatched step N runs,
+  so the host->device transfer rides under compute — and because
+  `device_put` is asynchronous, the producer immediately returns to
+  pulling batch N+2 from the host iterator.  The consumer only ever pops
+  finished device arrays off a bounded queue; the time it spends BLOCKED
+  on that queue is exactly the transfer/host time the overlap failed to
+  hide, surfaced as ``Prefetcher.stats["h2d_wait_ms"]`` (the engine
+  re-exposes it per logging window in ``Engine.last_fit_stats``).
 """
 from __future__ import annotations
 
-import collections
 import os
+import queue
 import threading
+import time
 from typing import Iterator, Optional
 
 import jax
@@ -55,33 +62,73 @@ class ShardStore:
                 yield {k: v[idx] for k, v in data.items()}
 
 
-def prefetch(it: Iterator[dict], size: int = 2, sharding=None) -> Iterator[dict]:
-    """Double-buffered host->device prefetch on a background thread."""
-    q: collections.deque = collections.deque()
-    sem = threading.Semaphore(size)
-    done = object()
+class Prefetcher:
+    """Double-buffered device prefetch: producer-side ``device_put``.
 
-    def put(batch):
-        if sharding is not None:
+    The producer thread pulls host batches, places them on device
+    (sharded when ``sharding`` is given) and parks the resulting device
+    arrays in a queue bounded at ``size`` — with ``size=2`` that is
+    classic double buffering: transfer of batch N+1 overlaps the step
+    consuming batch N.  Iterating yields batches in input order.
+
+    ``stats`` (host-side, cheap):
+
+    - ``h2d_wait_ms``  — total time the CONSUMER blocked waiting for a
+      batch, i.e. transfer/host time compute did not hide (0 when the
+      pipeline keeps up);
+    - ``put_ms``       — producer time spent issuing ``device_put``
+      dispatches (not the transfer itself, which is async);
+    - ``batches``      — batches yielded so far.
+
+    Exceptions in the source iterator are re-raised to the consumer.
+    """
+
+    _DONE = object()
+
+    def __init__(self, it: Iterator[dict], size: int = 2, sharding=None):
+        self._q: queue.Queue = queue.Queue(maxsize=max(int(size), 1))
+        self._sharding = sharding
+        self.stats = {"h2d_wait_ms": 0.0, "put_ms": 0.0, "batches": 0}
+        self._thread = threading.Thread(
+            target=self._produce, args=(it,), daemon=True)
+        self._thread.start()
+
+    def _place(self, batch):
+        if self._sharding is not None:
             return jax.tree.map(
-                lambda x, s: jax.device_put(x, s), batch, sharding)
+                lambda x, s: jax.device_put(x, s), batch, self._sharding)
         return jax.tree.map(jax.device_put, batch)
 
-    def producer():
-        for batch in it:
-            sem.acquire()
-            q.append(put(batch))
-        q.append(done)
-
-    t = threading.Thread(target=producer, daemon=True)
-    t.start()
-    while True:
-        while not q:
-            t.join(0.001)
-            if not t.is_alive() and not q:
-                return
-        item = q.popleft()
-        if item is done:
+    def _produce(self, it):
+        try:
+            for batch in it:
+                t0 = time.perf_counter()
+                placed = self._place(batch)
+                self.stats["put_ms"] += 1e3 * (time.perf_counter() - t0)
+                self._q.put(placed)
+        except BaseException as e:        # surface in the consumer
+            self._q.put((self._DONE, e))
             return
-        sem.release()
-        yield item
+        self._q.put((self._DONE, None))
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        t0 = time.perf_counter()
+        item = self._q.get()
+        self.stats["h2d_wait_ms"] += 1e3 * (time.perf_counter() - t0)
+        if isinstance(item, tuple) and len(item) == 2 \
+                and item[0] is self._DONE:
+            self._q.put(item)             # keep raising on repeat next()
+            if item[1] is not None:
+                raise item[1]
+            raise StopIteration
+        self.stats["batches"] += 1
+        return item
+
+
+def prefetch(it: Iterator[dict], size: int = 2,
+             sharding=None) -> Prefetcher:
+    """Double-buffered host->device prefetch on a background thread."""
+    return Prefetcher(it, size=size, sharding=sharding)

@@ -7,13 +7,17 @@ from repro.kernels.conv3d.ops import (ACTIVATIONS, conv3d, conv3d_bias_act,
 from repro.kernels.conv3d.ref import (conv3d_bias_act_ref, conv3d_ref,
                                       conv3d_transpose_bias_act_ref,
                                       conv3d_transpose_ref)
-from repro.kernels.conv3d.tiles import (ConvTiles, autotune, get_tiles,
-                                        register_tiles, signature)
+from repro.kernels.conv3d.tiles import (ConvTiles, autotune,
+                                        autotune_config, autotune_signature,
+                                        get_tiles, load_cache,
+                                        register_tiles, save_cache,
+                                        signature)
 
 __all__ = [
-    "ACTIVATIONS", "ConvTiles", "autotune", "conv3d", "conv3d_bias_act",
+    "ACTIVATIONS", "ConvTiles", "autotune", "autotune_config",
+    "autotune_signature", "conv3d", "conv3d_bias_act",
     "conv3d_bias_act_ref", "conv3d_ref", "conv3d_transpose",
     "conv3d_transpose_bias_act", "conv3d_transpose_bias_act_ref",
     "conv3d_transpose_ref", "default_interpret", "gemm", "get_tiles",
-    "register_tiles", "signature",
+    "load_cache", "register_tiles", "save_cache", "signature",
 ]

@@ -172,8 +172,21 @@ def _apply_act(y, activation: str, slope: float):
     return y
 
 
+def _gather_taps(x, KH, KW, OH, OW, stride):
+    """All (kh, kw) tap columns of the VMEM slab as static strided views."""
+    ci = x.shape[-1]
+    cols = []
+    for kh in range(KH):
+        for kw in range(KW):
+            # static strided view of the slab == this tap's patch column
+            patch = x[kh:kh + (OH - 1) * stride + 1:stride,
+                      kw:kw + (OW - 1) * stride + 1:stride, :]
+            cols.append(patch.reshape(OH * OW, ci))
+    return cols
+
+
 def _fused_conv_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, KH, KW, OH, OW,
-                       stride, activation, slope, n_kd):
+                       stride, activation, slope, n_kd, fuse_taps):
     kd = pl.program_id(2)
 
     @pl.when(kd == 0)
@@ -181,15 +194,21 @@ def _fused_conv_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, KH, KW, OH, OW,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     x = x_ref[0, 0]                      # (Hp, Wp, Ci) VMEM slab
+    w_all = w_ref[...]
     ci = x.shape[-1]
-    for kh in range(KH):
-        for kw in range(KW):
-            # static strided view of the slab == this tap's patch column
-            patch = x[kh:kh + (OH - 1) * stride + 1:stride,
-                      kw:kw + (OW - 1) * stride + 1:stride, :]
-            patch = patch.reshape(OH * OW, ci)
+    cols = _gather_taps(x, KH, KW, OH, OW, stride)
+    if fuse_taps:
+        # one wide (OH*OW, KH*KW*Ci) x (KH*KW*Ci, bn) MXU contraction —
+        # wins when Ci is small and per-tap GEMMs would be K-starved
+        patches = jnp.concatenate(cols, axis=1)
+        w = w_all[0].reshape(KH * KW * ci, -1)
+        acc_ref[...] += jax.lax.dot_general(
+            patches, w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    else:
+        for t, patch in enumerate(cols):
             acc_ref[...] += jax.lax.dot_general(
-                patch, w_ref[0, kh * KW + kw], (((1,), (0,)), ((), ())),
+                patch, w_all[0, t], (((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32)
 
     @pl.when(kd == n_kd - 1)
@@ -207,15 +226,31 @@ def _conv_core(x, w, b=None, *, stride: int, pads, in_dilation: int = 1,
     this one routine with different (stride, pads, in_dilation, weights).
     """
     interpret = _resolve_interpret(interpret)
+    out_dtype = x.dtype
+    low_precision_emulation = interpret and x.dtype != jnp.float32
+    if low_precision_emulation:
+        # Interpret-mode stand-in for the MXU's native low-precision
+        # multiply with f32 accumulate: upcast ONCE before staging (and
+        # downcast the result once after the call), so the dilate/pad
+        # data movement and the grid loop's block reads/writes skip
+        # XLA-CPU's per-op emulation casts.  Bit-identical — the kernel
+        # dots force preferred_element_type=f32 and the f32->bf16
+        # rounding of the final cast matches the per-block epilogue cast
+        # — and a no-op on real TPU, where bf16 feeds the MXU natively.
+        x = x.astype(jnp.float32)
     N, _, _, _, Ci = x.shape
     KD, KH, KW, Ci2, Co = w.shape
     assert Ci == Ci2, (x.shape, w.shape)
     xp, (OD, OH, OW) = _prepare_input(x, (KD, KH, KW), stride=stride,
                                       pads=pads, in_dilation=in_dilation)
     if tile_cfg is None:
+        # dtype joins the key: bf16 and f32 tune independently, and the
+        # stride slot records the dilation for the transposed routes so
+        # distinct problems never alias
         tile_cfg = tiles_lib.get_tiles(tiles_lib.signature(
             "conv" if in_dilation == 1 else "conv_t",
-            x.shape[1:4], Ci, Co, KD, stride))
+            x.shape[1:4], Ci, Co, KD,
+            stride if in_dilation == 1 else in_dilation, out_dtype))
     bn = min(tile_cfg.bn, max(Co, 1))
     gn = -(-Co // bn)
     Cop = gn * bn
@@ -232,7 +267,8 @@ def _conv_core(x, w, b=None, *, stride: int, pads, in_dilation: int = 1,
     Hp, Wp = xp.shape[2], xp.shape[3]
     kernel = functools.partial(
         _fused_conv_kernel, KH=KH, KW=KW, OH=OH, OW=OW, stride=stride,
-        activation=activation, slope=slope, n_kd=KD)
+        activation=activation, slope=slope, n_kd=KD,
+        fuse_taps=tile_cfg.fuse_taps)
     out = pl.pallas_call(
         kernel,
         grid=(M, gn, KD),
@@ -249,10 +285,14 @@ def _conv_core(x, w, b=None, *, stride: int, pads, in_dilation: int = 1,
         ],
         out_specs=pl.BlockSpec((1, OH * OW, bn),
                                lambda m, j, kd: (m, 0, j)),
-        out_shape=jax.ShapeDtypeStruct((M, OH * OW, Cop), x.dtype),
+        out_shape=jax.ShapeDtypeStruct(
+            (M, OH * OW, Cop),
+            jnp.float32 if low_precision_emulation else out_dtype),
         scratch_shapes=[pltpu.VMEM((OH * OW, bn), jnp.float32)],
         interpret=interpret,
     )(xp, w4, b2)
+    if low_precision_emulation:
+        out = out.astype(out_dtype)
     if Cop != Co:
         out = out[..., :Co]
     return out.reshape(N, OD, OH, OW, Co)
@@ -263,23 +303,29 @@ def _conv_core(x, w, b=None, *, stride: int, pads, in_dilation: int = 1,
 # ---------------------------------------------------------------------------
 
 
-def _dw_kernel(x_ref, g_ref, o_ref, acc_ref, *, KH, KW, OH, OW, stride, n_m):
-    m = pl.program_id(1)
+def _dw_kernel(x_ref, g_ref, o_ref, acc_ref, *, KH, KW, OH, OW, stride, n_m,
+               fuse_taps):
+    m = pl.program_id(2)
 
     @pl.when(m == 0)
     def _():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     x = x_ref[0, 0]                      # (Hp, Wp, Ci)
-    g = g_ref[0]                         # (OH*OW, Co)
+    g = g_ref[0]                         # (OH*OW, bn)
     ci = x.shape[-1]
-    for kh in range(KH):
-        for kw in range(KW):
-            patch = x[kh:kh + (OH - 1) * stride + 1:stride,
-                      kw:kw + (OW - 1) * stride + 1:stride, :]
-            patch = patch.reshape(OH * OW, ci)
+    cols = _gather_taps(x, KH, KW, OH, OW, stride)
+    if fuse_taps:
+        # one (KH*KW*Ci, OH*OW) x (OH*OW, bn) contraction instead of
+        # KH*KW thin ones — same win as the forward fused-tap schedule
+        patches = jnp.concatenate(cols, axis=1)
+        acc_ref[...] += jax.lax.dot_general(
+            patches, g, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).reshape(acc_ref.shape)
+    else:
+        for t, patch in enumerate(cols):
             # patches^T @ grad: contract the P row dimension
-            acc_ref[kh * KW + kw] += jax.lax.dot_general(
+            acc_ref[t] += jax.lax.dot_general(
                 patch, g, (((0,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32)
 
@@ -289,40 +335,59 @@ def _dw_kernel(x_ref, g_ref, o_ref, acc_ref, *, KH, KW, OH, OW, stride, n_m):
 
 
 def _conv_dw_core(x, g, kdims, *, stride: int, pads, in_dilation: int = 1,
-                  interpret=None):
+                  interpret=None, tile_cfg: tiles_lib.ConvTiles | None = None):
     """dw[kd,kh,kw,ci,co] = sum_p patches[p, (kd,kh,kw,ci)] * g[p, co].
 
     ``g`` is the conv output cotangent (N, OD, OH, OW, Co); the input is
     prepared exactly as in the forward pass so the in-kernel gather sees
-    the same patch geometry.
+    the same patch geometry.  The Co (GEMM N) dimension is tiled by the
+    signature's ``bn`` — the same registry/autotune machinery as the
+    forward kernels (signature kind ``dw`` / ``dw_t``).
     """
     interpret = _resolve_interpret(interpret)
+    sig_dtype = x.dtype
+    if interpret and x.dtype != jnp.float32:
+        # one upcast before staging — see _conv_core
+        x, g = x.astype(jnp.float32), g.astype(jnp.float32)
     KD, KH, KW = kdims
     N, _, _, _, Ci = x.shape
     Co = g.shape[-1]
     xp, (OD, OH, OW) = _prepare_input(x, kdims, stride=stride, pads=pads,
                                       in_dilation=in_dilation)
     assert g.shape[1:4] == (OD, OH, OW), (g.shape, (OD, OH, OW))
+    if tile_cfg is None:
+        tile_cfg = tiles_lib.get_tiles(tiles_lib.signature(
+            "dw" if in_dilation == 1 else "dw_t",
+            x.shape[1:4], Ci, Co, KD,
+            stride if in_dilation == 1 else in_dilation, sig_dtype))
+    bn = min(tile_cfg.bn, max(Co, 1))
+    gn = -(-Co // bn)
+    Cop = gn * bn
     M = N * OD
     Hp, Wp = xp.shape[2], xp.shape[3]
     g3 = g.reshape(M, OH * OW, Co).astype(x.dtype)
+    if Cop != Co:
+        g3 = jnp.pad(g3, ((0, 0), (0, 0), (0, Cop - Co)))
     kernel = functools.partial(_dw_kernel, KH=KH, KW=KW, OH=OH, OW=OW,
-                               stride=stride, n_m=M)
+                               stride=stride, n_m=M,
+                               fuse_taps=tile_cfg.fuse_taps)
     dw = pl.pallas_call(
         kernel,
-        grid=(KD, M),
+        grid=(KD, gn, M),
         in_specs=[
             pl.BlockSpec((1, 1, Hp, Wp, Ci),
-                         lambda kd, m, OD=OD, s=stride:
+                         lambda kd, j, m, OD=OD, s=stride:
                          (m // OD, (m % OD) * s + kd, 0, 0, 0)),
-            pl.BlockSpec((1, OH * OW, Co), lambda kd, m: (m, 0, 0)),
+            pl.BlockSpec((1, OH * OW, bn), lambda kd, j, m: (m, 0, j)),
         ],
-        out_specs=pl.BlockSpec((1, KH * KW, Ci, Co),
-                               lambda kd, m: (kd, 0, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((KD, KH * KW, Ci, Co), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((KH * KW, Ci, Co), jnp.float32)],
+        out_specs=pl.BlockSpec((1, KH * KW, Ci, bn),
+                               lambda kd, j, m: (kd, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((KD, KH * KW, Ci, Cop), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((KH * KW, Ci, bn), jnp.float32)],
         interpret=interpret,
     )(xp, g3)
+    if Cop != Co:
+        dw = dw[..., :Co]
     return dw.reshape(KD, KH, KW, Ci, Co)
 
 

@@ -73,7 +73,9 @@ def _cba_bwd(stride, activation, slope, interpret, res, g):
                    interpret=interpret).astype(x.dtype)
     dw = conv3d_dw(x, dz, w.shape[:3], stride,
                    interpret=interpret).astype(w.dtype)
-    db = jnp.sum(dz, axis=(0, 1, 2, 3)).astype(b.dtype)
+    # f32 accumulation for the bias grad (a quarter-million-element sum
+    # of bf16 terms drifts in bf16), mirroring the kernels' f32 VMEM
+    db = jnp.sum(dz, axis=(0, 1, 2, 3), dtype=jnp.float32).astype(b.dtype)
     return dx, dw, db
 
 
@@ -114,7 +116,7 @@ def _tba_bwd(stride, activation, slope, interpret, res, g):
                              interpret=interpret).astype(x.dtype)
     dw = conv3d_transpose_dw(x, dz, w.shape[:3], stride,
                              interpret=interpret).astype(w.dtype)
-    db = jnp.sum(dz, axis=(0, 1, 2, 3)).astype(b.dtype)
+    db = jnp.sum(dz, axis=(0, 1, 2, 3), dtype=jnp.float32).astype(b.dtype)
     return dx, dw, db
 
 

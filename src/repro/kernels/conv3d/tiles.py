@@ -1,28 +1,45 @@
-"""Tile-size selection for the conv3d Pallas kernels.
+"""Tile-size selection + autotuner for the conv3d Pallas kernels.
 
 The fused implicit-GEMM kernels tile the output-channel (N of the GEMM)
-dimension and, for the standalone ``gemm``, all three of (bm, bk, bn).
-Which tile wins depends on the problem shape: the 3DGAN layers range from
-Ci=1 (discriminator input) to Ci=Co=128 (MXU-native), and the spatial row
-length OH*OW ranges from 25 to 2601 — a single hard-coded 128 is right for
-the big layers and wasteful for the small ones.
+dimension and choose a tap schedule; the standalone ``gemm`` tiles all
+three of (bm, bk, bn).  Which config wins depends on the problem shape:
+the 3DGAN layers range from Ci=1 (discriminator input) to Ci=Co=128
+(MXU-native), and the spatial row length OH*OW ranges from 25 to 2601 —
+a single hard-coded 128 is right for the big layers and wasteful for the
+small ones, and for tiny Ci the per-tap (P, Ci) x (Ci, bn) contractions
+are so thin that gathering ALL taps into one wide GEMM
+(``fuse_taps=True``) wins outright.
 
 This module is the one place that decision lives:
 
-- :func:`get_tiles` — registry lookup by problem signature, falling back
-  to a shape heuristic (MXU-native 128 lanes, shrunk to the padded problem).
-- :func:`register_tiles` — pin a tile config for a signature (what a
-  sweep on the real TPU target would persist).
-- :func:`autotune` — the hook such a sweep plugs into: measure a callable
-  over candidate configs and register the argmin.
+- :func:`get_tiles` — registry lookup by problem signature (now including
+  the operand dtype), falling back to a shape heuristic.
+- :func:`register_tiles` — pin a tile config for a signature.
+- :func:`autotune` — measure a callable over candidate configs and
+  register the argmin (the in-memory hook, unchanged API).
+- :func:`autotune_signature` / :func:`autotune_config` — the REAL
+  measurement driver: build the conv problem a signature describes, time
+  every candidate on the live device, register + persist the winner.
+- :func:`load_cache` / :func:`save_cache` — on-disk JSON persistence
+  under ``results/autotune/``, keyed by (signature, dtype, device kind).
+  ``get_tiles`` warm-loads the cache for the current device on first use,
+  so an offline ``tools/autotune_conv3d.py`` run changes kernel behaviour
+  in every later process without touching call sites.
 
-Registered entries take priority, so an offline autotune run changes
-kernel behaviour without touching call sites.
+Registered entries take priority over the heuristic, and in-memory
+registrations take priority over the disk cache.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Iterable, Optional, Sequence, Tuple
+import json
+import os
+import time
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+_HERE = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))))))
+DEFAULT_CACHE_DIR = os.path.join(_HERE, "results", "autotune")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,23 +50,40 @@ class ConvTiles:
     ``bm``/``bk`` — row/contraction tiles; used by the standalone
     :func:`repro.kernels.conv3d.conv3d.gemm`.  The fused conv kernels tile
     rows structurally (one padded-input slab per (n, od) grid row), so for
-    them only ``bn`` is load-bearing.
+    them ``bn`` and ``fuse_taps`` are the load-bearing fields.
+    ``fuse_taps`` — gather every (kh, kw) tap into one
+    (OH*OW, KH*KW*Ci) matrix per kd step and contract it in a SINGLE
+    wide GEMM instead of KH*KW thin ones.  Wins when Ci is small (the
+    thin contractions waste the MXU's K dimension); loses when the
+    concatenated patch matrix outgrows VMEM-friendly sizes.
     """
     bn: int = 128
     bm: int = 128
     bk: int = 128
+    fuse_taps: bool = False
 
 
-Signature = Tuple  # (kind, spatial..., Ci, Co, K, stride) — see signature()
+Signature = Tuple  # (kind, spatial..., Ci, Co, K, stride[, dtype])
 
 _REGISTRY: Dict[Signature, ConvTiles] = {}
+_CACHE_LOADED: set = set()      # device kinds whose disk cache was merged
 
 
 def signature(kind: str, spatial: Sequence[int], ci: int, co: int,
-              k: int, stride: int) -> Signature:
-    """Hashable problem identity: kernel kind + the shape that drives tiling."""
-    return (kind, tuple(int(s) for s in spatial), int(ci), int(co),
+              k: int, stride: int, dtype=None) -> Signature:
+    """Hashable problem identity: kernel kind + the shape that drives
+    tiling.  ``dtype`` (e.g. ``jnp.bfloat16`` or ``"bfloat16"``) joins the
+    key when given — bf16 and f32 tune independently."""
+    base = (kind, tuple(int(s) for s in spatial), int(ci), int(co),
             int(k), int(stride))
+    if dtype is None:
+        return base
+    return base + (_dtype_name(dtype),)
+
+
+def _dtype_name(dtype) -> str:
+    return getattr(dtype, "name", None) or getattr(dtype, "__name__", None) \
+        or str(dtype)
 
 
 def register_tiles(sig: Signature, tiles: ConvTiles) -> None:
@@ -58,6 +92,7 @@ def register_tiles(sig: Signature, tiles: ConvTiles) -> None:
 
 def clear_registry() -> None:
     _REGISTRY.clear()
+    _CACHE_LOADED.clear()
 
 
 def default_tiles(sig: Signature) -> ConvTiles:
@@ -66,14 +101,34 @@ def default_tiles(sig: Signature) -> ConvTiles:
     Tiles never exceed the (padded) problem extent — a 128-lane tile over
     Co=8 would spend 94% of the MXU on padding.
     """
-    _kind, _spatial, _ci, co, _k, _stride = sig
+    co = sig[3]
     bn = min(128, _round_up(co, 8))
     return ConvTiles(bn=bn)
 
 
 def get_tiles(sig: Signature) -> ConvTiles:
-    """Registered config if present, else the heuristic default."""
-    return _REGISTRY.get(sig, default_tiles(sig))
+    """Registered config if present, else the heuristic default.
+
+    Resolution order: exact in-memory registration (a dtype-qualified
+    signature falls back to its dtype-free base, so hand-registered
+    entries keep working), then the on-disk autotune cache for the
+    current device (warm-loaded once per process), then the heuristic.
+    """
+    hit = _REGISTRY.get(sig)
+    if hit is not None:
+        return hit
+    if len(sig) == 7:                    # dtype-qualified: try the base sig
+        hit = _REGISTRY.get(sig[:6])
+        if hit is not None:
+            return hit
+    kind = _device_kind()
+    if kind not in _CACHE_LOADED:
+        load_cache(kind=kind)
+        hit = _REGISTRY.get(sig) or (
+            _REGISTRY.get(sig[:6]) if len(sig) == 7 else None)
+        if hit is not None:
+            return hit
+    return default_tiles(sig)
 
 
 def autotune(sig: Signature, measure: Callable[[ConvTiles], float],
@@ -81,10 +136,11 @@ def autotune(sig: Signature, measure: Callable[[ConvTiles], float],
     """Measure ``candidates`` (seconds, lower is better), register the best.
 
     ``measure`` runs the kernel with a given config and returns its cost;
-    a TPU sweep passes timed executions, tests pass analytic stand-ins.
+    the driver below passes timed executions, tests pass analytic
+    stand-ins.
     """
     if candidates is None:
-        candidates = [ConvTiles(bn=bn) for bn in (32, 64, 128, 256)]
+        candidates = candidate_tiles(sig)
     best, best_cost = None, float("inf")
     for cand in candidates:
         cost = measure(cand)
@@ -93,6 +149,317 @@ def autotune(sig: Signature, measure: Callable[[ConvTiles], float],
     assert best is not None, "autotune needs at least one candidate"
     register_tiles(sig, best)
     return best
+
+
+def candidate_tiles(sig: Signature) -> List[ConvTiles]:
+    """The sweep space for one signature: the heuristic default plus
+    bn variants and the fused-tap schedule (deduplicated after clamping
+    bn to the problem's Co, so tiny layers don't measure aliases)."""
+    co = sig[3]
+    cands, seen = [], set()
+    for fuse in (False, True):
+        # max(co, 1) = exact-Co tile (zero weight padding): usually wrong
+        # for the 128-lane MXU, sometimes right for narrow layers — the
+        # measurement decides, not the heuristic
+        for bn in (default_tiles(sig).bn, max(co, 1), 32, 64, 128, 256):
+            eff = (min(bn, max(co, 1)), fuse)
+            if eff in seen:
+                continue
+            seen.add(eff)
+            cands.append(ConvTiles(bn=bn, fuse_taps=fuse))
+    return cands
+
+
+# ---------------------------------------------------------------------------
+# measurement driver: time candidates on the live device
+# ---------------------------------------------------------------------------
+
+
+def time_min_of_repeats(fn, args, steps: int = 3, repeats: int = 3) -> float:
+    """Seconds per execution of ``fn(*args)``: warmup + min over
+    ``repeats`` timed batches of ``steps`` calls.  The min is the
+    least-contended execution — robust to scheduler noise on shared
+    hosts.  Shared by the autotune driver and the kernel benchmarks so
+    winners and recorded numbers come from the same clock."""
+    import jax
+    out = fn(*args)                       # compile + warmup
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / steps)
+    return best
+
+
+def _device_kind() -> str:
+    import jax
+    try:
+        return jax.devices()[0].device_kind.replace(" ", "_")
+    except Exception:                     # no backend yet — be permissive
+        return "unknown"
+
+
+def _build_problem(sig: Signature):
+    """Representative arrays + runner for the conv problem ``sig`` names.
+
+    Handles all four kernel kinds — ``conv`` / ``conv_t`` (the forward
+    family, which the dx routes also reduce to) and ``dw`` / ``dw_t``
+    (the patches^T @ grad backward kernel).  Returns
+    ``run(tiles) -> float`` timing one jitted execution (a fresh jit per
+    tile config — the config is trace-time static).
+    """
+    import importlib
+
+    import jax
+    import jax.numpy as jnp
+
+    # the package __init__ re-exports a FUNCTION named conv3d, which
+    # shadows the submodule in a from-import — resolve the module itself
+    conv3d_lib = importlib.import_module("repro.kernels.conv3d.conv3d")
+
+    kind, spatial, ci, co, k, stride = sig[:6]
+    dtype = jnp.dtype(sig[6]) if len(sig) == 7 else jnp.float32
+    key = jax.random.key(0)
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (2, *spatial, ci), jnp.float32).astype(dtype)
+
+    if kind in ("dw", "dw_t"):
+        if kind == "dw":
+            pads = tuple(conv3d_lib._same_pads(L, k, stride)[:2]
+                         for L in spatial)
+            out_dims = tuple(-(-L // stride) for L in spatial)
+            core_stride, dil = stride, 1
+        else:
+            pads = tuple(conv3d_lib._transpose_pads(k, stride)
+                         for _ in spatial)
+            out_dims = tuple(L * stride for L in spatial)
+            core_stride, dil = 1, stride
+        g = jax.random.normal(kw, (2, *out_dims, co), jnp.float32) \
+            .astype(dtype)
+
+        def make(tiles: ConvTiles):
+            return jax.jit(lambda x_, g_: conv3d_lib._conv_dw_core(
+                x_, g_, (k, k, k), stride=core_stride, pads=pads,
+                in_dilation=dil, tile_cfg=tiles))
+
+        args = (x, g)
+    else:
+        w = (jax.random.normal(kw, (k, k, k, ci, co), jnp.float32) * 0.1) \
+            .astype(dtype)
+        b = jnp.zeros((co,), dtype)
+
+        def make(tiles: ConvTiles):
+            if kind == "conv_t":
+                pads = tuple(conv3d_lib._transpose_pads(kk, stride)
+                             for kk in w.shape[:3])
+                return jax.jit(lambda x_, w_, b_: conv3d_lib._conv_core(
+                    x_, w_, b_, stride=1, pads=pads, in_dilation=stride,
+                    tile_cfg=tiles))
+            pads = tuple(conv3d_lib._same_pads(L, kk, stride)[:2]
+                         for L, kk in zip(spatial, w.shape[:3]))
+            return jax.jit(lambda x_, w_, b_: conv3d_lib._conv_core(
+                x_, w_, b_, stride=stride, pads=pads, tile_cfg=tiles))
+
+        args = (x, w, b)
+
+    def run(tiles: ConvTiles, steps: int = 3, repeats: int = 3) -> float:
+        return time_min_of_repeats(make(tiles), args, steps, repeats)
+
+    return run
+
+
+def autotune_signature(sig: Signature, *, steps: int = 3,
+                       cache_dir: Optional[str] = None,
+                       use_cache: bool = True) -> Tuple[ConvTiles, int]:
+    """Tune one signature on the live device.
+
+    Returns ``(best, n_measured)`` — ``n_measured == 0`` when the on-disk
+    cache already held an entry (the warm-start the CLI asserts on).
+    Winners are registered in-memory AND persisted.
+    """
+    if use_cache:
+        load_cache(cache_dir=cache_dir)
+        if sig in _REGISTRY:
+            return _REGISTRY[sig], 0
+    run = _build_problem(sig)
+    measured = [0]
+
+    def measure(tiles: ConvTiles) -> float:
+        measured[0] += 1
+        return run(tiles, steps=steps)
+
+    best = autotune(sig, measure)
+    save_cache(cache_dir=cache_dir)
+    return best, measured[0]
+
+
+def _bwd_signatures(kind: str, spatial, ci: int, co: int, k: int,
+                    stride: int, dtype) -> List[Signature]:
+    """The dx/dw signatures one forward layer's backward pass hits, as
+    the kernel drivers will look them up at trace time."""
+    if kind == "conv_t":
+        # dx of a transposed conv = a stride-s conv of the cotangent
+        out = tuple(d * stride for d in spatial)
+        return [signature("conv", out, co, ci, k, stride, dtype),
+                signature("dw_t", spatial, ci, co, k, stride, dtype)]
+    out = tuple(-(-d // stride) for d in spatial)
+    dx_kind = "conv" if stride == 1 else "conv_t"
+    return [signature(dx_kind, out, co, ci, k, stride if stride > 1 else 1,
+                      dtype),
+            signature("dw", spatial, ci, co, k, stride, dtype)]
+
+
+def gan_signatures(cfg, dtype=None, train: bool = False) -> List[Signature]:
+    """Every conv signature the 3DGAN hot path hits for ``cfg`` — the
+    generator's transposed convs + output conv and the discriminator's
+    strided convs (matching `core/gan` layer geometry).  ``train=True``
+    appends each layer's backward (dx / dw) signatures, so the tuned
+    tiles cover the full fwd+bwd adversarial step."""
+    fwd: List[tuple] = []
+    ups = len(cfg.gen_channels) - 1
+    dims = tuple(-(-d // 2 ** ups) for d in cfg.image_shape)
+    for i in range(ups):
+        fwd.append(("conv_t", dims, cfg.gen_channels[i],
+                    cfg.gen_channels[i + 1], 3, 2))
+        dims = tuple(d * 2 for d in dims)
+    fwd.append(("conv", cfg.image_shape, cfg.gen_channels[-1], 1, 3, 1))
+    dims, ci = cfg.image_shape, 1
+    for c in cfg.disc_channels:
+        fwd.append(("conv", dims, ci, c, 3, 2))
+        dims = tuple(-(-d // 2) for d in dims)
+        ci = c
+    sigs = [signature(*spec, dtype) for spec in fwd]
+    if train:
+        for spec in fwd:
+            sigs += _bwd_signatures(*spec, dtype)
+    seen, uniq = set(), []
+    for s in sigs:
+        if s not in seen:
+            seen.add(s)
+            uniq.append(s)
+    return uniq
+
+
+def autotune_config(cfg, dtype=None, *, steps: int = 3,
+                    cache_dir: Optional[str] = None,
+                    use_cache: bool = True, train: bool = False) -> dict:
+    """Tune every GAN layer signature for ``cfg`` (``train=True`` adds the
+    backward dx/dw signatures); returns a report dict with per-signature
+    winners and the measurement count (zero on a fully warm cache — the
+    CLI's second-run assertion)."""
+    report = {"device_kind": _device_kind(), "measured": 0, "cached": 0,
+              "entries": []}
+    for sig in gan_signatures(cfg, dtype, train=train):
+        best, n = autotune_signature(sig, steps=steps, cache_dir=cache_dir,
+                                     use_cache=use_cache)
+        report["measured"] += n
+        report["cached"] += int(n == 0)
+        report["entries"].append({"signature": _sig_to_str(sig),
+                                  "tiles": dataclasses.asdict(best),
+                                  "measurements": n})
+    return report
+
+
+# ---------------------------------------------------------------------------
+# on-disk persistence (results/autotune/<device_kind>.json)
+# ---------------------------------------------------------------------------
+
+
+def cache_path(kind: Optional[str] = None,
+               cache_dir: Optional[str] = None) -> str:
+    env_dir = os.environ.get("REPRO_AUTOTUNE_DIR", "")
+    base = cache_dir or env_dir or DEFAULT_CACHE_DIR
+    return os.path.join(base, f"{kind or _device_kind()}.json")
+
+
+def _sig_to_str(sig: Signature) -> str:
+    kind, spatial, ci, co, k, stride = sig[:6]
+    parts = [kind, "x".join(str(s) for s in spatial), str(ci), str(co),
+             str(k), str(stride)]
+    if len(sig) == 7:
+        parts.append(sig[6])
+    return "|".join(parts)
+
+
+def _sig_from_str(s: str) -> Optional[Signature]:
+    parts = s.split("|")
+    if len(parts) not in (6, 7):
+        return None
+    kind, spatial, ci, co, k, stride = parts[:6]
+    try:
+        sig = (kind, tuple(int(d) for d in spatial.split("x")), int(ci),
+               int(co), int(k), int(stride))
+    except ValueError:                    # hand-edited/truncated key
+        return None
+    if len(parts) == 7:
+        sig = sig + (parts[6],)
+    return sig
+
+
+def save_cache(kind: Optional[str] = None,
+               cache_dir: Optional[str] = None) -> str:
+    """Persist the in-memory registry for this device kind (merging over
+    whatever the file already holds, so concurrent tuners compose)."""
+    path = cache_path(kind, cache_dir)
+    entries = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                entries = json.load(f).get("tiles", {})
+        except (json.JSONDecodeError, OSError):
+            entries = {}                  # corrupt cache: overwrite
+    for sig, tiles in _REGISTRY.items():
+        entries[_sig_to_str(sig)] = dataclasses.asdict(tiles)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    payload = {"device_kind": kind or _device_kind(),
+               "version": 1, "tiles": entries}
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+    return path
+
+
+def load_cache(kind: Optional[str] = None,
+               cache_dir: Optional[str] = None) -> int:
+    """Merge the on-disk cache into the registry (in-memory entries win).
+
+    A missing, corrupt, or shape-mismatched file is NOT an error — the
+    kernels must never fail because a cache went stale; they fall back to
+    :func:`default_tiles`.  Returns the number of entries merged.
+    """
+    kind = kind or _device_kind()
+    if cache_dir is None:
+        # only a DEFAULT-location load satisfies get_tiles' warm-load;
+        # an explicit scratch cache_dir must not suppress it
+        _CACHE_LOADED.add(kind)
+    path = cache_path(kind, cache_dir)
+    if not os.path.exists(path):
+        return 0
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+        entries = payload["tiles"]
+        assert isinstance(entries, dict)
+    except (json.JSONDecodeError, OSError, KeyError, AssertionError):
+        return 0                          # corrupt cache -> heuristic
+    n = 0
+    known = {f.name for f in dataclasses.fields(ConvTiles)}
+    for key, val in entries.items():
+        sig = _sig_from_str(key)
+        if sig is None or not isinstance(val, dict):
+            continue
+        try:
+            tiles = ConvTiles(**{k: v for k, v in val.items() if k in known})
+        except TypeError:
+            continue
+        if sig not in _REGISTRY:          # in-memory registrations win
+            _REGISTRY[sig] = tiles
+            n += 1
+    return n
 
 
 def _round_up(x: int, m: int) -> int:

@@ -181,7 +181,7 @@ def gan_batch_shapes(cfg, n_replicas: int) -> dict:
     }
 
 
-def build_gan_train(mesh: Mesh, *, policy_name: str = "bf16",
+def build_gan_train(mesh: Mesh, *, policy_name: Optional[str] = None,
                     reduced: bool = False,
                     loop: str = "builtin") -> BuiltStep:
     """The paper's own architecture: fused Algorithm-1 step, pure DP
@@ -190,14 +190,16 @@ def build_gan_train(mesh: Mesh, *, policy_name: str = "bf16",
     Delegates to the unified engine: ``loop`` selects the paper's
     built-in (jit + NamedSharding) or custom (shard_map + explicit psum)
     strategy.  Every mesh axis carries batch — all 256/512 chips are
-    replicas, per-replica BS=128 exactly as the paper runs it (§4)."""
+    replicas, per-replica BS=128 exactly as the paper runs it (§4).
+    ``policy_name=None`` defers to the config's ``precision`` field."""
     from repro.configs import calo3dgan
     from repro.train import engine as engine_lib
 
     cfg = calo3dgan.reduced() if reduced else calo3dgan.config()
     task = engine_lib.gan_task(cfg, opt_lib.rmsprop(1e-4),
                                opt_lib.rmsprop(1e-4),
-                               policy=get_policy(policy_name))
+                               policy=get_policy(policy_name
+                                                 or cfg.precision))
     eng = engine_lib.Engine(mesh, loop, dp_axes=tuple(mesh.axis_names))
     built = eng.build(task, gan_batch_shapes(cfg, mesh.devices.size))
     return BuiltStep(built.fn, built.args, built.kind)

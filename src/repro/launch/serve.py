@@ -68,10 +68,13 @@ def serve_gan(args):
     cfg = calo3dgan.reduced() if args.reduced else calo3dgan.config()
     if args.ckpt and os.path.exists(os.path.join(args.ckpt, "arrays.npz")):
         params = ckpt_lib.restore_gan_generator(args.ckpt, cfg)
+        policy_name = ckpt_lib.manifest_precision(args.ckpt)
         print(f"restored generator from {args.ckpt} "
-              f"(step {ckpt_lib.latest_step(args.ckpt)})")
+              f"(step {ckpt_lib.latest_step(args.ckpt)}, "
+              f"precision={policy_name})")
     else:
         params = gan.init_generator(jax.random.key(args.seed), cfg)
+        policy_name = "f32"
         print("WARNING: no --ckpt given (or not found) — serving an "
               "UNTRAINED generator; the physics gate will show it")
 
@@ -82,7 +85,8 @@ def serve_gan(args):
                        window=args.gate_window)
     buckets = tuple(int(b) for b in args.buckets.split(","))
     mesh = make_dev_mesh(data=len(jax.devices()))
-    eng = SimulateEngine(cfg, params, buckets=buckets, mesh=mesh, gate=gate)
+    eng = SimulateEngine(cfg, params, buckets=buckets, mesh=mesh, gate=gate,
+                         policy_name=policy_name)
     eng.warmup()
 
     rng = np.random.default_rng(args.seed)

@@ -44,6 +44,10 @@ def train_gan(args, mesh, log: MetricLog):
     from repro.core import adversarial, gan, validation
 
     cfg = calo3dgan.reduced() if args.reduced else calo3dgan.config()
+    # --precision beats --policy (the legacy spelling, still honored when
+    # given explicitly) beats the config's precision field; the resolved
+    # name is recorded in the checkpoint manifest for serving restore
+    precision = args.precision or args.policy or cfg.precision
     g_opt = opt_lib.rmsprop(args.lr)
     d_opt = opt_lib.rmsprop(args.lr)
 
@@ -51,6 +55,7 @@ def train_gan(args, mesh, log: MetricLog):
     B = args.batch or cfg.batch_size
 
     if args.loop == "naive":
+        precision = "f32"               # the baseline is measured pure-f32
         state = adversarial.init_state(jax.random.key(args.seed), cfg,
                                        g_opt, d_opt)
         step = adversarial.NaiveStep(cfg, g_opt, d_opt, seed=args.seed)
@@ -62,7 +67,7 @@ def train_gan(args, mesh, log: MetricLog):
         # that is exactly the engine's builtin mode.
         loop = "builtin" if args.loop == "fused" else args.loop
         task = engine_lib.gan_task(cfg, g_opt, d_opt,
-                                   policy=get_policy(args.policy),
+                                   policy=get_policy(precision),
                                    microbatches=args.microbatches)
         # the 3DGAN is PURE data parallelism: every mesh axis is a replica
         eng = engine_lib.Engine(mesh, loop, dp_axes=tuple(mesh.axis_names))
@@ -81,8 +86,9 @@ def train_gan(args, mesh, log: MetricLog):
     print("physics validation:", {k: round(v, 4) for k, v in rep.items()})
     if args.ckpt:
         ckpt_lib.save(args.ckpt, state.g_params, step=args.steps,
-                      extra={"kind": "gan_generator"})
-        print(f"saved generator to {args.ckpt}")
+                      extra={"kind": "gan_generator",
+                             "precision": precision})
+        print(f"saved generator to {args.ckpt} (precision={precision})")
     return state
 
 
@@ -90,7 +96,7 @@ def train_lm(args, mesh, log: MetricLog):
     cfg = (config_base.reduced_config(args.arch) if args.reduced
            else config_base.get_config(args.arch))
     model = api.get_model(cfg)
-    policy = get_policy(args.policy)
+    policy = get_policy(args.policy or "f32")
     optimizer = opt_lib.adamw(opt_lib.warmup_cosine(args.lr, 20, args.steps))
 
     loop = "builtin" if args.loop == "fused" else args.loop
@@ -151,7 +157,14 @@ def main():
                          "builtin; naive: host-orchestrated GAN baseline")
     ap.add_argument("--microbatches", type=int, default=1,
                     help="gradient accumulation inside each step")
-    ap.add_argument("--policy", default="f32")
+    ap.add_argument("--policy", default="",
+                    help="LM mixed-precision policy name (default f32); "
+                         "for the GAN arch an explicit value is honored "
+                         "as a legacy alias of --precision")
+    ap.add_argument("--precision", default="",
+                    help="GAN precision policy (f32|bf16|fp16); empty "
+                         "defers to --policy, then the config's "
+                         "precision field (bf16)")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--log", default="")

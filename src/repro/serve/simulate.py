@@ -198,6 +198,20 @@ class SimulateEngine:
                       "device_transfers": 0,
                       "bucket_steps": {b: 0 for b in self.buckets}}
 
+    @classmethod
+    def from_checkpoint(cls, path: str, cfg, *, policy_name: Optional[str]
+                        = None, **kw) -> "SimulateEngine":
+        """Restore a generator checkpoint AND the precision policy it was
+        trained under (manifest ``extra["precision"]``; manifests written
+        before that field default to f32) — the production handoff that
+        keeps serving numerics matched to training numerics.  An explicit
+        ``policy_name`` overrides the recorded one.
+        """
+        from repro.train import checkpoint as ckpt_lib
+        params = ckpt_lib.restore_gan_generator(path, cfg)
+        resolved = policy_name or ckpt_lib.manifest_precision(path)
+        return cls(cfg, params, policy_name=resolved, **kw)
+
     # -- host API ----------------------------------------------------------
 
     def warmup(self) -> None:

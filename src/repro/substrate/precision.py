@@ -1,11 +1,18 @@
 """Mixed-precision policy (paper §4: bf16 on the MXU, f32 master weights).
 
-bf16 shares the f32 exponent range, so no loss scaling is required (unlike
-fp16) — matching how TPUs train in practice and what the paper relies on.
+bf16 shares the f32 exponent range, so no loss SCALING is required
+(unlike fp16) — matching how TPUs train in practice and what the paper
+relies on.  The adversarial step still runs the dynamic-loss-scale state
+machine under bf16 with ``loss_scale=1``: the scale never needs to grow,
+but the skip-on-nonfinite guard keeps a diverging GAN step from ever
+writing NaNs into the master weights.  The fp16 policy (GPU tensor-core
+mode) uses the full dynamic range: scale up, halve on overflow, grow back
+after ``growth_interval`` clean steps.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +23,11 @@ class Policy:
     param_dtype: jnp.dtype = jnp.float32
     compute_dtype: jnp.dtype = jnp.bfloat16
     output_dtype: jnp.dtype = jnp.float32
+    # dynamic loss scaling: 0 disables the state machine entirely; 1 runs
+    # skip-on-nonfinite without amplification (bf16); >1 is the fp16 mode
+    loss_scale: float = 0.0
+    # clean steps between scale doublings (0: never grow — bf16 mode)
+    growth_interval: int = 0
 
     def cast_to_compute(self, tree):
         return jax.tree.map(
@@ -33,9 +45,76 @@ class Policy:
             if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
 
 
-DEFAULT = Policy()                                   # bf16 compute (paper's TPU mode)
-FULL = Policy(compute_dtype=jnp.float32)             # f32 everywhere (GPU baseline)
+DEFAULT = Policy(loss_scale=1.0)                      # bf16 (paper's TPU mode)
+FULL = Policy(compute_dtype=jnp.float32)              # f32 everywhere
+FP16 = Policy(compute_dtype=jnp.float16,              # GPU tensor-core mode
+              loss_scale=2.0 ** 15, growth_interval=200)
 
 
 def get_policy(name: str) -> Policy:
-    return {"bf16": DEFAULT, "mixed": DEFAULT, "f32": FULL, "full": FULL}[name]
+    return {"bf16": DEFAULT, "mixed": DEFAULT, "f32": FULL, "full": FULL,
+            "fp16": FP16}[name]
+
+
+def policy_name(policy: Policy) -> str:
+    """Canonical name for a policy (the inverse of :func:`get_policy`) —
+    what checkpoints record so serving can restore the right one."""
+    return {jnp.dtype(jnp.bfloat16): "bf16", jnp.dtype(jnp.float32): "f32",
+            jnp.dtype(jnp.float16): "fp16"}[jnp.dtype(policy.compute_dtype)]
+
+
+# ---------------------------------------------------------------------------
+# dynamic loss scaling with skip-on-nonfinite
+# ---------------------------------------------------------------------------
+
+
+class LossScaleState(NamedTuple):
+    """Device-resident dynamic-loss-scale state, carried in the train
+    state (so it checkpoints and donates with everything else)."""
+    scale: jax.Array        # f32 scalar, multiplies the loss
+    good_steps: jax.Array   # int32: consecutive finite phases since a skip
+
+
+def init_loss_scale(policy: Optional[Policy]) -> Optional[LossScaleState]:
+    """The initial state, or None when the policy disables scaling."""
+    if policy is None or not policy.loss_scale:
+        return None
+    return LossScaleState(jnp.float32(policy.loss_scale),
+                          jnp.zeros((), jnp.int32))
+
+
+def all_finite(tree) -> jax.Array:
+    """Scalar bool: every leaf of ``tree`` is finite (the overflow check
+    run on the UNSCALED gradients of each phase)."""
+    leaves = [jnp.all(jnp.isfinite(x)) for x in jax.tree.leaves(tree)]
+    if not leaves:
+        return jnp.bool_(True)
+    return jnp.all(jnp.stack(leaves))
+
+
+def unscale(state: LossScaleState, tree):
+    inv = 1.0 / state.scale
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * inv), tree)
+
+
+def next_loss_scale(state: LossScaleState, finite: jax.Array,
+                    growth_interval: int) -> LossScaleState:
+    """Halve on overflow; after ``growth_interval`` consecutive clean
+    phases, double (never below 1, never grown when the interval is 0)."""
+    good = jnp.where(finite, state.good_steps + 1, 0)
+    if growth_interval > 0:
+        grow = good >= growth_interval
+        scale = jnp.where(grow, state.scale * 2.0, state.scale)
+        good = jnp.where(grow, 0, good)
+    else:
+        scale = state.scale
+    scale = jnp.where(finite, scale, jnp.maximum(state.scale * 0.5, 1.0))
+    return LossScaleState(scale, good)
+
+
+def select_finite(finite: jax.Array, new_tree, old_tree):
+    """``new_tree`` where the phase was finite, else the untouched
+    ``old_tree`` — the skip that keeps nonfinite updates out of the
+    master params and optimizer state."""
+    return jax.tree.map(lambda n, o: jnp.where(finite, n, o),
+                        new_tree, old_tree)

@@ -62,6 +62,16 @@ def manifest(path: str) -> dict:
         return json.load(f)
 
 
+def manifest_precision(path: str, default: str = "f32") -> str:
+    """The precision policy the checkpoint was trained under.
+
+    `launch/train.py --ckpt` records it in ``extra["precision"]``;
+    manifests written before that field existed default to f32 (what
+    those checkpoints were actually trained in).
+    """
+    return manifest(path).get("extra", {}).get("precision", default)
+
+
 def restore_gan_generator(path: str, cfg):
     """Load trained 3DGAN generator params for serving.
 
@@ -69,6 +79,9 @@ def restore_gan_generator(path: str, cfg):
     ``state.g_params``; this restores them against a freshly-initialised
     template for ``cfg`` (shapes must match — i.e. the serving config must
     be the training config), ready for `serve.simulate.SimulateEngine`.
+    Use :func:`manifest_precision` (or
+    ``SimulateEngine.from_checkpoint``) to serve at the precision the
+    generator trained in.
     """
     from repro.core import gan
     template = gan.init_generator(jax.random.key(0), cfg)

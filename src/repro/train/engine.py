@@ -121,7 +121,8 @@ def gan_task(cfg, g_optimizer, d_optimizer, *, policy=None,
     from repro.core import adversarial
 
     def init(rng):
-        return adversarial.init_state(rng, cfg, g_optimizer, d_optimizer)
+        return adversarial.init_state(rng, cfg, g_optimizer, d_optimizer,
+                                      policy=policy)
 
     def make_step(grad_reduce=None, mesh=None):
         return adversarial.make_fused_step(
@@ -208,8 +209,11 @@ class Engine:
         self.n_shards = 1
         for a in self.axes:
             self.n_shards *= mesh.shape[a]
-        # filled in by fit(): dispatch observability for the async loop
-        self.last_fit_stats = {"steps": 0, "host_transfers": 0}
+        # filled in by fit(): dispatch + input-pipeline observability for
+        # the async loop (h2d_wait_ms = consumer-side stall the prefetch
+        # overlap failed to hide, per logging window and in total)
+        self.last_fit_stats = {"steps": 0, "host_transfers": 0,
+                               "h2d_wait_ms": 0.0, "h2d_wait_ms_windows": []}
 
     # -- batch placement ----------------------------------------------------
 
@@ -249,15 +253,17 @@ class Engine:
                   batch_dims: Optional[Mapping[str, int]] = None) -> Iterator[dict]:
         """Double-buffered host->device prefetch with per-mode sharding.
 
-        Wraps ``data.pipeline.prefetch``: the NEXT batch is placed on
-        device (sharded over the data axes) while the CURRENT step runs —
-        the paper's host/accelerator overlap, identical for both loops.
+        Wraps ``data.pipeline.prefetch``: the producer thread issues the
+        ``device_put`` for the NEXT batch (sharded over the data axes)
+        while the CURRENT step runs — the paper's host/accelerator
+        overlap, identical for both loops.  The returned ``Prefetcher``
+        exposes ``stats["h2d_wait_ms"]`` (consumer stalls).
         """
         it = iter(batches)
         try:
             first = next(it)
         except StopIteration:
-            return iter(())
+            return pipeline.prefetch(iter(()))
         shardings = self.batch_shardings(first, batch_dims)
         return pipeline.prefetch(itertools.chain([first], it), size=size,
                                  sharding=shardings)
@@ -346,9 +352,12 @@ class Engine:
         steps to bound run-ahead (keeps the dispatch queue shallow and
         device errors attributable) independently of the logging window.
 
-        ``self.last_fit_stats`` records {"steps", "host_transfers"} for
-        the most recent fit — the dispatch-count observability the async
-        tests assert on.
+        ``self.last_fit_stats`` records {"steps", "host_transfers",
+        "h2d_wait_ms", "h2d_wait_ms_windows"} for the most recent fit —
+        the dispatch-count observability the async tests assert on, plus
+        the per-window consumer stall of the device prefetcher (time a
+        step had to WAIT for its batch; ~0 when the producer-side
+        ``device_put`` fully overlaps compute).
         """
         if log_every < 1:
             raise ValueError(f"log_every must be >= 1, got {log_every}")
@@ -368,6 +377,15 @@ class Engine:
         acc = metrics_lib.MetricAccumulator()
         transfers = 0
         last = -1
+        h2d_windows: list = []
+        h2d_marked = 0.0
+
+        def _close_window():
+            nonlocal h2d_marked
+            waited = stream.stats["h2d_wait_ms"]
+            h2d_windows.append(waited - h2d_marked)
+            h2d_marked = waited
+
         for i, batch in zip(range(steps), stream):
             last = i
             rng, k = jax.random.split(rng)
@@ -378,6 +396,7 @@ class Engine:
                     log.log(i, **acc.means())     # ONE transfer per window
                     transfers += 1
                     acc.reset()
+                    _close_window()
             if sync_every is not None and (i + 1) % sync_every == 0:
                 jax.block_until_ready(metrics)
         if log is not None and acc.count:
@@ -385,5 +404,11 @@ class Engine:
             # trailing partial window so no step goes unlogged
             log.log(last, **acc.means())
             transfers += 1
-        self.last_fit_stats = {"steps": last + 1, "host_transfers": transfers}
+            _close_window()
+        self.last_fit_stats = {
+            "steps": last + 1, "host_transfers": transfers,
+            "h2d_wait_ms": stream.stats["h2d_wait_ms"],
+            "h2d_put_ms": stream.stats["put_ms"],
+            "h2d_wait_ms_windows": h2d_windows,
+        }
         return state, metrics

@@ -18,18 +18,30 @@ class MetricAccumulator:
     keeps issuing work while the device computes.  ``means`` does ONE
     ``jax.device_get`` for the whole window and returns host floats;
     call it once per logging window, not per step.
+
+    Sums accumulate in f32 even when the step emits bf16/fp16 metrics
+    (a bf16 running sum stops moving once the sum outgrows the
+    increment's 8-bit mantissa — a 100-step window of ~1.0 losses would
+    drift visibly).  The cast happens AT ``add`` time, not at drain:
+    every increment lands at full precision.
     """
 
     def __init__(self):
         self.sums = None
         self.count = 0
 
+    @staticmethod
+    def _f32(metrics) -> dict:
+        return {k: jnp.asarray(v).astype(jnp.float32)
+                for k, v in dict(metrics).items()}
+
     def update(self, metrics) -> None:
         self.count += 1
         if self.sums is None:
-            self.sums = dict(metrics)
+            self.sums = self._f32(metrics)
         else:
-            self.sums = {k: jnp.add(self.sums[k], metrics[k])
+            m = self._f32(metrics)
+            self.sums = {k: jnp.add(self.sums[k], m[k])
                          for k in self.sums}
 
     def means(self) -> dict:

@@ -207,7 +207,8 @@ def test_fit_windowed_logging_dispatch_count():
     log = MetricLog(print_every=0)
     state, metrics = eng.fit(_gan_task(), iter(_gan_batches(8, batch=4)), 8,
                              rng=jax.random.key(0), log=log, log_every=4)
-    assert eng.last_fit_stats == {"steps": 8, "host_transfers": 2}
+    assert eng.last_fit_stats["steps"] == 8
+    assert eng.last_fit_stats["host_transfers"] == 2
     assert [r["step"] for r in log.rows] == [3, 7]
     assert "d_loss_real" in log.rows[0]
 
@@ -285,5 +286,69 @@ def test_fit_flushes_partial_window_on_stream_exhaustion():
     log = MetricLog(print_every=0)
     eng.fit(_gan_task(), iter(_gan_batches(6, batch=4)), 10,
             rng=jax.random.key(0), log=log, log_every=4)
-    assert eng.last_fit_stats == {"steps": 6, "host_transfers": 2}
+    assert eng.last_fit_stats["steps"] == 6
+    assert eng.last_fit_stats["host_transfers"] == 2
     assert [r["step"] for r in log.rows] == [3, 5]
+
+
+# ---------------------------------------------------------------------------
+# overlapped input pipeline: producer-side device_put + h2d observability
+# ---------------------------------------------------------------------------
+
+
+def test_prefetch_issues_device_put_on_producer_thread(monkeypatch):
+    """The overlap contract: host->device placement happens on the
+    PRODUCER thread (under the running step), never on the consumer."""
+    import threading
+
+    from repro.data import pipeline as pipeline_lib
+
+    calls = []
+    real_put = jax.device_put
+
+    def spy(x, *a, **kw):
+        calls.append(threading.current_thread())
+        return real_put(x, *a, **kw)
+
+    monkeypatch.setattr(jax, "device_put", spy)
+    batches = [{"x": np.full((2,), i, np.float32)} for i in range(5)]
+    pf = pipeline_lib.prefetch(iter(batches), size=2)
+    main = threading.current_thread()
+    out = list(pf)
+    assert len(out) == 5 and len(calls) == 5
+    assert all(t is not main for t in calls)
+    assert pf.stats["batches"] == 5
+    assert pf.stats["h2d_wait_ms"] >= 0.0
+
+
+def test_prefetch_propagates_producer_errors():
+    from repro.data import pipeline as pipeline_lib
+
+    def gen():
+        yield {"x": np.zeros((2,), np.float32)}
+        raise RuntimeError("source died")
+
+    pf = pipeline_lib.prefetch(gen(), size=2)
+    next(pf)
+    with pytest.raises(RuntimeError, match="source died"):
+        next(pf)
+
+
+def test_fit_reports_per_window_h2d_wait():
+    """last_fit_stats carries the prefetcher's consumer-stall time, one
+    entry per logging window (the paper's overlap made observable)."""
+
+    class _Log:
+        def log(self, *a, **kw):
+            pass
+
+    eng = engine_lib.Engine(make_dev_mesh(), "builtin")
+    eng.fit(_gan_task(), iter(_gan_batches(4)), 4,
+            rng=jax.random.key(0), log=_Log(), log_every=2)
+    stats = eng.last_fit_stats
+    assert stats["steps"] == 4
+    assert stats["host_transfers"] == 2
+    assert len(stats["h2d_wait_ms_windows"]) == 2
+    assert stats["h2d_wait_ms"] >= 0.0
+    assert stats["h2d_wait_ms"] == pytest.approx(
+        sum(stats["h2d_wait_ms_windows"]), abs=1e-6)

@@ -1,0 +1,176 @@
+"""Mixed-precision GAN step: bf16 physics parity vs the f32 step, dynamic
+loss-scale skip-on-nonfinite, donation under the policy, and f32 metric
+accumulation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import calo3dgan
+from repro.core import adversarial, gan, validation
+from repro.data.calo import CaloSimulator, CaloSpec
+from repro.launch.mesh import make_dev_mesh
+from repro.optim import optimizers as opt_lib
+from repro.substrate import precision as precision_lib
+from repro.substrate.precision import get_policy
+from repro.train import engine as engine_lib
+from repro.train import metrics as metrics_lib
+
+CFG = calo3dgan.bench()
+
+
+def _train(policy, steps=12, batch=8, seed=0):
+    g_opt = opt_lib.rmsprop(2e-4)
+    d_opt = opt_lib.rmsprop(2e-4)
+    state = adversarial.init_state(jax.random.key(seed), CFG, g_opt, d_opt,
+                                   policy=policy)
+    step = jax.jit(adversarial.make_fused_step(CFG, g_opt, d_opt,
+                                               policy=policy))
+    sim = CaloSimulator(CaloSpec(image_shape=CFG.image_shape), seed=seed)
+    rng = jax.random.key(seed + 1)
+    it = sim.batches(batch)
+    for _ in range(steps):
+        b = {k: jnp.asarray(v) for k, v in next(it).items()}
+        rng, k = jax.random.split(rng)
+        state, m = step(state, b, k)
+    return state, m
+
+
+def _kls(state, seed=99, n=256):
+    sim = CaloSimulator(CaloSpec(image_shape=CFG.image_shape), seed=7)
+    mc = next(sim.batches(n))
+    noise = jax.random.normal(jax.random.key(seed), (n, CFG.latent_dim))
+    fake = gan.generate(state.g_params, noise, jnp.asarray(mc["e_p"]),
+                        jnp.asarray(mc["theta"]), CFG)
+    rep = validation.validation_report(
+        np.asarray(fake, np.float32), mc["image"], mc["e_p"], mc["e_p"])
+    return {k: rep[k] for k in ("longitudinal_kl", "transverse_x_kl",
+                                "transverse_y_kl")}
+
+
+# ---------------------------------------------------------------------------
+# bf16 vs f32 physics parity
+# ---------------------------------------------------------------------------
+
+
+def test_bf16_step_preserves_physics_within_2x_gate():
+    """The paper's bf16 claim: reduced-precision training must keep the
+    profile divergences in the same regime as f32 — the serving gate's
+    existing 2x bar, applied to the KL ratio between the two policies."""
+    s32, m32 = _train(get_policy("f32"))
+    s16, m16 = _train(get_policy("bf16"))
+    assert "loss_scale" in m16 and "loss_scale" not in m32
+    k32, k16 = _kls(s32), _kls(s16)
+    for key in k32:
+        ratio = (k16[key] + 1e-6) / (k32[key] + 1e-6)
+        assert 0.5 <= ratio <= 2.0, (key, k32[key], k16[key])
+
+
+def test_bf16_master_params_and_opt_state_stay_f32():
+    state, _ = _train(get_policy("bf16"), steps=2)
+    for leaf in jax.tree.leaves((state.g_params, state.d_params)):
+        assert leaf.dtype == jnp.float32
+    for leaf in jax.tree.leaves((state.g_opt["nu"], state.d_opt["nu"])):
+        assert leaf.dtype == jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# dynamic loss scaling: skip-on-nonfinite
+# ---------------------------------------------------------------------------
+
+
+def test_loss_scale_skips_nonfinite_phase_and_halves_scale():
+    """A poisoned batch (NaN image) must not write NaNs into the master
+    params: the D-real phase is skipped, its scale halves, and every
+    param stays finite."""
+    policy = get_policy("fp16")
+    g_opt = opt_lib.rmsprop(1e-4)
+    d_opt = opt_lib.rmsprop(1e-4)
+    state = adversarial.init_state(jax.random.key(0), CFG, g_opt, d_opt,
+                                   policy=policy)
+    step = jax.jit(adversarial.make_fused_step(CFG, g_opt, d_opt,
+                                               policy=policy))
+    sim = CaloSimulator(CaloSpec(image_shape=CFG.image_shape), seed=0)
+    b = {k: jnp.asarray(v) for k, v in next(sim.batches(8)).items()}
+    b["image"] = b["image"].at[0, 0, 0, 0, 0].set(jnp.nan)
+    scale0 = float(state.loss_scale.scale)
+    state, m = step(state, b, jax.random.key(1))
+    assert float(m["nonfinite_skips"]) >= 1.0
+    assert float(state.loss_scale.scale) <= scale0 / 2.0
+    for leaf in jax.tree.leaves((state.g_params, state.d_params)):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+def test_loss_scale_state_machine():
+    ls = precision_lib.LossScaleState(jnp.float32(1024.0),
+                                      jnp.zeros((), jnp.int32))
+    dn = precision_lib.next_loss_scale(ls, jnp.bool_(False), 4)
+    assert float(dn.scale) == 512.0 and int(dn.good_steps) == 0
+    up = ls
+    for _ in range(4):
+        up = precision_lib.next_loss_scale(up, jnp.bool_(True), 4)
+    assert float(up.scale) == 2048.0      # grew once after 4 clean phases
+    frozen = precision_lib.next_loss_scale(ls, jnp.bool_(True), 0)
+    assert float(frozen.scale) == 1024.0  # growth_interval=0: bf16 mode
+    floor = precision_lib.LossScaleState(jnp.float32(1.0),
+                                         jnp.zeros((), jnp.int32))
+    assert float(precision_lib.next_loss_scale(
+        floor, jnp.bool_(False), 0).scale) == 1.0   # never below 1
+
+
+def test_all_finite_and_select():
+    good = {"a": jnp.ones((3,)), "b": None}
+    bad = {"a": jnp.array([1.0, jnp.inf, 0.0]), "b": None}
+    assert bool(precision_lib.all_finite(good))
+    assert not bool(precision_lib.all_finite(bad))
+    out = precision_lib.select_finite(jnp.bool_(False), bad, good)
+    np.testing.assert_array_equal(np.asarray(out["a"]), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# donation still holds under the policy
+# ---------------------------------------------------------------------------
+
+
+def test_donation_holds_under_bf16_policy():
+    """The compiled engine step donates its state argument; under the
+    bf16 policy (extra loss-scale leaves in the state) the input buffers
+    must still alias — i.e. be deleted after the call."""
+    mesh = make_dev_mesh()
+    task = engine_lib.gan_task(calo3dgan.reduced(), opt_lib.rmsprop(1e-4),
+                               opt_lib.rmsprop(1e-4),
+                               policy=get_policy("bf16"))
+    eng = engine_lib.Engine(mesh, "builtin")        # donate=True default
+    sim = CaloSimulator(CaloSpec(image_shape=calo3dgan.reduced()
+                                 .image_shape), seed=0)
+    batch = next(sim.batches(8))
+    state = eng.init_state(task, jax.random.key(0))
+    donated_leaf = state.g_params["out"]["w"]
+    step = eng.compile_step(task, batch)
+    new_state, _ = step(state, batch, jax.random.key(1))
+    jax.block_until_ready(new_state.g_params)
+    assert donated_leaf.is_deleted()      # buffer reused: aliasing held
+    assert new_state.loss_scale is not None
+
+
+# ---------------------------------------------------------------------------
+# f32 metric accumulation (cast at add, not at drain)
+# ---------------------------------------------------------------------------
+
+
+def test_metric_accumulator_sums_bf16_in_f32():
+    """A 256-step window of ~1.0-ish bf16 losses: a bf16 running sum
+    saturates (1 ULP at 256 is 2.0), an f32 sum does not — the
+    accumulator must cast at add time."""
+    acc = metrics_lib.MetricAccumulator()
+    val = jnp.asarray(1.015625, jnp.bfloat16)   # exactly representable
+    for _ in range(256):
+        acc.update({"loss": val})
+    assert acc.sums["loss"].dtype == jnp.float32
+    mean = acc.means()["loss"]
+    assert mean == pytest.approx(float(val), rel=1e-5)
+    # the bf16 running sum drifts measurably — the bug this guards
+    drift = jnp.zeros((), jnp.bfloat16)
+    for _ in range(256):
+        drift = drift + val
+    assert abs(float(drift) / 256 - float(val)) > 1e-3

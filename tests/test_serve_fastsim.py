@@ -225,3 +225,33 @@ def test_serve_engine_cache_dtype_follows_policy(policy_name, expect):
     floats = [l for l in jax.tree.leaves(eng.cache)
               if jnp.issubdtype(l.dtype, jnp.floating)]
     assert all(l.dtype == expect for l in floats)
+
+
+# ---------------------------------------------------------------------------
+# restore honors the checkpoint's recorded precision policy
+# ---------------------------------------------------------------------------
+
+
+def test_from_checkpoint_restores_recorded_precision(g_params, tmp_path):
+    path = str(tmp_path / "ckpt_bf16")
+    ckpt_lib.save(path, g_params, step=3,
+                  extra={"kind": "gan_generator", "precision": "bf16"})
+    assert ckpt_lib.manifest_precision(path) == "bf16"
+    eng = SimulateEngine.from_checkpoint(path, CFG, buckets=(4,))
+    assert eng.policy.compute_dtype == jnp.bfloat16
+    # explicit override beats the manifest
+    eng32 = SimulateEngine.from_checkpoint(path, CFG, buckets=(4,),
+                                           policy_name="f32")
+    assert eng32.policy.compute_dtype == jnp.float32
+
+
+def test_from_checkpoint_old_manifest_defaults_to_f32(g_params, tmp_path):
+    """Manifests written before the precision field existed (extra lacks
+    the key) must restore as the f32 they were trained in."""
+    path = str(tmp_path / "ckpt_old")
+    ckpt_lib.save(path, g_params, step=3, extra={"kind": "gan_generator"})
+    assert ckpt_lib.manifest_precision(path) == "f32"
+    eng = SimulateEngine.from_checkpoint(path, CFG, buckets=(4,))
+    assert eng.policy.compute_dtype == jnp.float32
+    img = eng.generate_events(100.0, 3, seed=1)
+    assert img.shape[0] == 3 and np.isfinite(img).all()

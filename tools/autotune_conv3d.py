@@ -1,0 +1,84 @@
+"""Offline conv3d tile autotuner — measure once, every process benefits.
+
+Sweeps the tile-candidate space (`kernels/conv3d/tiles.candidate_tiles`)
+for every conv signature the 3DGAN hot path hits (forward, and with
+``--train`` also the dx/dw backward signatures), TIMES each candidate on
+the live device, and persists the winners to the on-disk cache under
+``results/autotune/<device_kind>.json``.  `tiles.get_tiles` warm-loads
+that cache on first use, so training, serving and the benchmarks all pick
+the tuned tiles up automatically — no call-site changes.
+
+The cache makes the sweep idempotent: a SECOND run performs ZERO
+measurements (every signature hits the cache), which is also this CLI's
+self-check — it prints the measurement count and exits nonzero if
+``--expect-cached`` is given but anything had to be measured.
+
+  PYTHONPATH=src python tools/autotune_conv3d.py \
+      [--config bench|reduced|full] [--dtype float32 bfloat16] [--train]
+      [--steps 3] [--cache-dir results/autotune] [--expect-cached]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="bench",
+                    choices=("bench", "reduced", "full"))
+    ap.add_argument("--dtype", nargs="+", default=["float32", "bfloat16"])
+    ap.add_argument("--train", action="store_true",
+                    help="also tune the backward (dx/dw) signatures")
+    ap.add_argument("--steps", type=int, default=3,
+                    help="timed executions per candidate")
+    ap.add_argument("--cache-dir", default="",
+                    help="override the results/autotune cache directory")
+    ap.add_argument("--expect-cached", action="store_true",
+                    help="exit 1 if any signature needed measuring "
+                         "(the warm-start assertion)")
+    ap.add_argument("--json", default="", help="also dump the report here")
+    args = ap.parse_args(argv)
+
+    import jax.numpy as jnp
+    from repro.configs import calo3dgan
+    from repro.kernels.conv3d import tiles as tiles_lib
+
+    cfg = {"bench": calo3dgan.bench, "reduced": calo3dgan.reduced,
+           "full": calo3dgan.config}[args.config]()
+    cache_dir = args.cache_dir or None
+    total = {"measured": 0, "cached": 0, "entries": []}
+    for dtype_name in args.dtype:
+        dtype = jnp.dtype(dtype_name)
+        rep = tiles_lib.autotune_config(cfg, dtype, steps=args.steps,
+                                        cache_dir=cache_dir,
+                                        train=args.train)
+        total["measured"] += rep["measured"]
+        total["cached"] += rep["cached"]
+        total["entries"] += rep["entries"]
+        print(f"[{dtype_name}] {rep['cached']} cached signatures, "
+              f"{rep['measured']} measurements "
+              f"(device={rep['device_kind']})")
+    for e in total["entries"]:
+        t = e["tiles"]
+        mark = "cache" if e["measurements"] == 0 else f"{e['measurements']}x"
+        print(f"  {e['signature']:<42} -> bn={t['bn']:<4} "
+              f"fuse_taps={t['fuse_taps']} [{mark}]")
+    print(f"cache: {tiles_lib.cache_path(cache_dir=cache_dir)}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(total, f, indent=1)
+    if args.expect_cached and total["measured"]:
+        print(f"EXPECTED warm cache but measured {total['measured']} "
+              "candidates", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

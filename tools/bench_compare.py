@@ -1,0 +1,161 @@
+"""Perf-regression gate: diff fresh BENCH_*.json against the committed ones.
+
+The ``results/BENCH_*.json`` files are the repo's perf trajectory — every
+PR re-records them, so a regression in step time or serving throughput is
+visible in the diff.  This tool makes that gate mechanical:
+
+- **time-like metrics** (keys ending ``_ms`` / ``_s``, plus ``step_ms``
+  rows): a regression is FRESH > BASELINE * (1 + tol);
+- **rate-like metrics** (``events_per_s``, ``samples_per_s``,
+  ``*_speedup``, ``speedup``): a regression is FRESH < BASELINE * (1 - tol).
+
+Rows are matched by their identity fields (non-numeric values like
+``layer`` / ``global_batch``), so re-ordered rows still compare.  Metrics
+present on only one side are reported but never fail the gate (benchmarks
+grow columns over time).  Exits nonzero when any metric regresses by more
+than ``--tol`` (default 0.10 = the 10% gate).
+
+  PYTHONPATH=src python tools/bench_compare.py \
+      --fresh results.fresh --baseline results [--tol 0.10] \
+      [--only kernel_conv3d serve_fastsim]
+
+CI runs the conv3d micro-bench into a scratch directory and compares it
+back against the committed baseline with a container-noise-friendly
+tolerance (see .github/workflows/ci.yml, perf-smoke job).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+RATE_KEYS = ("events_per_s", "samples_per_s", "tok_per_s")
+SKIP_KEYS = ("seconds", "train_s", "compile_s")   # harness time, not perf
+
+
+def _is_rate(key: str) -> bool:
+    return key in RATE_KEYS or key.endswith("speedup")
+
+
+def _is_time(key: str) -> bool:
+    return (key.endswith("_ms") or key.endswith("_s")) \
+        and key not in SKIP_KEYS
+
+
+def _row_identity(row: dict):
+    """Identity of a row = its non-numeric (label-like) fields."""
+    ident = []
+    for k in sorted(row):
+        v = row[k]
+        if isinstance(v, (str, bool)) or k in ("global_batch", "batch",
+                                               "ci", "co", "stride"):
+            ident.append((k, str(v)))
+    return tuple(ident)
+
+
+def _rows(payload: dict):
+    """Normalise a BENCH payload to {identity: {metric: value}} plus the
+    payload-level summary dicts (tile_summary etc.)."""
+    out = {}
+    rows = payload.get("rows")
+    if isinstance(rows, dict):            # single-report benchmarks
+        out[(("row", "summary"),)] = rows
+    elif isinstance(rows, list):
+        for i, row in enumerate(rows):
+            if isinstance(row, dict):
+                out[_row_identity(row) or (("idx", str(i)),)] = row
+    for k, v in payload.items():
+        if k != "rows" and isinstance(v, dict):
+            out[(("section", k),)] = v
+    return out
+
+
+def compare_file(name: str, fresh: dict, base: dict, tol: float,
+                 relative_only: bool = False):
+    """Yields (identity, key, base, fresh, rel_change, is_regression)."""
+    f_rows, b_rows = _rows(fresh), _rows(base)
+    for ident, b_row in b_rows.items():
+        f_row = f_rows.get(ident)
+        if f_row is None:
+            continue                      # row vanished: layout change
+        for key, b_val in b_row.items():
+            if not isinstance(b_val, (int, float)) or isinstance(b_val, bool):
+                continue
+            f_val = f_row.get(key)
+            if not isinstance(f_val, (int, float)) or b_val == 0:
+                continue
+            rel = (f_val - b_val) / abs(b_val)
+            # rate check FIRST: rate keys like events_per_s also end in
+            # "_s" and would otherwise match the time rule inverted
+            if _is_rate(key):
+                # throughputs are machine-specific too; speedup ratios
+                # (pallas-vs-lax, tuned-vs-default) are not
+                if relative_only and not key.endswith("speedup"):
+                    continue
+                worse = rel < -tol
+            elif _is_time(key):
+                if relative_only:         # absolute ms: machine-specific
+                    continue
+                worse = rel > tol
+            else:
+                continue
+            yield ident, key, b_val, f_val, rel, worse
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True,
+                    help="directory (or single file) of fresh BENCH json")
+    ap.add_argument("--baseline", default="results",
+                    help="committed results directory (or single file)")
+    ap.add_argument("--tol", type=float, default=0.10,
+                    help="relative regression tolerance (0.10 = 10%%)")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="restrict to these benchmark names")
+    ap.add_argument("--relative-only", action="store_true",
+                    help="compare only machine-normalized ratio metrics "
+                         "(speedups, rates-of-rates) and skip absolute "
+                         "wall-clock ms — for diffing runs from "
+                         "DIFFERENT machines (e.g. CI runners vs the "
+                         "recorded baseline host)")
+    args = ap.parse_args(argv)
+
+    if os.path.isfile(args.fresh):
+        fresh_files = [args.fresh]
+    else:
+        fresh_files = sorted(glob.glob(os.path.join(args.fresh,
+                                                    "BENCH_*.json")))
+    n_regressions = n_metrics = 0
+    for fpath in fresh_files:
+        name = os.path.basename(fpath)[len("BENCH_"):-len(".json")]
+        if args.only and name not in args.only:
+            continue
+        bpath = (args.baseline if os.path.isfile(args.baseline)
+                 else os.path.join(args.baseline, os.path.basename(fpath)))
+        if not os.path.exists(bpath):
+            print(f"[{name}] no baseline at {bpath} — skipped")
+            continue
+        with open(fpath) as f:
+            fresh = json.load(f)
+        with open(bpath) as f:
+            base = json.load(f)
+        rows = list(compare_file(name, fresh, base, args.tol,
+                                 relative_only=args.relative_only))
+        worse = [r for r in rows if r[-1]]
+        n_metrics += len(rows)
+        n_regressions += len(worse)
+        status = f"{len(worse)} regressions / {len(rows)} compared"
+        print(f"[{name}] {status}")
+        for ident, key, b, fv, rel, _ in worse:
+            label = " ".join(f"{k}={v}" for k, v in ident)
+            print(f"  REGRESSION {label} :: {key}: "
+                  f"{b:.3f} -> {fv:.3f} ({rel:+.0%})")
+    print(f"\nbench_compare: {n_regressions} regressions over "
+          f"{n_metrics} metrics (tol {args.tol:.0%})")
+    return 1 if n_regressions else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
