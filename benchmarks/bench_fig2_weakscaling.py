@@ -2,82 +2,152 @@ import os
 os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=128 "
                            "--xla_backend_optimization_level=0 "
                            "--xla_llvm_disable_expensive_passes=true")
-"""Fig. 2 (right): weak scaling 8 -> 128 TPU cores for the 3DGAN.
+"""Fig. 2 (right): weak scaling over multi-GPU NODES for the 3DGAN.
 
 Runs in its OWN process (sets a 128-device pool before importing jax).
-For each core count we compile the GAN step THROUGH THE UNIFIED ENGINE
-(``--loop builtin`` or ``--loop custom``, see `repro.train.engine`) with
-the paper's per-core BS=128 (global batch grows with cores: weak
-scaling), derive the roofline-bound step time and the epoch time for the
-paper's dataset, and compare with the ideal linear-scaling line — the
-quantities in Fig. 2-right.
+For each node count we fold the virtual devices into the paper's
+hierarchical ``(node, device)`` topology (8 V100-class GPUs per node),
+compile the GAN step THROUGH THE UNIFIED ENGINE (``--loop`` /
+``--grad-reduce`` select the strategy) at the paper's per-device BS=128
+(global batch grows with devices: weak scaling), and report TWO curves
+side by side:
+
+- measured: the roofline-derived step/epoch time from the COMPILED
+  program — jaxpr FLOPs/bytes against the topology's per-device
+  constants, plus the compiled collective traffic priced on the
+  topology's NVLink/NIC links;
+- predicted: the cloud planner's curve (`cloud/planner.py`) — the
+  committed measured single-node step baseline
+  (``results/BENCH_fig1_loop.json``) replayed through the interconnect
+  model.  No efficiency table anywhere on either path.
+
+``--out`` writes the BENCH_fig2_weakscaling.json artifact (the schema
+``benchmarks/run.py`` records for every bench).
 """
+import argparse
+import json
 import time
 
 import numpy as np
 
-EPOCH_SAMPLES = 180_000       # paper-era 3DGAN training-set scale
 
-
-def run(core_counts=(8, 16, 32, 64, 128), loop="builtin"):
+def run(node_counts=(1, 2, 4, 8, 16), devices_per_node=8, loop="builtin",
+        grad_reduce="hierarchical", bucket_mb=4.0, results_dir="results"):
     import jax
     from jax.sharding import Mesh
+    from repro.cloud import interconnect, planner
     from repro.launch import build as build_lib
-    from repro.launch.mesh import HARDWARE
+    from repro.launch.mesh import gpu_topology
     from repro.parallel import collectives, jaxpr_cost
-    from benchmarks.roofline import ici_per_chip_bytes
+
+    bucket_bytes = int(bucket_mb * (1 << 20))
+    try:
+        anchor = planner.load_anchor(results_dir)
+    except (OSError, KeyError, ValueError):
+        anchor = None
+    pred_rows = (planner.weak_scaling_curve(
+        anchor, node_counts=node_counts, devices_per_node=devices_per_node,
+        strategy=grad_reduce, bucket_bytes=bucket_bytes)
+        if anchor is not None else [None] * len(node_counts))
 
     devs = np.array(jax.devices())
     rows = []
-    for n in core_counts:
-        mesh = Mesh(devs[:n].reshape(n, 1), ("data", "model"))
+    for nodes, pred in zip(node_counts, pred_rows):
+        topo = gpu_topology(nodes, devices_per_node)
+        n = topo.total_devices
+        mesh = Mesh(devs[:n].reshape(nodes, devices_per_node),
+                    ("node", "device"))
         with mesh:
             built = build_lib.build_gan_train(mesh, policy_name="bf16",
-                                              loop=loop)
+                                              loop=loop,
+                                              grad_reduce=grad_reduce,
+                                              bucket_mb=bucket_mb)
             lowered = built.lower()
             compiled = lowered.compile()
         jc = jaxpr_cost.cost_of(built.fn, *built.args)
         coll = collectives.collective_stats(compiled.as_text())
-        compute_s = jc["flops"] / (n * HARDWARE["peak_flops_bf16"])
-        memory_s = jc["bytes"] / (n * HARDWARE["hbm_bw"])
-        coll_s = ici_per_chip_bytes(coll, n) / HARDWARE["ici_bw"]
-        step_s = max(compute_s, memory_s, coll_s)
+        compute_s = jc["flops"] / (n * topo.peak_flops)
+        memory_s = jc["bytes"] / (n * topo.hbm_bw)
+        # the compiled program's own all-reduce payload (per-device HLO
+        # result bytes), priced on the topology's links
+        ar_bytes = sum(v["bytes"] for k, v in coll.items())
+        coll_s = interconnect.allreduce_s(ar_bytes, topo, grad_reduce,
+                                          bucket_bytes)
+        step_s = max(compute_s, memory_s) + coll_s
         global_batch = 128 * n
-        steps_per_epoch = EPOCH_SAMPLES / global_batch
-        rows.append({
-            "cores": n,
+        # same dataset scale as the predicted column (planner rows)
+        steps_per_epoch = planner.EPOCH_SAMPLES / global_batch
+        row = {
+            "topology": topo.name, "nodes": nodes, "devices": n,
             "global_batch": global_batch,
-            "step_s_bound": step_s,
-            "epoch_s": step_s * steps_per_epoch,
-            "compute_s": compute_s, "memory_s": memory_s,
-            "collective_s": coll_s,
-            "dominant": max(("compute", compute_s), ("memory", memory_s),
-                            ("collective", coll_s), key=lambda kv: kv[1])[0],
-        })
+            "loop": loop, "grad_reduce": grad_reduce,
+            "measured_step_s": step_s,
+            "measured_epoch_s": step_s * steps_per_epoch,
+            "measured_compute_s": compute_s, "measured_memory_s": memory_s,
+            "measured_collective_s": coll_s,
+            "hlo_collective_bytes": ar_bytes,
+            "jaxpr_collective_bytes": jc["collective_bytes"],
+        }
+        if pred is not None:
+            row.update({
+                "predicted_step_s": pred["step_s_pred"],
+                "predicted_epoch_s": pred["epoch_s_pred"],
+                "predicted_comm_s": pred["comm_s_pred"],
+                "anchor_step_s": anchor.step_s,
+                "anchor_source": anchor.source,
+            })
+        rows.append(row)
         jax.clear_caches()
-    ideal0 = rows[0]["epoch_s"] * rows[0]["cores"]
+    # efficiencies, both normalized to their own single-node row
+    ideal0 = rows[0]["measured_epoch_s"] * rows[0]["devices"]
     for r in rows:
-        r["ideal_epoch_s"] = ideal0 / r["cores"]
-        r["efficiency"] = r["ideal_epoch_s"] / r["epoch_s"]
+        r["measured_efficiency"] = (ideal0 / r["devices"]
+                                    / r["measured_epoch_s"])
+    if anchor is not None:
+        p0 = rows[0]["predicted_step_s"]
+        for r in rows:
+            r["predicted_efficiency"] = p0 / r["predicted_step_s"]
     return rows
 
 
-def main():
-    import argparse
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--loop", default="builtin",
                     choices=("builtin", "custom"))
-    args = ap.parse_args()
-    rows = run(loop=args.loop)
-    print(f"bench_fig2_weakscaling: 3DGAN roofline-derived epoch time "
-          f"(BS=128/core, weak scaling, {args.loop} loop)")
-    print(f"{'cores':>6} {'epoch_s':>9} {'ideal_s':>9} {'eff':>6} "
-          f"{'dominant':>11}")
+    ap.add_argument("--grad-reduce", default="hierarchical",
+                    choices=("flat", "hierarchical"))
+    ap.add_argument("--bucket-mb", type=float, default=4.0)
+    ap.add_argument("--results", default="results",
+                    help="dir holding BENCH_fig1_loop.json (the measured "
+                         "single-node anchor the predictions replay)")
+    ap.add_argument("--out", default="",
+                    help="write BENCH-schema JSON here")
+    args = ap.parse_args(argv)
+    t0 = time.time()
+    rows = run(loop=args.loop, grad_reduce=args.grad_reduce,
+               bucket_mb=args.bucket_mb, results_dir=args.results)
+    print(f"bench_fig2_weakscaling: 3DGAN weak scaling over (node, device) "
+          f"(BS=128/device, {args.loop} loop, {args.grad_reduce} reduce)")
+    have_pred = "predicted_efficiency" in rows[0]
+    hdr = (f"{'devices':>8} {'meas_epoch_s':>12} {'meas_eff':>9}"
+           + (f" {'pred_epoch_s':>12} {'pred_eff':>9}" if have_pred else ""))
+    print(hdr)
     for r in rows:
-        print(f"{r['cores']:>6} {r['epoch_s']:>9.1f} "
-              f"{r['ideal_epoch_s']:>9.1f} {r['efficiency']:>6.2f} "
-              f"{r['dominant']:>11}")
-    print("paper Fig.2-right: linear to 128 cores, epoch ~30s at v3-128")
+        line = (f"{r['devices']:>8} {r['measured_epoch_s']:>12.1f} "
+                f"{r['measured_efficiency']:>9.3f}")
+        if have_pred:
+            line += (f" {r['predicted_epoch_s']:>12.1f} "
+                     f"{r['predicted_efficiency']:>9.3f}")
+        print(line)
+    print("paper Fig.2-right: ~linear to 128 devices; both columns derive "
+          "from measurement + structure, no efficiency table")
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump({"benchmark": "fig2_weakscaling",
+                       "seconds": round(time.time() - t0, 3),
+                       "rows": rows}, f, indent=2, default=str)
+        print(f"[wrote {args.out}]")
     return rows
 
 

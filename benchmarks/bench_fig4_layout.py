@@ -52,7 +52,15 @@ def run(layouts=((32, 1), (16, 2), (8, 4), (4, 8))):
     return rows
 
 
-def main():
+def main(argv=None):
+    import argparse
+    import json
+    import time
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="", help="write BENCH-schema JSON here")
+    args = ap.parse_args(argv)
+    t0 = time.time()
     rows = run()
     print("bench_fig4_layout: (data x model) layouts at 32 chips, "
           "qwen2-1.5b train (global batch 32)")
@@ -64,6 +72,13 @@ def main():
               f"{r['step_bound_s']:>10.2e}")
     best = min(rows, key=lambda r: r["step_bound_s"])
     print(f"best layout: {best['layout']} (paper: fewer, larger workers win)")
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump({"benchmark": "fig4_layout",
+                       "seconds": round(time.time() - t0, 3),
+                       "rows": rows}, f, indent=2, default=str)
+        print(f"[wrote {args.out}]")
     return rows
 
 

@@ -1,11 +1,12 @@
 """Benchmark harness: one benchmark per paper table/figure.
 
 In-process (1 CPU device): fig1 loop, fig2 batch-size, physics, fig5 cost,
-the conv3d kernel bench.  Subprocess (own device pool): fig2 weak scaling
-(128 devs), fig4 layout (32 devs), and the §Roofline report (reads
-results/dryrun_baseline.json produced by repro.launch.dryrun).
+fig6 pipeline, serving, the conv3d kernel bench.  Own-device-pool (each
+sets XLA_FLAGS before importing jax, so it needs its own process): fig2
+weak scaling (128 devs), fig4 layout (32 devs), and the §Roofline report
+(reads results/dryrun_baseline.json produced by repro.launch.dryrun).
 
-Every in-process benchmark's returned rows are written to
+EVERY registered benchmark — in-process or own-pool — writes its rows to
 results/BENCH_<name>.json (machine-readable — the perf-trajectory record
 that successive PRs diff against), in addition to the printed tables.
 
@@ -54,15 +55,25 @@ def _run_inproc(name, main_fn, failures, write=True):
         _write_bench_json(name, rows, time.time() - t0)  # JSON skip this
 
 
-def _sub(mod):
+def _sub(mod, *args):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(HERE, "src")
     env.pop("XLA_FLAGS", None)          # each module sets its own
     t0 = time.time()
-    r = subprocess.run([sys.executable, "-m", mod], cwd=HERE, env=env)
+    r = subprocess.run([sys.executable, "-m", mod, *args], cwd=HERE, env=env)
     print(f"[{mod}: {'ok' if r.returncode == 0 else 'FAILED'} "
           f"in {time.time() - t0:.0f}s]")
     return r.returncode
+
+
+def _run_registered_sub(name, mod, failures, *args):
+    """Registered device-pool bench: runs in its own process (it must
+    set XLA_FLAGS before importing jax) but is a first-class bench —
+    ``--out`` makes it write the same results/BENCH_<name>.json artifact
+    ``_write_bench_json`` produces for the in-process ones."""
+    out = os.path.join(RESULTS, f"BENCH_{name}.json")
+    if _sub(mod, "--out", out):
+        failures.append(name)
 
 
 def main():
@@ -117,13 +128,14 @@ def main():
                 failures, write=False)
 
     if not args.skip_subprocess:
-        _banner("Fig.2 (right) — weak scaling 8..128 cores [subprocess]")
-        if _sub("benchmarks.bench_fig2_weakscaling"):
-            failures.append("weakscaling")
+        _banner("Fig.2 (right) — weak scaling over (node, device) "
+                "[own device pool]")
+        _run_registered_sub("fig2_weakscaling",
+                            "benchmarks.bench_fig2_weakscaling", failures)
 
-        _banner("Fig.4 — worker/mesh layout sweep [subprocess]")
-        if _sub("benchmarks.bench_fig4_layout"):
-            failures.append("layout")
+        _banner("Fig.4 — worker/mesh layout sweep [own device pool]")
+        _run_registered_sub("fig4_layout",
+                            "benchmarks.bench_fig4_layout", failures)
 
         _banner("§Roofline — per (arch x shape x mesh) [reads dry-run JSON]")
         dj = os.path.join(HERE, "results", "dryrun_baseline.json")

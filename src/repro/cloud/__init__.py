@@ -1,4 +1,15 @@
-"""Cloud cost modelling (paper Fig. 5): TPU vs GPU price per epoch."""
-from repro.cloud.costs import EpochCost, PRICES, gpu_epoch_cost, scaling_cost_table, tpu_epoch_cost
+"""Cloud scale-out planning (paper Fig. 2 + Fig. 5).
 
-__all__ = ["EpochCost", "PRICES", "gpu_epoch_cost", "scaling_cost_table", "tpu_epoch_cost"]
+Three layers: ``costs`` (GCP price table + cost-per-epoch arithmetic),
+``interconnect`` (analytic all-reduce time per `launch.mesh.Topology`,
+flat vs. hierarchical), and ``planner`` (replays measured step-time
+baselines from ``results/`` through both to emit weak-scaling curves,
+the cost frontier, and ``recommend(budget, deadline)`` answers).
+CLI: ``tools/plan_scaleout.py``.
+"""
+from repro.cloud.costs import (EpochCost, PAPER_EFFICIENCIES, PRICES,
+                               gpu_epoch_cost, scaling_cost_table,
+                               tpu_epoch_cost)
+
+__all__ = ["EpochCost", "PAPER_EFFICIENCIES", "PRICES", "gpu_epoch_cost",
+           "scaling_cost_table", "tpu_epoch_cost"]

@@ -13,7 +13,7 @@ roofline target.  The paper's headline numbers this model reproduces:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional
 
 # $/hour, GCP europe-west4 (paper-era list prices)
 PRICES = {
@@ -61,15 +61,22 @@ def tpu_epoch_cost(version: str, cores: int, epoch_time_s: float,
                      cores, epoch_time_s, hourly)
 
 
+# the paper's REPORTED Fig. 5 efficiencies — a literature fallback only.
+# The planner path (cloud/planner.cost_frontier) always injects
+# efficiencies DERIVED from measured step times + the interconnect model.
+PAPER_EFFICIENCIES: Dict[int, float] = {
+    2: 1.0, 4: 0.99, 8: 0.97, 16: 0.95, 32: 0.93, 64: 0.90, 128: 0.81}
+
+
 def scaling_cost_table(base_epoch_s: float, base_gpus: int = 2,
-                       efficiencies: Dict[int, float] = None,
+                       efficiencies: Optional[Dict[int, float]] = None,
                        preemptible: bool = True):
     """Fig. 5: epoch time + cost across GPU counts.
 
-    ``efficiencies``: measured parallel efficiency per GPU count (1.0 =
-    perfectly linear; the paper reports ~linear to 64, a drop at 128)."""
-    eff = efficiencies or {2: 1.0, 4: 0.99, 8: 0.97, 16: 0.95, 32: 0.93,
-                           64: 0.90, 128: 0.81}
+    ``efficiencies``: parallel efficiency per GPU count (1.0 = perfectly
+    linear).  Inject measured/derived values here (the planner does);
+    ``None`` falls back to the paper's published ``PAPER_EFFICIENCIES``."""
+    eff = efficiencies if efficiencies is not None else PAPER_EFFICIENCIES
     rows = []
     for n, e in sorted(eff.items()):
         t = base_epoch_s * base_gpus / (n * e)

@@ -1,0 +1,130 @@
+"""Comms-aware analytic model: per-step all-reduce time per topology.
+
+The paper's weak-scaling story (Fig. 2) lives or dies on how gradient
+all-reduce time grows with node count.  This module prices a reduction
+payload on a :class:`repro.launch.mesh.Topology` under the two strategies
+the runtime implements (``parallel/collectives.make_grad_reduce``):
+
+``flat``
+    One ring over ALL ``nodes * devices_per_node`` replicas.  With more
+    than one node the ring crosses node boundaries, so the bandwidth term
+    is bounded by the inter-node NIC, and every replica adds two latency
+    hops — the classic many-small-workers penalty the paper measures in
+    its worker-configuration sweep (Fig. 4).
+
+``hierarchical``
+    Ring reduce-scatter + all-gather INSIDE each node over NVLink/ICI,
+    then per-shard rings ACROSS nodes: the node NIC carries
+    ``2*(n-1)/n * nbytes`` once, and only ``2*(n-1)`` latency hops per
+    bucket remain on the slow link.  Bucketing additionally lets early
+    buckets reduce while the backward pass still computes — the exposed
+    (non-overlapped) time is what enters the predicted step time.
+
+Payloads come from measurement or structure, not guesses: per-phase
+gradient bytes via ``core/adversarial.grad_reduce_traffic`` /
+``train/steps.grad_reduce_traffic``, or the jaxpr walk's
+``collective_bytes`` term (``parallel/jaxpr_cost``) for an arbitrary
+shard_map program.  `cloud/planner.py` combines these predictions with
+measured single-node step times into the Fig. 2 / Fig. 5 curves.
+
+All formulas are standard ring-collective algebra; constants live on the
+``Topology``'s :class:`repro.launch.mesh.Link` objects.
+"""
+from __future__ import annotations
+
+import math
+from typing import Iterable, Sequence, Tuple
+
+from repro.launch.mesh import Link, Topology
+# the model must price the SAME bucket granularity the runtime lowers
+from repro.parallel.collectives import DEFAULT_BUCKET_BYTES
+# fraction of a step's compute that runs AFTER the first gradient bucket
+# is ready (i.e. the backward-pass window bucketed reduction can hide
+# under).  Algorithm 1 is ~2/3 backward by FLOPs.
+OVERLAP_WINDOW = 0.5
+
+
+def ring_allreduce_s(nbytes: float, world: int, link: Link,
+                     n_buckets: int = 1) -> float:
+    """Ring all-reduce of ``nbytes`` over ``world`` peers on one link
+    class: reduce-scatter + all-gather move ``2*(w-1)/w`` of the payload
+    past every peer, plus ``2*(w-1)`` latency hops per bucket."""
+    if world <= 1 or nbytes <= 0:
+        return 0.0
+    bw = 2.0 * (world - 1) / world * nbytes / link.bandwidth
+    lat = 2.0 * (world - 1) * link.latency * max(n_buckets, 1)
+    return bw + lat
+
+
+def n_buckets(nbytes: float, bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> int:
+    return max(1, math.ceil(nbytes / max(bucket_bytes, 1)))
+
+
+def allreduce_s(nbytes: float, topo: Topology, strategy: str = "hierarchical",
+                bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> float:
+    """Wall time of one gradient all-reduce of ``nbytes`` on ``topo``."""
+    d, n = topo.devices_per_node, topo.nodes
+    if nbytes <= 0 or topo.total_devices <= 1:
+        return 0.0
+    nb = n_buckets(nbytes, bucket_bytes)
+    if strategy == "flat":
+        if n == 1:
+            return ring_allreduce_s(nbytes, d, topo.intra_link, 1)
+        # one ring over all N replicas; the stream crosses a NIC at every
+        # node boundary, so the slow link bounds the bandwidth term and
+        # every replica contributes latency hops (un-bucketed: the flat
+        # strategy reduces each tensor in one shot)
+        slow = Link(min(topo.intra_link.bandwidth, topo.inter_link.bandwidth),
+                    max(topo.intra_link.latency, topo.inter_link.latency))
+        return ring_allreduce_s(nbytes, n * d, slow, 1)
+    if strategy != "hierarchical":
+        raise ValueError(f"unknown strategy {strategy!r}")
+    t_intra = ring_allreduce_s(nbytes, d, topo.intra_link, nb)
+    # inter-node: after the intra reduce-scatter each of the d devices
+    # owns nbytes/d; their cross-node rings run in parallel but share the
+    # node NIC, which therefore carries the full 2*(n-1)/n * nbytes
+    t_inter = ring_allreduce_s(nbytes, n, topo.inter_link, nb)
+    return t_intra + t_inter
+
+
+def exposed_comm_s(rounds: Iterable[Tuple[str, float]], topo: Topology,
+                   strategy: str = "hierarchical",
+                   bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                   compute_s: float = 0.0) -> float:
+    """Non-overlapped communication time of one training step.
+
+    ``rounds``: the step's reduction payloads in program order (e.g.
+    ``adversarial.grad_reduce_traffic(cfg)["rounds"]``).  Each round is
+    priced by :func:`allreduce_s`; under the bucketed hierarchical
+    strategy everything except each round's LAST bucket can hide under
+    the backward window (``OVERLAP_WINDOW * compute_s``), so the exposed
+    time is ``max(total - window, tail_buckets)``.  The flat strategy
+    reduces whole tensors after the backward — nothing overlaps.
+    """
+    rounds = list(rounds)
+    total = sum(allreduce_s(b, topo, strategy, bucket_bytes)
+                for _, b in rounds)
+    if strategy != "hierarchical" or total <= 0:
+        return total
+    tail = sum(
+        allreduce_s(b, topo, strategy, bucket_bytes)
+        / n_buckets(b, bucket_bytes)
+        for _, b in rounds)
+    return max(total - OVERLAP_WINDOW * compute_s, tail)
+
+
+def predict_step_s(compute_s: float, rounds: Sequence[Tuple[str, float]],
+                   topo: Topology, strategy: str = "hierarchical",
+                   bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> dict:
+    """Predicted per-step wall time on ``topo``: measured/derived compute
+    plus the exposed communication term.  Returns the decomposition the
+    weak-scaling bench reports side by side with the roofline numbers."""
+    comm = exposed_comm_s(rounds, topo, strategy, bucket_bytes, compute_s)
+    return {
+        "compute_s": compute_s,
+        "comm_s": comm,
+        "comm_total_s": sum(allreduce_s(b, topo, strategy, bucket_bytes)
+                            for _, b in rounds),
+        "step_s": compute_s + comm,
+        "strategy": strategy,
+    }

@@ -32,6 +32,15 @@ class GANConfig:
     # override per run; checkpoints record the resolved value so serving
     # restores showers at the precision the generator trained in.
     precision: str = "bf16"
+    # Gradient-reduction strategy over the data axes ("flat" |
+    # "hierarchical"): hierarchical = intra-node psum over `device`, then
+    # bucketed psums over `node` (collectives.make_grad_reduce) — the
+    # cross-node schedule the custom loop runs on multi-node clusters.
+    # Numerically interchangeable with flat; launch/train.py --grad-reduce
+    # and build_gan_train(grad_reduce=...) override per run.
+    grad_reduce: str = "flat"
+    # Inter-node bucket size (MiB) for the hierarchical strategy.
+    reduce_bucket_mb: float = 4.0
 
 
 def config() -> GANConfig:

@@ -46,6 +46,33 @@ def _freeze_pallas_conv(cfg):
         return cfg                      # config without the field
 
 
+def grad_reduce_traffic(cfg) -> dict:
+    """Per-step gradient-reduction payload of the fused Algorithm-1 step.
+
+    Each phase reduces its OWN gradients before its optimizer update —
+    D params twice (D-real, D-fake), G params ``gen_steps_per_disc``
+    times — so the cross-node interconnect model (cloud/interconnect.py)
+    prices the step as a SEQUENCE of smaller all-reduces, not one big
+    one.  Returns {"rounds": [(name, bytes), ...], "bytes_per_step",
+    "largest_round_bytes"}; shapes only, nothing is allocated.
+    """
+    g_shapes = jax.eval_shape(
+        lambda: gan.init_generator(jax.random.key(0), cfg))
+    d_shapes = jax.eval_shape(
+        lambda: gan.init_discriminator(jax.random.key(0), cfg))
+
+    def tree_bytes(t):
+        return int(sum(np.prod(s.shape) * s.dtype.itemsize
+                       for s in jax.tree.leaves(t)))
+
+    gb, db = tree_bytes(g_shapes), tree_bytes(d_shapes)
+    rounds = [("d_real", db), ("d_fake", db)]
+    rounds += [(f"g{i}", gb) for i in range(cfg.gen_steps_per_disc)]
+    return {"rounds": rounds,
+            "bytes_per_step": sum(b for _, b in rounds),
+            "largest_round_bytes": max(b for _, b in rounds)}
+
+
 class GANState(NamedTuple):
     g_params: dict
     d_params: dict

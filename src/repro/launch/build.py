@@ -182,16 +182,19 @@ def gan_batch_shapes(cfg, n_replicas: int) -> dict:
 
 
 def build_gan_train(mesh: Mesh, *, policy_name: Optional[str] = None,
-                    reduced: bool = False,
-                    loop: str = "builtin") -> BuiltStep:
+                    reduced: bool = False, loop: str = "builtin",
+                    grad_reduce: Optional[str] = None,
+                    bucket_mb: Optional[float] = None) -> BuiltStep:
     """The paper's own architecture: fused Algorithm-1 step, pure DP
     (mirrored-strategy analogue — params replicated, batch sharded).
 
     Delegates to the unified engine: ``loop`` selects the paper's
     built-in (jit + NamedSharding) or custom (shard_map + explicit psum)
-    strategy.  Every mesh axis carries batch — all 256/512 chips are
-    replicas, per-replica BS=128 exactly as the paper runs it (§4).
-    ``policy_name=None`` defers to the config's ``precision`` field."""
+    strategy, ``grad_reduce`` the reduction schedule (flat | hierarchical
+    over a (node, device) mesh).  Every mesh axis carries batch — all
+    256/512 chips are replicas, per-replica BS=128 exactly as the paper
+    runs it (§4).  ``policy_name``/``grad_reduce``/``bucket_mb`` default
+    to the config's ``precision``/``grad_reduce``/``reduce_bucket_mb``."""
     from repro.configs import calo3dgan
     from repro.train import engine as engine_lib
 
@@ -200,6 +203,9 @@ def build_gan_train(mesh: Mesh, *, policy_name: Optional[str] = None,
                                opt_lib.rmsprop(1e-4),
                                policy=get_policy(policy_name
                                                  or cfg.precision))
-    eng = engine_lib.Engine(mesh, loop, dp_axes=tuple(mesh.axis_names))
+    eng = engine_lib.Engine(mesh, loop, dp_axes=tuple(mesh.axis_names),
+                            grad_reduce=grad_reduce or cfg.grad_reduce,
+                            bucket_mb=(cfg.reduce_bucket_mb
+                                       if bucket_mb is None else bucket_mb))
     built = eng.build(task, gan_batch_shapes(cfg, mesh.devices.size))
     return BuiltStep(built.fn, built.args, built.kind)

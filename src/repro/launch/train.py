@@ -29,7 +29,7 @@ import numpy as np
 from repro.configs import base as config_base
 from repro.data.calo import CaloSimulator, CaloSpec
 from repro.data.tokens import MarkovTokens
-from repro.launch.mesh import make_dev_mesh
+from repro.launch.mesh import make_dev_mesh, make_node_mesh
 from repro.models import api
 from repro.optim import optimizers as opt_lib
 from repro.parallel import sharding
@@ -70,7 +70,10 @@ def train_gan(args, mesh, log: MetricLog):
                                    policy=get_policy(precision),
                                    microbatches=args.microbatches)
         # the 3DGAN is PURE data parallelism: every mesh axis is a replica
-        eng = engine_lib.Engine(mesh, loop, dp_axes=tuple(mesh.axis_names))
+        eng = engine_lib.Engine(
+            mesh, loop, dp_axes=tuple(mesh.axis_names),
+            grad_reduce=args.grad_reduce or cfg.grad_reduce,
+            bucket_mb=args.bucket_mb or cfg.reduce_bucket_mb)
         state, _ = eng.fit(task, sim.batches(B), args.steps,
                            rng=jax.random.key(args.seed), log=log,
                            log_every=args.log_every,
@@ -102,7 +105,9 @@ def train_lm(args, mesh, log: MetricLog):
     loop = "builtin" if args.loop == "fused" else args.loop
     task = engine_lib.lm_task(model, cfg, optimizer, policy=policy,
                               microbatches=args.microbatches)
-    eng = engine_lib.Engine(mesh, loop)
+    eng = engine_lib.Engine(mesh, loop,
+                            grad_reduce=args.grad_reduce or "flat",
+                            bucket_mb=args.bucket_mb or 4.0)
 
     B, S = args.batch or 8, args.seq or 256
     data = MarkovTokens(cfg.vocab, seed=args.seed)
@@ -157,6 +162,20 @@ def main():
                          "builtin; naive: host-orchestrated GAN baseline")
     ap.add_argument("--microbatches", type=int, default=1,
                     help="gradient accumulation inside each step")
+    ap.add_argument("--grad-reduce", default="",
+                    choices=("", "flat", "hierarchical"),
+                    help="gradient-reduction strategy (custom loop): flat "
+                         "psum-mean, or hierarchical 2-level (intra-node "
+                         "psum + bucketed inter-node psums over a "
+                         "(node, device) mesh); empty defers to the "
+                         "config's grad_reduce field")
+    ap.add_argument("--bucket-mb", type=float, default=0.0,
+                    help="inter-node bucket size (MiB) for hierarchical "
+                         "grad-reduce (0: config default)")
+    ap.add_argument("--nodes", type=int, default=0,
+                    help="fold the host devices into a virtual "
+                         "(nodes, devices/node) 2-level mesh instead of "
+                         "the flat (data, model) dev mesh")
     ap.add_argument("--policy", default="",
                     help="LM mixed-precision policy name (default f32); "
                          "for the GAN arch an explicit value is honored "
@@ -179,7 +198,8 @@ def main():
         ap.error("--loop naive is the GAN train_on_batch baseline; "
                  "LM archs support builtin/custom/fused")
 
-    mesh = make_dev_mesh(data=len(jax.devices()))
+    mesh = (make_node_mesh(nodes=args.nodes) if args.nodes
+            else make_dev_mesh(data=len(jax.devices())))
     log = MetricLog(args.log or None, print_every=max(args.steps // 20, 1))
     if args.arch == "calo3dgan":
         train_gan(args, mesh, log)

@@ -1,13 +1,29 @@
-"""Parse collective traffic out of lowered/compiled HLO text.
+"""Collective traffic analysis + gradient-reduction strategies.
 
-``cost_analysis()`` does not expose collective bytes, so the roofline's
-third term comes from summing operand/result sizes of every collective op
-in the optimized HLO module.
+Two halves:
+
+1. HLO parsing — ``cost_analysis()`` does not expose collective bytes, so
+   the roofline's third term comes from summing operand/result sizes of
+   every collective op in the optimized HLO module.
+2. Gradient reduction — the strategies the custom training loop selects
+   via config (``flat`` | ``hierarchical``).  ``flat`` is one psum-mean
+   over all data axes (what the engine always did); ``hierarchical`` is
+   the 2-level cluster schedule: intra-node psum over the fast ``device``
+   axis first, then a BUCKETED reduction over the slow ``node`` axis —
+   gradient leaves are packed into ~bucket_bytes 1-D buckets, each bucket
+   its own collective, so XLA can start reducing early buckets while the
+   tail of the backward pass still computes, and small leaves stop paying
+   a per-tensor inter-node latency.  Both strategies divide by the total
+   replica count, so they are numerically interchangeable (asserted by
+   tests/test_scaleout.py at f32 tolerance).
 """
 from __future__ import annotations
 
 import re
 from collections import defaultdict
+
+import jax
+import jax.numpy as jnp
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -125,6 +141,113 @@ def collective_stats(hlo_text: str, scale_loops: bool = True) -> dict:
 
 def total_collective_bytes(hlo_text: str) -> int:
     return sum(v["bytes"] for v in collective_stats(hlo_text).values())
+
+
+GRAD_REDUCE_STRATEGIES = ("flat", "hierarchical")
+DEFAULT_BUCKET_BYTES = 4 << 20        # 4 MiB per inter-node bucket
+
+
+def plan_buckets(leaves, bucket_bytes: int = DEFAULT_BUCKET_BYTES):
+    """Greedy bucket plan over gradient leaves: lists of leaf indices.
+
+    Leaves are packed in flatten order, same-dtype only (buckets are
+    concatenated into one 1-D array), cut when the running size would
+    exceed ``bucket_bytes``.  A single leaf larger than the cap gets its
+    own bucket — nothing is ever split across buckets.
+    """
+    buckets, cur, cur_bytes, cur_dtype = [], [], 0, None
+    for i, leaf in enumerate(leaves):
+        nbytes = leaf.size * leaf.dtype.itemsize
+        if cur and (leaf.dtype != cur_dtype or cur_bytes + nbytes > bucket_bytes):
+            buckets.append(cur)
+            cur, cur_bytes = [], 0
+        cur.append(i)
+        cur_bytes += nbytes
+        cur_dtype = leaf.dtype
+    if cur:
+        buckets.append(cur)
+    return buckets
+
+
+def _bucketed(tree, reduce_vec, bucket_bytes: int):
+    """Apply ``reduce_vec`` (1-D array -> 1-D array) bucket-by-bucket.
+
+    Flattens the tree, packs leaves into :func:`plan_buckets` groups,
+    concatenates each group into one vector, reduces it, and splits the
+    result back into the original shapes/treedef.  Each bucket is an
+    independent collective in the lowered program — the overlap (and
+    latency-amortization) granularity of the hierarchical strategy.
+    """
+    flat, treedef = jax.tree.flatten(tree)
+    out = list(flat)
+    for bucket in plan_buckets(flat, bucket_bytes):
+        vec = jnp.concatenate([flat[i].reshape(-1) for i in bucket]) \
+            if len(bucket) > 1 else flat[bucket[0]].reshape(-1)
+        vec = reduce_vec(vec)
+        off = 0
+        for i in bucket:
+            n = flat[i].size
+            out[i] = jax.lax.slice(vec, (off,), (off + n,)) \
+                .reshape(flat[i].shape)
+            off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def bucket_transform(bucket_bytes: int = DEFAULT_BUCKET_BYTES):
+    """Identity-valued bucket regrouping (concat -> split).
+
+    The builtin (jit + GSPMD) loop's gradients arrive already all-reduced
+    by the partitioner, so there is no explicit psum to restructure; the
+    ``hierarchical`` strategy there only re-expresses the gradient stream
+    at bucket granularity and leaves reduction placement to GSPMD — the
+    exact control gap between the paper's built-in and custom strategies.
+    """
+    def apply(tree):
+        return _bucketed(tree, lambda v: v, bucket_bytes)
+
+    return apply
+
+
+def make_grad_reduce(strategy, mesh, axes, *,
+                     bucket_bytes: int = DEFAULT_BUCKET_BYTES):
+    """Build the ``grad_reduce`` callable the custom (shard_map) loop
+    applies to every phase's gradients before its optimizer update.
+
+    ``strategy``: a callable is passed through; ``"flat"`` is one
+    psum-mean over all ``axes``; ``"hierarchical"`` treats ``axes[0]`` as
+    the slow inter-node axis and ``axes[1:]`` as the fast intra-node axes
+    (mesh convention: ``(node, device)``, and ``(pod, data)`` maps the
+    same way) — intra psum first, then bucketed psums over the node axis,
+    then one division by the global replica count.  Means are identical
+    to ``flat`` up to f32 summation-order rounding.
+    """
+    if strategy is None or callable(strategy):
+        return strategy
+    if strategy not in GRAD_REDUCE_STRATEGIES:
+        raise ValueError(f"grad_reduce must be one of "
+                         f"{GRAD_REDUCE_STRATEGIES}, got {strategy!r}")
+    axes = tuple(axes or ())
+    if not axes:
+        return lambda tree: tree
+    if strategy == "flat":
+        return lambda tree: jax.lax.pmean(tree, axes)
+    if len(axes) < 2:
+        raise ValueError(
+            "hierarchical grad_reduce needs a 2-level mesh (node, device); "
+            f"got data axes {axes} — use strategy='flat' on flat meshes")
+    inter, intra = axes[0], axes[1:]
+    world = 1
+    for a in axes:
+        world *= mesh.shape[a]
+    inv = 1.0 / world
+
+    def reduce(tree):
+        tree = jax.lax.psum(tree, intra)                 # NVLink/ICI hop
+        tree = _bucketed(tree, lambda v: jax.lax.psum(v, inter),
+                         bucket_bytes)                    # NIC hops, bucketed
+        return jax.tree.map(lambda g: g * jnp.asarray(inv, g.dtype), tree)
+
+    return reduce
 
 
 def ici_traffic_bytes(stats: dict, n_devices: int) -> float:

@@ -79,6 +79,16 @@ def _eqn_bytes(eqn) -> int:
     return total if total >= _BIG else 0
 
 
+# jaxpr-level collective primitives (only visible inside shard_map bodies —
+# the custom loop's explicit psums).  Their result bytes feed the cross-node
+# interconnect model (cloud/interconnect.py): for the custom GAN loop the
+# psum'd bytes ARE the per-phase gradient-reduction payload.
+_COLLECTIVE_PRIMS = {
+    "psum", "psum2", "psum_invariant", "pmax", "pmin", "all_gather",
+    "all_to_all", "reduce_scatter", "ppermute", "pbroadcast",
+}
+
+
 _CALL_SUBJAXPR_KEYS = ("jaxpr", "call_jaxpr", "fun_jaxpr", "cond_jaxpr")
 
 
@@ -114,13 +124,18 @@ def _walk(jaxpr, mult: float, acc: dict):
             # count the most expensive branch (worst case)
             subs = []
             for br in branches:
-                sub = {"flops": 0.0, "bytes": 0.0, "dot_count": 0.0}
+                sub = {k: 0.0 for k in acc}
                 _walk(br.jaxpr, mult, sub)
                 subs.append(sub)
             best = max(subs, key=lambda s: s["flops"])
             for k in best:
                 acc[k] += best[k]
             continue
+        elif prim in _COLLECTIVE_PRIMS:
+            # per-replica payload (the shard_map multiplier already scaled
+            # ``mult`` by the mesh size, so this totals GLOBAL bytes)
+            acc["collective_bytes"] += mult * sum(
+                _aval_bytes(v.aval) for v in eqn.outvars)
         else:
             handled = False
             for key in _CALL_SUBJAXPR_KEYS:
@@ -135,12 +150,17 @@ def _walk(jaxpr, mult: float, acc: dict):
 
 
 def jaxpr_cost(closed_jaxpr) -> dict:
-    """Returns {"flops", "bytes", "dot_count"} — GLOBAL (unsharded) totals.
+    """Returns {"flops", "bytes", "dot_count", "collective_bytes"} — GLOBAL
+    (unsharded) totals.
 
     ``flops`` counts matmul/conv MACs*2 (the MXU term); ``bytes`` is the
-    structural memory-traffic estimate described in the module docstring.
+    structural memory-traffic estimate described in the module docstring;
+    ``collective_bytes`` sums explicit jaxpr collectives (psum & friends,
+    nonzero only for shard_map programs — the custom loop's gradient
+    reductions) and feeds the interconnect model.
     """
-    acc = {"flops": 0.0, "bytes": 0.0, "dot_count": 0.0}
+    acc = {"flops": 0.0, "bytes": 0.0, "dot_count": 0.0,
+           "collective_bytes": 0.0}
     _walk(closed_jaxpr.jaxpr, 1.0, acc)
     return acc
 

@@ -39,7 +39,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # activation/cache logical axes shared by all rule sets
 _ACT_RULES = {
-    "batch": ("pod", "data"),
+    "batch": ("pod", "node", "data", "device"),
     "cache_seq": "model",
 }
 
@@ -114,8 +114,14 @@ def tree_shardings(axes_tree, shape_tree, mesh: Mesh, rules: dict):
 
 
 def batch_axes(mesh: Mesh):
-    """Mesh axes carrying the batch dimension (paper: pure DP over these)."""
-    names = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    """Mesh axes carrying the batch dimension (paper: pure DP over these).
+
+    Slow-to-fast order: ``pod``/``node`` (cross-pod / cross-node) before
+    ``data``/``device`` — the hierarchical grad-reduce strategy relies on
+    axis 0 being the inter-node level (see collectives.make_grad_reduce).
+    """
+    names = tuple(a for a in ("pod", "node", "data", "device")
+                  if a in mesh.axis_names)
     return names if names else None
 
 

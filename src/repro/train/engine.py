@@ -71,7 +71,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.data import pipeline
-from repro.parallel import sharding
+from repro.parallel import collectives, sharding
 from repro.train import metrics as metrics_lib
 from repro.train import steps as steps_lib
 
@@ -195,17 +195,45 @@ class Engine:
         replica, exactly as the paper runs 3DGAN on 256/512 chips.
     donate
         Donate the input state buffers to each step (default True).
+    grad_reduce
+        Reduction strategy for the gradients (``"flat"`` |
+        ``"hierarchical"`` | a callable).  In the custom loop ``flat`` is
+        the classic psum-mean over all data axes and ``hierarchical`` is
+        the 2-level cluster schedule (intra-node psum over the fast axis,
+        bucketed psums over the slow ``node`` axis — see
+        ``collectives.make_grad_reduce``); both are numerically
+        interchangeable.  In the builtin loop GSPMD owns reduction
+        placement (the paper's point about built-in strategies), so
+        ``hierarchical`` only regroups the gradient stream into buckets
+        (``collectives.bucket_transform``, identity numerics).
+    bucket_mb
+        Inter-node bucket size in MiB for the hierarchical strategy.
     """
 
     def __init__(self, mesh: Mesh, loop: str = "builtin", *,
-                 dp_axes: Optional[tuple] = None, donate: bool = True):
+                 dp_axes: Optional[tuple] = None, donate: bool = True,
+                 grad_reduce="flat", bucket_mb: float = 4.0):
         if loop not in LOOPS:
             raise ValueError(f"loop must be one of {LOOPS}, got {loop!r}")
+        if (isinstance(grad_reduce, str)
+                and grad_reduce not in collectives.GRAD_REDUCE_STRATEGIES):
+            raise ValueError(
+                f"grad_reduce must be one of "
+                f"{collectives.GRAD_REDUCE_STRATEGIES} or a callable, "
+                f"got {grad_reduce!r}")
         self.mesh = mesh
         self.loop = loop
         self.donate = donate
+        self.grad_reduce = grad_reduce
+        self.bucket_bytes = int(bucket_mb * (1 << 20))
         axes = dp_axes if dp_axes is not None else sharding.batch_axes(mesh)
         self.axes: tuple = tuple(axes) if axes else ()
+        if grad_reduce == "hierarchical" and loop == "custom" \
+                and len(self.axes) < 2:
+            raise ValueError(
+                "hierarchical grad_reduce needs a 2-level mesh "
+                f"(node, device); this engine's data axes are {self.axes} "
+                "— build the mesh with launch.mesh.make_node_mesh")
         self.n_shards = 1
         for a in self.axes:
             self.n_shards *= mesh.shape[a]
@@ -275,8 +303,15 @@ class Engine:
         return jax.device_put(task.init(rng), NamedSharding(self.mesh, P()))
 
     def _grad_reduce(self, tree):
-        """Explicit gradient reduction for the custom loop: psum / n."""
-        return jax.lax.pmean(tree, self.axes) if self.axes else tree
+        """Explicit gradient reduction for the custom loop, per strategy:
+        flat psum-mean over all data axes, or the hierarchical 2-level
+        bucketed schedule (collectives.make_grad_reduce)."""
+        if not self.axes:
+            return tree
+        fn = collectives.make_grad_reduce(self.grad_reduce, self.mesh,
+                                          self.axes,
+                                          bucket_bytes=self.bucket_bytes)
+        return fn(tree)
 
     def compile_step(self, task: Task, batch_like: Mapping[str, Any]):
         """Compile ``step(state, batch, rng) -> (state, metrics)``.
@@ -292,7 +327,17 @@ class Engine:
         donate = (0,) if self.donate else ()
 
         if self.loop == "builtin":
-            step = task.make_step(grad_reduce=None, mesh=self.mesh)
+            # GSPMD inserts the gradient all-reduce itself; hierarchical
+            # mode only re-expresses the grads at bucket granularity.
+            # A user-supplied callable is honored exactly as in the
+            # custom loop.
+            if callable(self.grad_reduce):
+                reduce = self.grad_reduce
+            elif self.grad_reduce == "hierarchical":
+                reduce = collectives.bucket_transform(self.bucket_bytes)
+            else:
+                reduce = None
+            step = task.make_step(grad_reduce=reduce, mesh=self.mesh)
             return jax.jit(step, in_shardings=(rep, b_shard, rep),
                            out_shardings=(rep, rep), donate_argnums=donate)
 

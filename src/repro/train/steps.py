@@ -95,6 +95,17 @@ def make_train_step(model, cfg, optimizer, policy, mesh=None,
     return train_step
 
 
+def grad_reduce_traffic(model, cfg) -> dict:
+    """LM analogue of ``adversarial.grad_reduce_traffic``: one gradient
+    reduction per step, param-tree-sized.  Feeds cloud/interconnect."""
+    import numpy as np
+    shapes = jax.eval_shape(lambda: model.init(jax.random.key(0), cfg))
+    nbytes = int(sum(np.prod(s.shape) * s.dtype.itemsize
+                     for s in jax.tree.leaves(shapes)))
+    return {"rounds": [("step", nbytes)], "bytes_per_step": nbytes,
+            "largest_round_bytes": nbytes}
+
+
 def make_serve_step(model, cfg, policy, mesh=None, window: int = 0):
     def serve_step(params, tokens1, cache, pos, extra):
         logits, cache = model.decode_step(

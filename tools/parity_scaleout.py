@@ -1,0 +1,79 @@
+#!/usr/bin/env python
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=4 "
+                           + os.environ.get("XLA_FLAGS", ""))
+"""2x2 virtual-topology parity check: hierarchical vs flat grad-reduce.
+
+Folds 4 virtual CPU devices into a ``(node=2, device=2)`` mesh (so both
+collective levels are REAL multi-participant reductions) and runs the
+reduced 3DGAN a few steps under every (loop, grad_reduce) combination.
+The hierarchical schedule (intra-node psum + bucketed inter-node psums,
+`parallel/collectives.make_grad_reduce`) must match the flat psum-mean to
+f32 summation-order tolerance for BOTH engine loops — the fail-fast gate
+CI's scaleout-smoke job runs so topology regressions never land.
+
+  PYTHONPATH=src python tools/parity_scaleout.py   # exit 0 on parity
+"""
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+STEPS = 2
+TOL = 2e-5          # f32 summation-order rounding across 4 replicas
+
+
+def main():
+    import jax
+    import numpy as np
+
+    from repro.configs import calo3dgan
+    from repro.data.calo import CaloSimulator, CaloSpec
+    from repro.launch.mesh import make_node_mesh
+    from repro.optim import optimizers as opt_lib
+    from repro.train import engine as engine_lib
+
+    assert len(jax.devices()) >= 4, jax.devices()
+    cfg = calo3dgan.reduced()
+    mesh = make_node_mesh(2, 2)
+    sim = CaloSimulator(CaloSpec(image_shape=cfg.image_shape), seed=3)
+    batches = [next(sim.batches(8)) for _ in range(STEPS)]
+
+    states = {}
+    for loop in ("builtin", "custom"):
+        for strat in ("flat", "hierarchical"):
+            task = engine_lib.gan_task(cfg, opt_lib.rmsprop(1e-4),
+                                       opt_lib.rmsprop(1e-4))
+            eng = engine_lib.Engine(mesh, loop, dp_axes=("node", "device"),
+                                    grad_reduce=strat, bucket_mb=0.05)
+            state = eng.init_state(task, jax.random.key(0))
+            step = eng.compile_step(task, batches[0])
+            rng = jax.random.key(1)
+            for b in batches:
+                rng, k = jax.random.split(rng)
+                state, _ = step(state, b, k)
+            states[(loop, strat)] = state
+
+    failed = False
+    for loop in ("builtin", "custom"):
+        a, b = states[(loop, "flat")], states[(loop, "hierarchical")]
+        leaves = zip(
+            jax.tree.leaves(a.g_params) + jax.tree.leaves(a.d_params),
+            jax.tree.leaves(b.g_params) + jax.tree.leaves(b.d_params))
+        diff = max(float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
+                   for x, y in leaves)
+        ok = diff <= TOL
+        failed |= not ok
+        print(f"{loop:>8} loop: flat-vs-hierarchical max param diff after "
+              f"{STEPS} steps on (node=2, device=2): {diff:.2e} "
+              f"[{'OK' if ok else 'FAIL'} tol={TOL:g}]")
+    if failed:
+        return 1
+    print("parity OK: hierarchical grad-reduce matches flat psum on the "
+          "2x2 virtual topology for both engine loops")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,107 @@
+#!/usr/bin/env python
+"""Cloud scale-out planner CLI (paper Fig. 2 + Fig. 5, answered offline).
+
+Replays the committed measured baselines (``results/BENCH_fig1_loop.json``)
+through the topology-aware interconnect model and the GCP price table:
+
+  PYTHONPATH=src python tools/plan_scaleout.py --results results
+  PYTHONPATH=src python tools/plan_scaleout.py --budget 5 --deadline 600
+  PYTHONPATH=src python tools/plan_scaleout.py --grad-reduce flat
+
+Prints (1) the predicted Fig. 2 weak-scaling curve for V100 nodes ×
+{1..16} from the measured single-node anchor, (2) the Fig. 5 cost/epoch
+frontier with planner-derived efficiencies (nothing tabulated), and
+(3) a ``recommend(budget, deadline)`` answer when both are given.
+Exit code 1 when a recommendation is requested but infeasible.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.cloud import planner  # noqa: E402
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results",
+                    help="dir with BENCH_fig1_loop.json (measured anchor)")
+    ap.add_argument("--grad-reduce", default="hierarchical",
+                    choices=("flat", "hierarchical"))
+    ap.add_argument("--bucket-mb", type=float, default=4.0)
+    ap.add_argument("--base-epoch-s", type=float, default=5200.0,
+                    help="paper's measured 2-GPU epoch anchor for the "
+                         "cost table (seconds)")
+    ap.add_argument("--epochs", type=int, default=1)
+    ap.add_argument("--budget", type=float, default=0.0,
+                    help="USD budget for the recommend() query")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="wall-clock deadline (s) for recommend()")
+    ap.add_argument("--out", default="", help="also write plan JSON here")
+    args = ap.parse_args(argv)
+    bucket_bytes = int(args.bucket_mb * (1 << 20))
+
+    anchor = planner.load_anchor(args.results)
+    print(f"measured anchor: {anchor.step_s * 1e3:.1f} ms/step at global "
+          f"batch {anchor.global_batch} ({anchor.loop} loop, "
+          f"{anchor.source})")
+
+    print(f"\nFig. 2 — predicted weak scaling, V100 nodes x 8 GPUs "
+          f"({args.grad_reduce} reduce, {args.bucket_mb:g} MiB buckets):")
+    curve = planner.weak_scaling_curve(anchor, strategy=args.grad_reduce,
+                                       bucket_bytes=bucket_bytes)
+    print(f"{'topology':>10} {'devices':>8} {'step_s':>9} {'comm_ms':>9} "
+          f"{'epoch_s':>9} {'eff':>6}")
+    for r in curve:
+        print(f"{r['topology']:>10} {r['devices']:>8} "
+              f"{r['step_s_pred']:>9.3f} {r['comm_s_pred'] * 1e3:>9.3f} "
+              f"{r['epoch_s_pred']:>9.1f} {r['efficiency_pred']:>6.3f}")
+
+    print(f"\nFig. 5 — cost/epoch frontier (efficiencies derived from the "
+          f"measured base step + interconnect model):")
+    frontier = planner.cost_frontier(
+        args.base_epoch_s, strategy=args.grad_reduce,
+        bucket_bytes=bucket_bytes,
+        tpu_epochs={"v3-8": 480.0, "v2-8": 1056.0, "v3-32": None})
+    print(f"{'device':>16} {'n':>4} {'epoch_s':>9} {'cost_usd':>9}")
+    for r in frontier:
+        print(f"{r['device']:>16} {r['n']:>4} {r['epoch_s']:>9.0f} "
+              f"{r['cost_usd']:>9.2f}")
+    eff64 = next(r["efficiency"] for r in frontier
+                 if r["device"] == "V100" and r["n"] == 64)
+    print(f"predicted weak-scaling efficiency at 64 GPUs: {eff64:.4f} "
+          "(measured step + interconnect model, no efficiency table)")
+
+    rec = None
+    if args.budget or args.deadline:
+        budget = args.budget or float("inf")
+        deadline = args.deadline or float("inf")
+        rec = planner.recommend(frontier, budget, deadline,
+                                epochs=args.epochs)
+        if rec is None:
+            print(f"\nrecommend: NO offering trains {args.epochs} epoch(s) "
+                  f"within ${budget:g} and {deadline:g}s")
+        else:
+            print(f"\nrecommend: {rec['device']} x{rec['n']} — "
+                  f"{rec['total_time_s']:.0f}s, "
+                  f"${rec['total_cost_usd']:.2f} for {args.epochs} epoch(s)")
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump({"anchor": anchor.__dict__, "weak_scaling": curve,
+                       "cost_frontier": frontier, "recommend": rec},
+                      f, indent=2, default=str)
+        print(f"[wrote {args.out}]")
+    if (args.budget or args.deadline) and rec is None:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
