@@ -219,6 +219,50 @@ def cost_frontier(base_epoch_s: float, *, base_gpus: int = 2,
     return rows
 
 
+def load_elastic(results_dir: str) -> Optional[dict]:
+    """Measured elastic overhead from ``results/BENCH_elastic.json``.
+
+    Returns ``{"overhead_frac", "recovery_s", "lost_steps", "source"}``
+    (or None when the benchmark has not been recorded).  The overhead
+    fraction is the measured faulted-vs-clean wall-time ratio minus one —
+    what riding through the trace's preemptions actually cost, recovery
+    time and redone steps included (`tools/run_elastic.py` records it).
+    """
+    path = os.path.join(results_dir, "BENCH_elastic.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        payload = json.load(f)
+    rows = payload.get("rows", {})
+    return {"overhead_frac": float(rows.get("overhead_frac", 0.0)),
+            "recovery_s": float(rows.get("recovery_s", 0.0)),
+            "lost_steps": int(rows.get("lost_steps", 0)),
+            "source": path}
+
+
+def apply_elastic_overhead(rows: Iterable[dict],
+                           overhead_frac: float) -> list:
+    """Derate the PREEMPTIBLE rows of a cost frontier by the measured
+    elastic overhead: epoch time and cost both scale by ``1 + overhead``
+    (recoveries burn wall clock AND billed instance-hours).  Reserved
+    rows pass through untouched — preemptions don't happen there.  Feed
+    the result to :func:`recommend` for a preemption-honest answer:
+    spot capacity stays the paper's >3x win while the measured overhead
+    is small, and the planner flips to reserved when recovery costs eat
+    the discount.
+    """
+    if overhead_frac < 0:
+        raise ValueError(f"overhead_frac must be >= 0, got {overhead_frac}")
+    out = []
+    for r in rows:
+        if str(r.get("device", "")).endswith("-pre"):
+            r = dict(r, epoch_s=r["epoch_s"] * (1 + overhead_frac),
+                     cost_usd=r["cost_usd"] * (1 + overhead_frac),
+                     elastic_overhead=overhead_frac)
+        out.append(r)
+    return out
+
+
 def recommend(rows: Iterable[dict], budget_usd: float, deadline_s: float,
               epochs: int = 1) -> Optional[dict]:
     """Cheapest offering that trains ``epochs`` epochs within both the

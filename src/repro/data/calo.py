@@ -88,7 +88,17 @@ class CaloSimulator:
         ecal = img.sum(axis=(1, 2, 3)).astype(np.float32)
         return img, e_p, theta, ecal
 
-    def batches(self, batch: int):
+    def batches(self, batch: int, skip: int = 0):
+        """Endless batch stream; ``skip`` discards the first N batches.
+
+        The elastic trainer's replay contract: a simulator seeded once
+        and asked for ``batches(b, skip=s)`` yields EXACTLY the batches
+        a fresh ``batches(b)`` would yield from step ``s`` on (the
+        generate-and-discard keeps this instance's RNG stream aligned),
+        so a resumed run sees the same data the uninterrupted run saw.
+        """
+        for _ in range(skip):
+            self.generate(batch)
         while True:
             img, e_p, theta, ecal = self.generate(batch)
             yield {"image": img[..., None],      # (B, X, Y, Z, 1) NDHWC

@@ -27,6 +27,7 @@ import dataclasses
 from typing import Tuple
 
 import jax
+import numpy as np
 
 
 # ---------------------------------------------------------------------------
@@ -152,6 +153,37 @@ def make_node_mesh(nodes: int = 1, devices_per_node: int = 0,
             f"devices, host has {n_avail} (set "
             "--xla_force_host_platform_device_count before importing jax)")
     return jax.make_mesh((nodes, devices_per_node), ("node", "device"))
+
+
+def surviving_devices(mesh, lost_node: int):
+    """The device grid of a ``(node, device)`` mesh minus one node row.
+
+    The elastic trainer's view of a preemption: node ``lost_node``'s
+    devices are gone, the remaining rows keep their order (surviving
+    replicas keep their relative ranks)."""
+    grid = np.asarray(mesh.devices)
+    if grid.ndim != 2 or mesh.axis_names != ("node", "device"):
+        raise ValueError(
+            f"expected a (node, device) mesh, got {mesh.axis_names} "
+            f"of shape {grid.shape}")
+    if not 0 <= lost_node < grid.shape[0]:
+        raise ValueError(f"lost_node {lost_node} out of range for "
+                         f"{grid.shape[0]} nodes")
+    keep = [r for r in range(grid.shape[0]) if r != lost_node]
+    return grid[keep]
+
+
+def shrink_node_mesh(mesh, lost_node: int):
+    """Re-mesh after losing a node: the surviving ``(node, device)`` grid.
+
+    Raises ``ValueError`` when the mesh has a single node — with no
+    surviving capacity there is nothing to re-mesh onto (the elastic
+    trainer treats that preemption as respawn-and-restart instead).
+    """
+    grid = surviving_devices(mesh, lost_node)
+    if grid.shape[0] == 0:
+        raise ValueError("cannot shrink a single-node mesh: no survivors")
+    return jax.sharding.Mesh(grid, ("node", "device"))
 
 
 def make_production_mesh(*, multi_pod: bool = False, data: int = 16,

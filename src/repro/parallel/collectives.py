@@ -155,6 +155,8 @@ def plan_buckets(leaves, bucket_bytes: int = DEFAULT_BUCKET_BYTES):
     exceed ``bucket_bytes``.  A single leaf larger than the cap gets its
     own bucket — nothing is ever split across buckets.
     """
+    if bucket_bytes <= 0:
+        raise ValueError(f"bucket_bytes must be > 0, got {bucket_bytes}")
     buckets, cur, cur_bytes, cur_dtype = [], [], 0, None
     for i, leaf in enumerate(leaves):
         nbytes = leaf.size * leaf.dtype.itemsize

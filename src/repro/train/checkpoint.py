@@ -1,27 +1,54 @@
-"""Checkpointing: pytree <-> directory of .npz + msgpack-free manifest.
+"""Checkpointing: pytree <-> directory of .npz, plus async snapshots.
 
-Arrays are saved in one compressed npz keyed by flattened path; the tree
-structure is restored by matching paths against a freshly-initialised
-template (so code evolution that preserves param names keeps old ckpts
-loadable).
+Two layers:
+
+- **Synchronous primitives** (`save` / `restore` / `manifest`): arrays in
+  one compressed npz keyed by flattened path; the tree structure is
+  restored by matching paths against a freshly-initialised template (so
+  code evolution that preserves param names keeps old ckpts loadable).
+  ``restore`` is STRICT: a checkpoint/template leaf mismatch in either
+  direction raises with the offending key paths — silent partial restores
+  were how resumed runs drifted.
+
+- **`AsyncCheckpointer`**: elastic-training snapshots OFF the critical
+  path.  ``save(step, state)`` dispatches a cheap device-side copy of the
+  live (possibly donated) buffers and enqueues it to a writer thread; the
+  writer performs the device->host transfer, writes into a temp directory
+  and atomically renames it to ``step-XXXXXXXX`` (a torn write never
+  becomes the "latest" snapshot), records a manifest (step / topology /
+  precision), and prunes to a bounded keep-last-K.  The training loop
+  never blocks and never reads from device — asserted by the chaos suite
+  with the same transfer-guard + dispatch-counter discipline as
+  `tests/test_engine.py`.
+
+Recovery (`restore_latest`) walks snapshots newest-first and falls back
+past corrupt/truncated ones, which together with `train/faults.py`'s
+``corrupt`` events makes the fallback path a tested code path, not a
+hope.
 """
 from __future__ import annotations
 
 import json
 import os
+import queue
 import re
+import shutil
+import threading
+import time
+from typing import Any, List, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+
+
+def _path_key(path) -> str:
+    return "/".join(re.sub(r"[\[\]'\.]", "", str(p)) for p in path)
 
 
 def _flatten(tree):
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
-    out = {}
-    for path, leaf in flat:
-        key = "/".join(re.sub(r"[\[\]'\.]", "", str(p)) for p in path)
-        out[key] = np.asarray(leaf)
-    return out
+    return {_path_key(path): np.asarray(leaf) for path, leaf in flat}
 
 
 def save(path: str, tree, step: int = 0, extra: dict = None):
@@ -35,18 +62,31 @@ def save(path: str, tree, step: int = 0, extra: dict = None):
 
 
 def restore(path: str, template):
-    """Restore into the structure of `template` (shapes must match)."""
+    """Restore into the structure of `template` (shapes must match).
+
+    STRICT: leaves present in the checkpoint but not the template, or
+    required by the template but missing from the checkpoint, raise
+    ``ValueError`` naming the offending key paths — a template that
+    disagrees with the saved tree is a code/config mismatch the caller
+    must see, never a silent partial restore.
+    """
     with np.load(os.path.join(path, "arrays.npz")) as z:
         arrays = {k: z[k] for k in z.files}
     paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    keys = [_path_key(p) for p, _ in paths]
+    missing = [k for k in keys if k not in arrays]
+    extra = sorted(set(arrays) - set(keys))
+    if missing or extra:
+        raise ValueError(
+            f"checkpoint/template mismatch at {path}: "
+            f"missing from checkpoint: {missing or 'none'}; "
+            f"not in template: {extra or 'none'}")
     leaves = []
-    for p, leaf in paths:
-        key = "/".join(re.sub(r"[\[\]'\.]", "", str(x)) for x in p)
-        if key not in arrays:
-            raise KeyError(f"checkpoint missing {key}")
+    for key, (p, leaf) in zip(keys, paths):
         a = arrays[key]
-        if a.shape != np.shape(leaf):
-            raise ValueError(f"{key}: ckpt {a.shape} vs template {np.shape(leaf)}")
+        shape = tuple(getattr(leaf, "shape", np.shape(leaf)))
+        if a.shape != shape:
+            raise ValueError(f"{key}: ckpt {a.shape} vs template {shape}")
         leaves.append(a.astype(np.asarray(leaf).dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
@@ -86,3 +126,157 @@ def restore_gan_generator(path: str, cfg):
     from repro.core import gan
     template = gan.init_generator(jax.random.key(0), cfg)
     return restore(path, template)
+
+
+# ---------------------------------------------------------------------------
+# Async snapshot store (elastic training)
+# ---------------------------------------------------------------------------
+
+_STEP_DIR = re.compile(r"^step-(\d{8})$")
+
+
+def step_dir(root: str, step: int) -> str:
+    return os.path.join(root, f"step-{int(step):08d}")
+
+
+def checkpoint_steps(root: str) -> List[int]:
+    """Completed snapshot steps under ``root``, ascending.  Temp dirs
+    (in-flight writes) are invisible — only atomically-renamed snapshots
+    count."""
+    if not os.path.isdir(root):
+        return []
+    steps = []
+    for name in os.listdir(root):
+        m = _STEP_DIR.match(name)
+        if m:
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def restore_latest(root: str, template) -> Tuple[int, Any, Optional[dict],
+                                                 int]:
+    """Newest VALID snapshot: ``(step, tree, manifest, n_skipped)``.
+
+    Walks snapshots newest-first; a snapshot that fails to load (torn
+    write, truncated npz, missing manifest, leaf mismatch) is skipped and
+    the previous one is tried — the corrupt-checkpoint fallback.  Returns
+    ``(0, None, None, n_skipped)`` when no valid snapshot exists.
+    """
+    skipped = 0
+    for step in reversed(checkpoint_steps(root)):
+        path = step_dir(root, step)
+        try:
+            tree = restore(path, template)
+            man = manifest(path)
+            return step, tree, man, skipped
+        except Exception:
+            skipped += 1
+    return 0, None, None, skipped
+
+
+class AsyncCheckpointer:
+    """Keep-last-K snapshot writer off the training critical path.
+
+    ``save(step, state)`` costs the main thread only a device-side copy
+    DISPATCH (the copy protects the snapshot from the engine's buffer
+    donation) plus a queue put; the writer thread owns the device->host
+    transfer and all filesystem work.  Snapshots appear atomically via
+    temp-dir + ``os.rename`` and carry a manifest with the step, the
+    topology that wrote them, and the precision policy — recovery uses it
+    to decide how to reshard and at what precision to resume.
+
+    ``stats``: {"saved", "pruned", "snapshot_ms" (main-thread dispatch
+    cost), "write_ms" (writer-thread transfer+IO), "writer_thread"}.
+    Writer-side exceptions are re-raised on :meth:`wait`.
+    """
+
+    def __init__(self, root: str, *, keep: int = 3,
+                 extra: Optional[dict] = None):
+        os.makedirs(root, exist_ok=True)
+        self.root = root
+        self.keep = max(int(keep), 1)
+        self.extra = dict(extra or {})
+        self.stats = {"saved": 0, "pruned": 0, "snapshot_ms": 0.0,
+                      "write_ms": 0.0, "writer_thread": None}
+        self._q: queue.Queue = queue.Queue()
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._drain, daemon=True,
+                                        name="ckpt-writer")
+        self._thread.start()
+
+    def save(self, step: int, state, extra: Optional[dict] = None):
+        """Enqueue a snapshot of ``state`` as checkpoint ``step``.
+
+        Non-blocking: dispatches ``jnp.copy`` per leaf (so later donation
+        of the live buffers cannot tear the snapshot) and hands the copies
+        to the writer thread.
+        """
+        t0 = time.perf_counter()
+        snap = jax.tree.map(jnp.copy, state)
+        self.stats["snapshot_ms"] += 1e3 * (time.perf_counter() - t0)
+        self._q.put((int(step), snap, dict(self.extra, **(extra or {}))))
+
+    def hook(self, every: int):
+        """An `Engine.fit` hook saving every ``every`` completed steps.
+
+        Checkpoint ``step`` counts COMPLETED steps (the state after global
+        step ``g`` is checkpoint ``g + 1``), so a resume passes it
+        straight back as ``start_step``.
+        """
+        every = max(int(every), 1)
+
+        def _hook(step: int, state):
+            if (step + 1) % every == 0:
+                self.save(step + 1, state)
+        return _hook
+
+    # -- writer thread ------------------------------------------------------
+
+    def _drain(self):
+        self.stats["writer_thread"] = threading.current_thread()
+        while True:
+            item = self._q.get()
+            if item is None:
+                self._q.task_done()
+                return
+            step, snap, extra = item
+            try:
+                t0 = time.perf_counter()
+                host = jax.tree.map(np.asarray, snap)   # d2h, writer-side
+                tmp = os.path.join(self.root,
+                                   f".tmp-step-{step:08d}-{os.getpid()}")
+                if os.path.exists(tmp):
+                    shutil.rmtree(tmp)
+                save(tmp, host, step=step, extra=extra)
+                final = step_dir(self.root, step)
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.rename(tmp, final)                   # atomic publish
+                self.stats["write_ms"] += 1e3 * (time.perf_counter() - t0)
+                self.stats["saved"] += 1
+                self._prune()
+            except BaseException as e:                  # surface on wait()
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def _prune(self):
+        steps = checkpoint_steps(self.root)
+        for step in steps[:-self.keep]:
+            shutil.rmtree(step_dir(self.root, step), ignore_errors=True)
+            self.stats["pruned"] += 1
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def wait(self):
+        """Block until every enqueued snapshot is on disk; re-raise any
+        writer-side error."""
+        self._q.join()
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
+    def close(self):
+        self.wait()
+        self._q.put(None)
+        self._thread.join(timeout=30.0)

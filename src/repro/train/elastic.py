@@ -1,0 +1,154 @@
+"""Elastic preemption-tolerant training (paper §5.1's cost story, made real).
+
+`cloud/costs.py` pins preemptible V100 capacity at >3x below reserved and
+`cloud/planner.recommend` already picks it — but that row of the cost
+frontier is only reachable if training SURVIVES losing nodes.
+:class:`ElasticEngine` closes that gap: it drives `train/engine.Engine`
+segments under the async checkpointer (`train/checkpoint.py`) and, when a
+:class:`~repro.train.faults.Preemption` surfaces through the batch
+stream, recovers and resumes:
+
+1. **flush** — drain the async writer so the newest snapshot is on disk;
+2. **re-mesh** — if the dead node's capacity is lost, rebuild the
+   ``(node, device)`` mesh over the survivors
+   (`launch.mesh.shrink_node_mesh` semantics via ``make_node_mesh`` on
+   the reduced grid) and a fresh Engine over it;
+3. **reshard** — `checkpoint.restore_latest` (corrupt snapshots fall back
+   to the previous one) and ``device_put`` the state replicated onto the
+   new mesh;
+4. **resume bit-pinned** — ``Engine.fit(start_step=<ckpt step>)`` with
+   the SAME run rng replays the exact per-step key sequence (fold_in of
+   the global step), and the caller-supplied ``make_batches(start)``
+   replays the data stream — so a builtin-loop run reaches final losses
+   bit-identical to an uninterrupted one (custom-loop: within float
+   tolerance after a re-mesh, because the replica count changes which
+   replica-index keys the generator noise folds in).
+
+The report it returns (recoveries, lost steps, recovery seconds,
+fallbacks, re-meshes) is what `tools/run_elastic.py` turns into
+``results/BENCH_elastic.json`` — the measured elastic overhead that
+`cloud/planner.apply_elastic_overhead` folds back into the frontier.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch import mesh as mesh_lib
+from repro.train import checkpoint as ckpt_lib
+from repro.train import engine as engine_lib
+from repro.train.faults import FaultInjector, Preemption
+
+
+def _zeros_template(task, rng):
+    """A host-side zeros pytree shaped like the task state — the restore
+    template (abstract init: no device compute, no real params)."""
+    shapes = jax.eval_shape(task.init, rng)
+    return jax.tree.map(lambda s: np.zeros(s.shape, s.dtype), shapes)
+
+
+class ElasticEngine:
+    """Preemption-tolerant wrapper around `Engine.fit` segments.
+
+    Parameters mirror :class:`~repro.train.engine.Engine` plus the
+    checkpoint policy.  ``nodes`` x ``devices_per_node`` is the STARTING
+    virtual topology; preemptions with ``lose_node=True`` shrink it one
+    node row at a time (never below one node — a last-node preemption
+    restarts on the same grid, modelling a respawned replacement).
+    """
+
+    def __init__(self, nodes: int, devices_per_node: int, *,
+                 loop: str = "builtin", ckpt_dir: str, ckpt_every: int = 2,
+                 keep: int = 3, grad_reduce="flat", bucket_mb: float = 4.0,
+                 donate: bool = True, prefetch_size: int = 2,
+                 ckpt_extra: Optional[dict] = None):
+        self.nodes = int(nodes)
+        self.devices_per_node = int(devices_per_node)
+        self.loop = loop
+        self.ckpt_every = int(ckpt_every)
+        self.grad_reduce = grad_reduce
+        self.bucket_mb = bucket_mb
+        self.donate = donate
+        self.prefetch_size = prefetch_size
+        self.ckpt = ckpt_lib.AsyncCheckpointer(ckpt_dir, keep=keep,
+                                               extra=dict(ckpt_extra or {}))
+
+    def _engine(self) -> engine_lib.Engine:
+        mesh = mesh_lib.make_node_mesh(self.nodes, self.devices_per_node)
+        return engine_lib.Engine(mesh, self.loop,
+                                 dp_axes=("node", "device"),
+                                 donate=self.donate,
+                                 grad_reduce=self.grad_reduce,
+                                 bucket_mb=self.bucket_mb)
+
+    def fit(self, task, make_batches: Callable[[int], Iterable[dict]],
+            steps: int, *, rng: jax.Array,
+            injector: Optional[FaultInjector] = None, log=None,
+            log_every: int = 1):
+        """Train ``steps`` global steps, riding through scripted faults.
+
+        ``make_batches(start)`` must return the host batch stream for
+        global steps ``start, start+1, ...`` — the deterministic-replay
+        contract (a seeded generator with a skip, or a list slice).
+        Returns ``(state, report)``.
+        """
+        eng = self._engine()
+        self.ckpt.extra["topology"] = [self.nodes, self.devices_per_node]
+        hooks = [self.ckpt.hook(self.ckpt_every)]
+        if injector is not None:
+            hooks.append(injector.hook(self.ckpt))
+        template = _zeros_template(task, jax.random.key(0))
+
+        report = {"recoveries": [], "lost_steps": 0, "recovery_s": 0.0,
+                  "fallbacks": 0, "remeshes": 0, "restarts": 0,
+                  "preemptions": 0}
+        state, metrics, start = None, {}, 0
+        while start < steps:
+            stream = make_batches(start)
+            if injector is not None:
+                stream = injector.wrap(stream, start_step=start)
+            try:
+                state, metrics = eng.fit(
+                    task, stream, steps - start, rng=rng, state=state,
+                    start_step=start, hooks=tuple(hooks), log=log,
+                    log_every=log_every, prefetch_size=self.prefetch_size)
+                start = steps
+            except Preemption as p:
+                t0 = time.perf_counter()
+                self.ckpt.wait()            # newest snapshot is on disk
+                report["preemptions"] += 1
+                if p.lose_node and self.nodes > 1:
+                    self.nodes -= 1         # capacity gone: re-mesh
+                    report["remeshes"] += 1
+                    eng = self._engine()
+                    self.ckpt.extra["topology"] = [self.nodes,
+                                                   self.devices_per_node]
+                else:                       # replacement respawns
+                    report["restarts"] += 1
+                ckpt_step, tree, _man, skipped = ckpt_lib.restore_latest(
+                    self.ckpt.root, template)
+                report["fallbacks"] += skipped
+                if tree is None:            # no valid snapshot: from scratch
+                    state, start = None, 0
+                else:                       # reshard onto the new mesh
+                    state = jax.device_put(
+                        tree, NamedSharding(eng.mesh, P()))
+                    start = ckpt_step
+                dt = time.perf_counter() - t0
+                report["recovery_s"] += dt
+                report["lost_steps"] += p.step - start
+                report["recoveries"].append({
+                    "preempt_step": p.step, "node": p.node,
+                    "lose_node": p.lose_node, "resume_step": start,
+                    "lost_steps": p.step - start, "recovery_s": dt,
+                    "topology": [self.nodes, self.devices_per_node],
+                    "ckpt_fallbacks": skipped})
+        self.ckpt.wait()
+        report["topology_final"] = [self.nodes, self.devices_per_node]
+        report["ckpt_stats"] = {k: v for k, v in self.ckpt.stats.items()
+                                if k != "writer_thread"}
+        return state, {"metrics": metrics, **report}

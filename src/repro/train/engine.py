@@ -378,7 +378,8 @@ class Engine:
 
     def fit(self, task: Task, batches: Iterable[dict], steps: int, *,
             rng: jax.Array, state=None, log=None, log_every: int = 1,
-            sync_every: Optional[int] = None, prefetch_size: int = 2):
+            sync_every: Optional[int] = None, prefetch_size: int = 2,
+            start_step: int = 0, hooks: tuple = ()):
         """Run ``steps`` training steps; returns (state, last_metrics).
 
         Composes the whole paper pipeline: replicated init, compiled
@@ -397,6 +398,19 @@ class Engine:
         steps to bound run-ahead (keeps the dispatch queue shallow and
         device errors attributable) independently of the logging window.
 
+        **Elastic resume.**  Per-step RNG is BIT-PINNED to the global step
+        index: the fit key splits once into (init_key, step_rng) and step
+        ``g`` always uses ``fold_in(step_rng, g)`` — a pure function of
+        (rng, g), independent of how many fit() calls the run was chopped
+        into.  A preempted run that restores checkpointed ``state`` and
+        passes ``start_step=<completed steps>`` with the SAME ``rng``
+        replays the exact key sequence the uninterrupted run would have
+        used (`train/elastic.py` relies on this for bit-identical
+        recovery).  ``hooks`` are callables ``hook(global_step, state)``
+        invoked after each step's dispatch (async, non-blocking) — the
+        async checkpointer's cadence hook and the fault injector's
+        corrupt hook plug in here.
+
         ``self.last_fit_stats`` records {"steps", "host_transfers",
         "h2d_wait_ms", "h2d_wait_ms_windows"} for the most recent fit —
         the dispatch-count observability the async tests assert on, plus
@@ -412,7 +426,10 @@ class Engine:
         except StopIteration:
             raise ValueError("fit() got an empty batches iterable") from None
         step = self.compile_step(task, first)
-        init_key, rng = jax.random.split(rng)
+        # init/step keys derive from ONE split of the fit key; per-step
+        # keys fold in the GLOBAL step index so a resumed fit (same rng,
+        # start_step = completed steps) replays the identical sequence
+        init_key, step_rng = jax.random.split(rng)
         if state is None:
             state = self.init_state(task, init_key)
         stream = self.data_iter(itertools.chain([first], it),
@@ -433,12 +450,15 @@ class Engine:
 
         for i, batch in zip(range(steps), stream):
             last = i
-            rng, k = jax.random.split(rng)
+            gstep = start_step + i
+            k = jax.random.fold_in(step_rng, gstep)
             state, metrics = step(state, batch, k)
+            for hook in hooks:
+                hook(gstep, state)
             if log is not None:
                 acc.update(metrics)
                 if (i + 1) % log_every == 0 or i == steps - 1:
-                    log.log(i, **acc.means())     # ONE transfer per window
+                    log.log(gstep, **acc.means())  # ONE transfer per window
                     transfers += 1
                     acc.reset()
                     _close_window()
@@ -447,7 +467,7 @@ class Engine:
         if log is not None and acc.count:
             # the batch stream ran dry before ``steps``: flush the
             # trailing partial window so no step goes unlogged
-            log.log(last, **acc.means())
+            log.log(start_step + last, **acc.means())
             transfers += 1
             _close_window()
         self.last_fit_stats = {

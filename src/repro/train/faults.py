@@ -1,0 +1,243 @@
+"""Deterministic fault injection for the elastic runtime (paper §5.1).
+
+The paper's cost story hinges on preemptible capacity (V100 spot nodes at
+>3x below reserved, `cloud/costs.py`) — which only pays off if training
+survives losing nodes.  This module is the TEST SUBSTRATE for that: a
+scripted, replayable fault layer that the elastic trainer
+(`train/elastic.py`) and the chaos suite (`tests/test_elastic.py`) drive
+instead of waiting for real preemptions.
+
+Design constraints, in order:
+
+- **Deterministic.**  Faults fire at exact global STEP indices from a
+  :class:`FaultPlan`, never from wall clock or randomness at run time.
+  Replaying the same plan against the same seed reproduces the same
+  trajectory bit-for-bit (the CI ``elastic-smoke`` job replays a committed
+  trace; `tests/test_elastic.py` runs the fast traces twice).
+- **Seedable.**  :meth:`FaultPlan.random` derives a plan from a seed via
+  ``np.random.default_rng`` — fuzzing stays replayable.
+- **Injected at the real seams.**  Preemptions and slow-node stalls are
+  injected into the HOST BATCH STREAM (:meth:`FaultInjector.wrap`), so a
+  preemption surfaces through `data/pipeline.Prefetcher`'s producer-thread
+  error propagation exactly like a real node loss killing the input
+  pipeline mid-prefetch; checkpoint corruption runs as a main-thread step
+  hook (:meth:`FaultInjector.hook`) so WHICH snapshot gets corrupted is
+  deterministic with respect to the async checkpoint writer.
+
+Fault kinds:
+
+``preempt``
+    The node is gone.  Raises :class:`Preemption` through the batch
+    stream; ``lose_node=True`` means the capacity is lost (the elastic
+    trainer re-meshes onto the surviving ``(node, device)`` grid),
+    ``False`` means a replacement respawns (restart on the same grid).
+``stall``
+    A slow node / input hiccup: the stream sleeps ``stall_ms`` before
+    yielding that step's batch (on the Prefetcher's producer thread, so
+    the stall is visible as consumer ``h2d_wait_ms``).  Numerics are
+    unaffected — asserted by the chaos suite.
+``corrupt``
+    The latest on-disk snapshot is truncated (:func:`corrupt_latest`),
+    forcing recovery to fall back to the previous one.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Iterable, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+FAULT_KINDS = ("preempt", "stall", "corrupt")
+
+
+class Preemption(RuntimeError):
+    """A scripted node preemption, raised through the batch stream.
+
+    ``step`` is the global step that never ran; ``node`` the dead node's
+    row in the ``(node, device)`` mesh; ``lose_node`` whether its capacity
+    is gone (shrink) or respawns (restart on the same topology).
+    """
+
+    def __init__(self, step: int, node: int = 0, lose_node: bool = True):
+        super().__init__(
+            f"node {node} preempted before step {step}"
+            f" ({'capacity lost' if lose_node else 'respawning'})")
+        self.step = int(step)
+        self.node = int(node)
+        self.lose_node = bool(lose_node)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scripted fault at an exact global step index."""
+    step: int
+    kind: str                    # "preempt" | "stall" | "corrupt"
+    node: int = 0                # preempt: which node row dies
+    lose_node: bool = True       # preempt: shrink (True) vs respawn (False)
+    stall_ms: float = 0.0        # stall: producer-side sleep
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"kind must be one of {FAULT_KINDS}, got {self.kind!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """An ordered, replayable trace of :class:`FaultEvent`s.
+
+    Serialises to/from JSON so CI can commit traces
+    (``results/elastic_trace.json``) and replay them byte-for-byte.
+    """
+    events: Tuple[FaultEvent, ...] = ()
+    seed: Optional[int] = None          # provenance when built by random()
+
+    def at(self, step: int) -> List[Tuple[int, FaultEvent]]:
+        """(index, event) pairs scheduled at ``step``, in plan order."""
+        return [(i, e) for i, e in enumerate(self.events) if e.step == step]
+
+    # -- serialisation ------------------------------------------------------
+
+    def to_json(self) -> dict:
+        return {"seed": self.seed,
+                "events": [dataclasses.asdict(e) for e in self.events]}
+
+    @classmethod
+    def from_json(cls, payload: dict) -> "FaultPlan":
+        events = tuple(FaultEvent(**e) for e in payload.get("events", ()))
+        return cls(events=events, seed=payload.get("seed"))
+
+    def save(self, path: str, extra: Optional[dict] = None):
+        payload = dict(self.to_json(), **(extra or {}))
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1)
+
+    @classmethod
+    def load(cls, path: str) -> "FaultPlan":
+        with open(path) as f:
+            return cls.from_json(json.load(f))
+
+    # -- seedable generation ------------------------------------------------
+
+    @classmethod
+    def random(cls, seed: int, steps: int, *, n_preempt: int = 2,
+               n_stall: int = 1, n_corrupt: int = 0, nodes: int = 2,
+               stall_ms: float = 20.0) -> "FaultPlan":
+        """A replayable plan: same (seed, steps, counts) => same plan.
+
+        Fault steps are drawn without replacement from ``[1, steps)`` so
+        step 0 (compile + first dispatch) always runs clean.
+        """
+        rng = np.random.default_rng(seed)
+        total = n_preempt + n_stall + n_corrupt
+        if steps < 2 or total == 0:
+            return cls(events=(), seed=seed)
+        picks = sorted(rng.choice(np.arange(1, steps), size=min(
+            total, steps - 1), replace=False).tolist())
+        events, i = [], 0
+        for _ in range(n_preempt):
+            if i >= len(picks):
+                break
+            events.append(FaultEvent(int(picks[i]), "preempt",
+                                     node=int(rng.integers(nodes)),
+                                     lose_node=bool(rng.integers(2))))
+            i += 1
+        for _ in range(n_stall):
+            if i >= len(picks):
+                break
+            events.append(FaultEvent(int(picks[i]), "stall",
+                                     stall_ms=float(stall_ms)))
+            i += 1
+        for _ in range(n_corrupt):
+            if i >= len(picks):
+                break
+            events.append(FaultEvent(int(picks[i]), "corrupt"))
+            i += 1
+        return cls(events=tuple(sorted(events, key=lambda e: e.step)),
+                   seed=seed)
+
+
+def corrupt_latest(ckpt_root: str) -> Optional[int]:
+    """Truncate the newest snapshot's array file (a torn write / bad disk).
+
+    Returns the corrupted checkpoint's step, or None when no snapshot
+    exists yet.  Recovery (`checkpoint.restore_latest`) must then fall
+    back to the previous snapshot — the chaos suite asserts it does.
+    """
+    from repro.train import checkpoint as ckpt_lib
+    steps = ckpt_lib.checkpoint_steps(ckpt_root)
+    if not steps:
+        return None
+    path = os.path.join(ckpt_lib.step_dir(ckpt_root, steps[-1]),
+                        "arrays.npz")
+    with open(path, "r+b") as f:
+        f.truncate(max(os.path.getsize(path) // 2, 1))
+    return steps[-1]
+
+
+class FaultInjector:
+    """Fires a :class:`FaultPlan` against a training run, each event once.
+
+    ``wrap`` handles stream-borne faults (stall, preempt) and is re-applied
+    to the replayed stream after every recovery — fired events are tracked
+    by plan index so a resumed run sailing past an old fault step does not
+    re-fire it.  ``hook`` handles ``corrupt`` events on the main thread in
+    step order (after the async checkpointer's own hook), waiting for the
+    writer to drain first so WHICH snapshot gets corrupted is deterministic.
+    """
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self.fired: List[FaultEvent] = []
+        self._done: set = set()
+
+    def _pending(self, step: int):
+        return [(i, e) for i, e in self.plan.at(step) if i not in self._done]
+
+    def _fire(self, idx: int, event: FaultEvent):
+        self._done.add(idx)
+        self.fired.append(event)
+
+    def wrap(self, batches: Iterable[dict],
+             start_step: int = 0) -> Iterator[dict]:
+        """Wrap a host batch stream starting at global ``start_step``.
+
+        Yield order is preserved; a ``stall`` sleeps before yielding its
+        step's batch, a ``preempt`` raises :class:`Preemption` instead of
+        yielding it.  Under `data/pipeline.Prefetcher` both happen on the
+        producer thread: stalls surface as consumer ``h2d_wait_ms`` and
+        the Preemption rides the prefetcher's error propagation to the
+        step loop — already-queued earlier batches still get consumed.
+        """
+        def gen():
+            for i, batch in enumerate(batches):
+                step = start_step + i
+                for idx, ev in self._pending(step):
+                    if ev.kind == "stall":
+                        self._fire(idx, ev)
+                        time.sleep(ev.stall_ms / 1e3)
+                    elif ev.kind == "preempt":
+                        self._fire(idx, ev)
+                        raise Preemption(step, ev.node, ev.lose_node)
+                yield batch
+        return gen()
+
+    def hook(self, checkpointer):
+        """An `Engine.fit` hook firing ``corrupt`` events deterministically.
+
+        Runs on the main thread after each step's dispatch; drains the
+        async writer queue first so the "latest" snapshot at fire time is
+        well-defined regardless of writer-thread scheduling.
+        """
+        def _hook(step: int, state):
+            del state
+            for idx, ev in self._pending(step):
+                if ev.kind != "corrupt":
+                    continue
+                self._fire(idx, ev)
+                checkpointer.wait()
+                corrupt_latest(checkpointer.root)
+        return _hook

@@ -5,6 +5,21 @@ import numpy as np
 import pytest
 
 
+@pytest.fixture(autouse=True)
+def _seed_global_numpy_rng():
+    """Pin the GLOBAL numpy RNG per test and restore it afterwards.
+
+    Library code under test must not depend on ``np.random`` module state
+    (everything seeds its own Generator), but test helpers occasionally
+    reach for it — this makes any such use deterministic and
+    order-independent, so tier-1 results never depend on which tests ran
+    first (the flakiness audit of the elastic PR)."""
+    saved = np.random.get_state()
+    np.random.seed(0)
+    yield
+    np.random.set_state(saved)
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

@@ -1,6 +1,7 @@
 """cloud/ as a unit: price-table invariants, EpochCost arithmetic, the
 interconnect model's collective algebra, and planner monotonicity /
 recommend() behavior — all offline (no jax tracing except gan_rounds)."""
+import json
 import os
 
 import pytest
@@ -205,3 +206,51 @@ def test_predicted_v3_32_epoch_matches_paper_anchor():
                                  tpu_epochs={"v3-8": 480.0, "v3-32": None})
     v32 = next(r for r in rows if r["device"] == "TPU-v3-32")
     assert v32["epoch_s"] == pytest.approx(120.0, rel=0.05)
+
+
+def test_apply_elastic_overhead_derates_only_preemptible():
+    """The measured elastic overhead lands ONLY on the -pre rows, scaling
+    both cost and epoch time; a small overhead keeps preemptible the
+    cheapest offering (the paper's >3x gap survives recovery costs)."""
+    rows = planner.cost_frontier(5200.0, anchor_step_s=5.0)
+    out = planner.apply_elastic_overhead(rows, 0.10)
+    by = {(r["device"], r["n"]): r for r in out}
+    base = {(r["device"], r["n"]): r for r in rows}
+    for key, r in by.items():
+        ratio = r["cost_usd"] / base[key]["cost_usd"]
+        if key[0].endswith("-pre"):
+            assert ratio == pytest.approx(1.10)
+            assert r["epoch_s"] == pytest.approx(
+                base[key]["epoch_s"] * 1.10)
+            assert r["elastic_overhead"] == 0.10
+        else:
+            assert ratio == 1.0 and "elastic_overhead" not in r
+    assert by[("V100-pre", 8)]["cost_usd"] < by[("V100", 8)]["cost_usd"]
+
+
+def test_elastic_overhead_can_flip_recommendation_to_reserved():
+    """When recovery eats more than the spot discount, recommend() must
+    flip to reserved capacity — the preemption-honest planner answer."""
+    rows = [
+        {"device": "V100", "n": 8, "epoch_s": 100.0, "cost_usd": 10.0},
+        {"device": "V100-pre", "n": 8, "epoch_s": 100.0, "cost_usd": 3.0},
+    ]
+    cheap = planner.recommend(
+        planner.apply_elastic_overhead(rows, 0.2), 100.0, 1e6)
+    assert cheap["device"] == "V100-pre"
+    flipped = planner.recommend(
+        planner.apply_elastic_overhead(rows, 3.0), 100.0, 1e6)
+    assert flipped["device"] == "V100"
+    with pytest.raises(ValueError):
+        planner.apply_elastic_overhead(rows, -0.1)
+
+
+def test_load_elastic_reads_benchmark(tmp_path):
+    assert planner.load_elastic(str(tmp_path)) is None
+    payload = {"rows": {"overhead_frac": 0.07, "recovery_s": 1.5,
+                        "lost_steps": 2}}
+    with open(tmp_path / "BENCH_elastic.json", "w") as f:
+        json.dump(payload, f)
+    got = planner.load_elastic(str(tmp_path))
+    assert got["overhead_frac"] == pytest.approx(0.07)
+    assert got["lost_steps"] == 2 and got["recovery_s"] == 1.5

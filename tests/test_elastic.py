@@ -1,0 +1,364 @@
+"""Chaos suite for the elastic runtime (train/faults + checkpoint + elastic).
+
+The acceptance bar of the elastic PR: a scripted preemption mid-training
+resumes from the async checkpoint and reaches final state BIT-IDENTICAL
+(builtin loop) / within 2e-6 (custom loop) to an uninterrupted run;
+corrupt snapshots fall back; the 2x2 -> 1x2 re-mesh preserves parity
+(subprocess, own 4-device pool); and the async snapshot path never blocks
+or reads from device on the step-loop thread (transfer-guard + dispatch
+discipline, same as test_engine.py).  Every fault here fires from a
+deterministic `FaultPlan` — run the module twice and the trajectories,
+including which snapshot gets corrupted, are identical.
+"""
+import json
+import os
+import subprocess
+import sys
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import calo3dgan
+from repro.data.calo import CaloSimulator, CaloSpec
+from repro.launch.mesh import make_dev_mesh
+from repro.optim import optimizers as opt_lib
+from repro.train import checkpoint as ckpt_lib
+from repro.train import engine as engine_lib
+from repro.train import faults
+from repro.train.elastic import ElasticEngine
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CFG = calo3dgan.bench()
+STEPS = 6
+
+
+def _task(microbatches=1):
+    return engine_lib.gan_task(CFG, opt_lib.rmsprop(1e-4),
+                               opt_lib.rmsprop(1e-4),
+                               microbatches=microbatches)
+
+
+@pytest.fixture(scope="module")
+def gan_batches():
+    sim = CaloSimulator(CaloSpec(image_shape=CFG.image_shape), seed=11)
+    return [next(sim.batches(4)) for _ in range(STEPS)]
+
+
+def _make_batches(batches):
+    # the deterministic-replay contract: the stream for global step s on
+    return lambda start: iter(batches[start:])
+
+
+def _params(state):
+    return jax.tree.leaves(state.g_params) + jax.tree.leaves(state.d_params)
+
+
+def _max_diff(a, b):
+    return max(float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
+               for x, y in zip(_params(a), _params(b)))
+
+
+def _run(tmp_path, batches, *, loop="builtin", injector=None,
+         microbatches=1, ckpt_every=2, name="run"):
+    eng = ElasticEngine(1, 1, loop=loop,
+                        ckpt_dir=str(tmp_path / name),
+                        ckpt_every=ckpt_every, keep=3)
+    state, report = eng.fit(_task(microbatches), _make_batches(batches),
+                            len(batches), rng=jax.random.key(1),
+                            injector=injector)
+    return state, report
+
+
+# ---------------------------------------------------------------------------
+# preemption -> resume parity (same topology)
+# ---------------------------------------------------------------------------
+
+
+def test_preempt_resume_bit_identical_builtin(tmp_path, gan_batches):
+    """Preempt at step 4, resume from the async step-4 snapshot: the
+    builtin loop must finish BIT-IDENTICAL to the uninterrupted run (the
+    per-step RNG is pinned to the global step, the data stream replays)."""
+    clean, _ = _run(tmp_path, gan_batches, name="clean")
+    plan = faults.FaultPlan(events=(
+        faults.FaultEvent(4, "preempt", lose_node=False),))
+    inj = faults.FaultInjector(plan)
+    state, rep = _run(tmp_path, gan_batches, injector=inj, name="faulted")
+    assert rep["preemptions"] == 1 and rep["restarts"] == 1
+    assert rep["recoveries"][0]["resume_step"] == 4   # ckpt_every=2
+    assert rep["lost_steps"] == 0
+    for x, y in zip(_params(clean), _params(state)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_preempt_resume_custom_loop(tmp_path, gan_batches):
+    """Same-topology resume under the custom (shard_map) loop: within the
+    2e-6 acceptance tolerance of the uninterrupted run."""
+    clean, _ = _run(tmp_path, gan_batches, loop="custom", name="clean")
+    plan = faults.FaultPlan(events=(
+        faults.FaultEvent(3, "preempt", lose_node=False),))
+    state, rep = _run(tmp_path, gan_batches, loop="custom",
+                      injector=faults.FaultInjector(plan), name="faulted")
+    assert rep["preemptions"] == 1
+    assert rep["lost_steps"] == 1                     # ckpt at 2, died at 3
+    assert _max_diff(clean, state) <= 2e-6
+
+
+def test_preempt_resume_grad_accum_window(tmp_path, gan_batches):
+    """Resume lands cleanly inside a grad-accumulation schedule
+    (microbatches=2): still bit-identical for the builtin loop."""
+    clean, _ = _run(tmp_path, gan_batches, microbatches=2, name="clean")
+    plan = faults.FaultPlan(events=(
+        faults.FaultEvent(4, "preempt", lose_node=False),))
+    state, rep = _run(tmp_path, gan_batches, microbatches=2,
+                      injector=faults.FaultInjector(plan), name="faulted")
+    assert rep["preemptions"] == 1
+    for x, y in zip(_params(clean), _params(state)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_stall_fault_preserves_numerics(tmp_path, gan_batches):
+    """A slow-node stall costs wall clock, never numerics."""
+    clean, _ = _run(tmp_path, gan_batches, name="clean")
+    plan = faults.FaultPlan(events=(
+        faults.FaultEvent(2, "stall", stall_ms=15.0),))
+    inj = faults.FaultInjector(plan)
+    state, rep = _run(tmp_path, gan_batches, injector=inj, name="faulted")
+    assert [e.kind for e in inj.fired] == ["stall"]
+    assert rep["preemptions"] == 0
+    for x, y in zip(_params(clean), _params(state)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_corrupt_checkpoint_falls_back_to_previous(tmp_path, gan_batches):
+    """A corrupt latest snapshot must not kill recovery: restore falls
+    back to the previous snapshot (losing the steps in between) and the
+    run still finishes bit-identical to the clean one."""
+    clean, _ = _run(tmp_path, gan_batches, name="clean")
+    plan = faults.FaultPlan(events=(
+        faults.FaultEvent(3, "corrupt"),              # eats the step-4 snap
+        faults.FaultEvent(5, "preempt", lose_node=False)))
+    inj = faults.FaultInjector(plan)
+    state, rep = _run(tmp_path, gan_batches, injector=inj, name="faulted")
+    # NOTE: `fired` order races benignly (the preempt fires on the
+    # prefetcher's producer thread, which runs AHEAD of the main-thread
+    # corrupt hook) — the trajectory itself is deterministic
+    assert sorted(e.kind for e in inj.fired) == ["corrupt", "preempt"]
+    assert rep["fallbacks"] == 1
+    assert rep["recoveries"][0]["resume_step"] == 2   # 4 corrupt -> 2
+    assert rep["lost_steps"] == 3
+    for x, y in zip(_params(clean), _params(state)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_elastic_remesh_2x2_to_1x2_subprocess(tmp_path):
+    """Losing a node mid-run: 4 virtual devices as (node=2, device=2),
+    preempt with lose_node=True re-meshes onto the surviving (1, 2) grid
+    and resumes — final params must match the uninterrupted 2x2 run to
+    f32 summation-order tolerance (subprocess: own device pool)."""
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, numpy as np, tempfile
+from repro.configs import calo3dgan
+from repro.data.calo import CaloSimulator, CaloSpec
+from repro.optim import optimizers as opt_lib
+from repro.train import engine as engine_lib, faults
+from repro.train.elastic import ElasticEngine
+
+cfg = calo3dgan.bench()
+spec = CaloSpec(image_shape=cfg.image_shape)
+make_batches = lambda start: CaloSimulator(spec, seed=11).batches(8,
+                                                                  skip=start)
+task = lambda: engine_lib.gan_task(cfg, opt_lib.rmsprop(1e-4),
+                                   opt_lib.rmsprop(1e-4))
+with tempfile.TemporaryDirectory() as td:
+    eng = ElasticEngine(2, 2, loop="builtin", ckpt_dir=td + "/c",
+                        ckpt_every=2, keep=3)
+    clean, _ = eng.fit(task(), make_batches, 8, rng=jax.random.key(1))
+    plan = faults.FaultPlan(events=(
+        faults.FaultEvent(5, "preempt", node=0, lose_node=True),))
+    eng2 = ElasticEngine(2, 2, loop="builtin", ckpt_dir=td + "/f",
+                         ckpt_every=2, keep=3)
+    state, rep = eng2.fit(task(), make_batches, 8, rng=jax.random.key(1),
+                          injector=faults.FaultInjector(plan))
+    assert rep["remeshes"] == 1, rep
+    assert rep["topology_final"] == [1, 2], rep
+    diff = max(float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+               for a, b in zip(
+                   jax.tree.leaves(clean.g_params)
+                   + jax.tree.leaves(clean.d_params),
+                   jax.tree.leaves(state.g_params)
+                   + jax.tree.leaves(state.d_params)))
+    assert diff <= 2e-6, diff
+    print(f"remesh parity OK: {diff:.2e}")
+"""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", script], env=env, cwd=REPO,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "remesh parity OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# async checkpointer
+# ---------------------------------------------------------------------------
+
+
+def test_async_snapshot_never_blocks_step_loop(tmp_path):
+    """The snapshot hook must neither read from device nor sync on the
+    step-loop thread: a whole fit with checkpointing enabled completes
+    under a disallow-d2h transfer guard with zero host transfers — the
+    device->host copy happens only on the writer thread."""
+    eng = engine_lib.Engine(make_dev_mesh(), "builtin")
+    task = _task()
+    sim = CaloSimulator(CaloSpec(image_shape=CFG.image_shape), seed=11)
+    batches = [next(sim.batches(4)) for _ in range(4)]
+    ckpt = ckpt_lib.AsyncCheckpointer(str(tmp_path / "ck"), keep=3)
+    state = eng.init_state(task, jax.random.key(0))
+    with jax.transfer_guard_device_to_host("disallow"):
+        state, _ = eng.fit(task, iter(batches), 4, rng=jax.random.key(1),
+                           state=state, hooks=(ckpt.hook(2),))
+    assert eng.last_fit_stats["host_transfers"] == 0
+    ckpt.wait()
+    assert ckpt.stats["saved"] == 2
+    assert ckpt.stats["writer_thread"] is not threading.main_thread()
+    assert ckpt_lib.checkpoint_steps(ckpt.root) == [2, 4]
+    ckpt.close()
+
+
+def test_async_checkpointer_keep_k_atomic_manifest(tmp_path):
+    """Keep-last-K pruning, atomic publication (no temp dirs survive),
+    and the manifest's step/topology/precision fields."""
+    root = str(tmp_path / "ck")
+    ckpt = ckpt_lib.AsyncCheckpointer(
+        root, keep=2, extra={"topology": [1, 1], "precision": "f32"})
+    tree = {"w": np.arange(6, dtype=np.float32).reshape(2, 3)}
+    for step in (1, 2, 3, 4, 5):
+        ckpt.save(step, tree)
+    ckpt.close()
+    assert ckpt.stats["saved"] == 5 and ckpt.stats["pruned"] == 3
+    assert ckpt_lib.checkpoint_steps(root) == [4, 5]
+    assert not [d for d in os.listdir(root) if d.startswith(".tmp")]
+    man = ckpt_lib.manifest(ckpt_lib.step_dir(root, 5))
+    assert man["step"] == 5
+    assert man["extra"]["topology"] == [1, 1]
+    assert ckpt_lib.manifest_precision(ckpt_lib.step_dir(root, 5)) == "f32"
+    got = ckpt_lib.restore(ckpt_lib.step_dir(root, 4),
+                           {"w": np.zeros((2, 3), np.float32)})
+    np.testing.assert_array_equal(got["w"], tree["w"])
+
+
+def test_checkpointer_hook_cadence(tmp_path):
+    ckpt = ckpt_lib.AsyncCheckpointer(str(tmp_path / "ck"), keep=10)
+    hook = ckpt.hook(3)
+    for gstep in range(9):
+        hook(gstep, {"x": np.float32(gstep)})
+    ckpt.close()
+    # fires at gstep 2, 5, 8 -> completed-step checkpoints 3, 6, 9
+    assert ckpt_lib.checkpoint_steps(ckpt.root) == [3, 6, 9]
+    assert ckpt_lib.latest_step(ckpt_lib.step_dir(ckpt.root, 9)) == 9
+
+
+def test_restore_strict_mismatch_raises(tmp_path):
+    """The silent-partial-restore bug: extra/missing leaves must raise
+    with the offending key path, never restore a subset quietly."""
+    path = str(tmp_path / "ck")
+    ckpt_lib.save(path, {"a": np.ones(2, np.float32),
+                         "b": np.ones(3, np.float32)})
+    with pytest.raises(ValueError, match="b"):
+        ckpt_lib.restore(path, {"a": np.zeros(2, np.float32)})
+    with pytest.raises(ValueError, match="c"):
+        ckpt_lib.restore(path, {"a": np.zeros(2, np.float32),
+                                "b": np.zeros(3, np.float32),
+                                "c": np.zeros(1, np.float32)})
+    # exact-match template still round-trips
+    got = ckpt_lib.restore(path, {"a": np.zeros(2, np.float32),
+                                  "b": np.zeros(3, np.float32)})
+    np.testing.assert_array_equal(got["a"], np.ones(2, np.float32))
+
+
+def test_old_manifest_without_precision_field(tmp_path):
+    """Regression: manifests written before the ``precision`` extra existed
+    (pre-mixed-precision checkpoints) still load and default to f32."""
+    path = str(tmp_path / "old")
+    ckpt_lib.save(path, {"w": np.ones(2, np.float32)}, step=7)
+    man = ckpt_lib.manifest(path)
+    assert "precision" not in man["extra"]
+    assert ckpt_lib.manifest_precision(path) == "f32"
+    assert ckpt_lib.latest_step(path) == 7
+
+
+def test_restore_latest_empty_and_corrupt_fallback(tmp_path):
+    root = str(tmp_path / "ck")
+    template = {"w": np.zeros(4, np.float32)}
+    assert ckpt_lib.restore_latest(root, template) == (0, None, None, 0)
+    for step, val in ((2, 2.0), (4, 4.0)):
+        ckpt_lib.save(ckpt_lib.step_dir(root, step),
+                      {"w": np.full(4, val, np.float32)}, step=step)
+    corrupted = faults.corrupt_latest(root)
+    assert corrupted == 4
+    step, tree, man, skipped = ckpt_lib.restore_latest(root, template)
+    assert (step, skipped) == (2, 1)
+    assert man["step"] == 2
+    np.testing.assert_array_equal(tree["w"], np.full(4, 2.0, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# fault plans
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_json_roundtrip(tmp_path):
+    plan = faults.FaultPlan(events=(
+        faults.FaultEvent(3, "stall", stall_ms=10.0),
+        faults.FaultEvent(5, "preempt", node=1, lose_node=False),
+        faults.FaultEvent(7, "corrupt")), seed=42)
+    path = str(tmp_path / "trace.json")
+    plan.save(path, extra={"steps": 12})
+    assert faults.FaultPlan.load(path) == plan
+    with open(path) as f:
+        assert json.load(f)["steps"] == 12
+    assert faults.FaultPlan.from_json(plan.to_json()) == plan
+
+
+def test_fault_plan_random_replayable():
+    a = faults.FaultPlan.random(0, 50, n_preempt=2, n_stall=1, n_corrupt=1)
+    b = faults.FaultPlan.random(0, 50, n_preempt=2, n_stall=1, n_corrupt=1)
+    assert a == b                       # seed -> identical plan
+    assert len(a.events) == 4
+    assert all(1 <= e.step < 50 for e in a.events)
+    assert len({e.step for e in a.events}) == 4     # without replacement
+    c = faults.FaultPlan.random(1, 50, n_preempt=2, n_stall=1, n_corrupt=1)
+    assert a != c
+    assert faults.FaultPlan.random(0, 1).events == ()
+
+
+def test_fault_event_validation_and_committed_trace():
+    with pytest.raises(ValueError, match="kind"):
+        faults.FaultEvent(3, "meteor")
+    # the CI elastic-smoke trace must stay loadable and well-formed
+    plan = faults.FaultPlan.load(os.path.join(REPO, "results",
+                                              "elastic_trace.json"))
+    kinds = [e.kind for e in plan.events]
+    assert kinds.count("preempt") == 2
+    assert any(e.lose_node for e in plan.events if e.kind == "preempt")
+
+
+def test_injector_fires_each_event_once():
+    plan = faults.FaultPlan(events=(
+        faults.FaultEvent(2, "preempt", lose_node=False),))
+    inj = faults.FaultInjector(plan)
+    stream = inj.wrap(iter(range(10)), start_step=0)
+    got = []
+    with pytest.raises(faults.Preemption) as ei:
+        for x in stream:
+            got.append(x)
+    assert got == [0, 1] and ei.value.step == 2
+    # the replayed stream passes global step 2 again: no re-fire
+    assert list(inj.wrap(iter(range(2, 10)), start_step=2)) \
+        == list(range(2, 10))
+    assert len(inj.fired) == 1

@@ -146,6 +146,80 @@ def test_epoch_iterator_covers_everything(n_per_shard, batch):
 
 
 # ---------------------------------------------------------------------------
+# gradient bucket planning (elastic PR: the packing the 2-level reduction
+# and the interconnect model both assume)
+# ---------------------------------------------------------------------------
+
+
+_LEAF = st.tuples(st.integers(1, 3000),
+                  st.sampled_from(("float32", "bfloat16", "int32")))
+
+
+@given(leaves=st.lists(_LEAF, min_size=0, max_size=12),
+       bucket_kb=st.sampled_from((1, 4, 16)))
+@settings(max_examples=25, deadline=None)
+def test_plan_buckets_greedy_packing_invariants(leaves, bucket_kb):
+    """For ANY leaf sizes/dtypes: the plan partitions the leaf indices
+    EXACTLY in flatten order, every bucket is dtype-uniform (buckets are
+    concatenated), and no bucket exceeds the cap unless it is a single
+    oversize leaf."""
+    arrs = [np.zeros(n, jnp.dtype(d)) for n, d in leaves]
+    cap = bucket_kb * 1024
+    plan = collectives.plan_buckets(arrs, cap)
+    assert [i for b in plan for i in b] == list(range(len(arrs)))
+    for b in plan:
+        assert len({arrs[i].dtype for i in b}) <= 1
+        total = sum(arrs[i].size * arrs[i].dtype.itemsize for i in b)
+        assert total <= cap or len(b) == 1
+
+
+def test_plan_buckets_rejects_nonpositive_cap():
+    with pytest.raises(ValueError, match="bucket_bytes"):
+        collectives.plan_buckets([np.zeros(4, np.float32)], 0)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint roundtrip over random pytrees / dtypes / shardings
+# ---------------------------------------------------------------------------
+
+
+_CKPT_LEAF = st.tuples(
+    st.lists(st.integers(1, 5), min_size=0, max_size=3),   # shape (incl. 0-d)
+    st.sampled_from(("float32", "float16", "int32")))
+
+
+@given(leaves=st.lists(_CKPT_LEAF, min_size=1, max_size=5),
+       seed=st.integers(0, 1000), nest=st.booleans())
+@settings(**SETTINGS)
+def test_checkpoint_roundtrip_random_pytrees(tmp_path_factory, leaves,
+                                             seed, nest):
+    """save -> restore is the identity for ANY pytree of mesh-placed
+    arrays (mixed shapes/dtypes, flat or nested), preserving dtype; and
+    dropping ANY leaf from the template raises naming its key path (the
+    strict-restore contract)."""
+    from repro.train import checkpoint as ckpt_lib
+    mesh = jax.make_mesh((1,), ("data",))
+    rep = jax.sharding.NamedSharding(mesh, P())
+    rng = np.random.default_rng(seed)
+    tree = {}
+    for i, (shape, dt) in enumerate(leaves):
+        leaf = jnp.asarray(rng.normal(size=shape) * 10, jnp.dtype(dt))
+        tree[f"p{i}"] = {"w": jax.device_put(leaf, rep)} if nest \
+            else jax.device_put(leaf, rep)
+    path = str(tmp_path_factory.mktemp("ck"))
+    ckpt_lib.save(path, tree, step=seed)
+    back = ckpt_lib.restore(path, jax.tree.map(np.zeros_like, tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    victim = f"p{rng.integers(len(leaves))}"
+    partial = {k: v for k, v in tree.items() if k != victim}
+    if partial:
+        with pytest.raises(ValueError, match=victim):
+            ckpt_lib.restore(path, jax.tree.map(np.zeros_like, partial))
+
+
+# ---------------------------------------------------------------------------
 # HLO collective parser
 # ---------------------------------------------------------------------------
 

@@ -42,6 +42,10 @@ def main(argv=None):
                     help="USD budget for the recommend() query")
     ap.add_argument("--deadline", type=float, default=0.0,
                     help="wall-clock deadline (s) for recommend()")
+    ap.add_argument("--elastic", action="store_true",
+                    help="derate preemptible rows by the measured elastic "
+                         "overhead (results/BENCH_elastic.json, recorded "
+                         "by tools/run_elastic.py) before recommending")
     ap.add_argument("--out", default="", help="also write plan JSON here")
     args = ap.parse_args(argv)
     bucket_bytes = int(args.bucket_mb * (1 << 20))
@@ -76,6 +80,17 @@ def main(argv=None):
                  if r["device"] == "V100" and r["n"] == 64)
     print(f"predicted weak-scaling efficiency at 64 GPUs: {eff64:.4f} "
           "(measured step + interconnect model, no efficiency table)")
+
+    if args.elastic:
+        el = planner.load_elastic(args.results)
+        if el is None:
+            print("\n--elastic: no results/BENCH_elastic.json — run "
+                  "tools/run_elastic.py first (frontier unchanged)")
+        else:
+            frontier = planner.apply_elastic_overhead(
+                frontier, el["overhead_frac"])
+            print(f"\nelastic overhead applied to preemptible rows: "
+                  f"+{el['overhead_frac']:.1%} (measured, {el['source']})")
 
     rec = None
     if args.budget or args.deadline:
