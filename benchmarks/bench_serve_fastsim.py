@@ -11,7 +11,13 @@ and push a request mix through it.  Reports
 - the rolling physics gate's per-window profile divergences, compared
   against the TRAINING-TIME divergence of the same generator on the same
   config (`bench_physics`-style validation) — the acceptance bar is that
-  serving-gate divergence stays within 2x of training-time divergence.
+  serving-gate divergence stays within 2x of training-time divergence,
+- a mixed-size OVERLOAD trace served twice — legacy FIFO vs the
+  resilient scheduler (deadlines + SLA admission + age promotion) — with
+  p50/p99/shed-rate for both and the machine-normalized
+  ``p99_fifo_over_sched_speedup`` ratio the CI gate pins (the scheduler
+  must keep overload p99 no worse than FIFO, and no served request may
+  exceed its deadline without a structured rejection).
 
 Writes results/BENCH_serve_fastsim.json.
 
@@ -19,6 +25,7 @@ Writes results/BENCH_serve_fastsim.json.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
@@ -31,6 +38,7 @@ from repro.configs import calo3dgan
 from repro.core import gan, validation
 from repro.data.calo import CaloSimulator, CaloSpec
 from repro.launch.mesh import make_dev_mesh
+from repro.serve.scheduler import SchedulerConfig
 from repro.serve.simulate import PhysicsGate, SimRequest, SimulateEngine
 
 from benchmarks.bench_physics import train_state
@@ -54,7 +62,27 @@ def _natural_bucket(n):
     return BUCKETS[-1]
 
 
-def run(train_steps=30, requests=24, max_events=96, gate_window=256, seed=0):
+def _overload_burst(seed, n, max_events):
+    """Seeded mixed-size burst: every third request is a LARGE batch job
+    at the lowest priority (sheds first), the rest small interactive
+    requests at higher priorities — the arrival mix that starves FIFO."""
+    rng = np.random.default_rng(seed)
+    burst = []
+    for rid in range(n):
+        big = rid % 3 == 0
+        burst.append({
+            "rid": rid,
+            "primary_energy": float(rng.uniform(10.0, 500.0)),
+            "n_events": (int(rng.integers(max_events // 2, max_events + 1))
+                         if big else int(rng.integers(1, 9))),
+            "seed": int(rng.integers(0, 2**31 - 1)),
+            "priority": rid % 3,
+        })
+    return burst
+
+
+def run(train_steps=30, requests=24, max_events=96, gate_window=256, seed=0,
+        overload_requests=48):
     cfg = calo3dgan.bench()
 
     # -- train, then measure the training-time physics fidelity -----------
@@ -114,6 +142,53 @@ def run(train_steps=30, requests=24, max_events=96, gate_window=256, seed=0):
     ratios = {k: worst[k] / max(train_rep[k], 1e-9) for k in worst}
     within_2x = all(r <= 2.0 for r in ratios.values())
 
+    # -- overload: legacy FIFO vs resilient scheduler ---------------------
+    # Same burst served twice through fresh engines.  The FIFO pass is
+    # the pre-scheduler behavior (no deadlines, no admission, single
+    # class); the scheduled pass runs the SLA-derived admission bound,
+    # per-request deadlines, priorities, and age promotion — graceful
+    # degradation trades the lowest-priority tail for a bounded p99.
+    burst = _overload_burst(seed + 1, overload_requests, max_events)
+    total_ev = sum(s["n_events"] for s in burst)
+
+    def _serve_burst(sched=None, deadline_s=None, with_priority=False):
+        e = SimulateEngine(cfg, state.g_params, buckets=BUCKETS,
+                           mesh=make_dev_mesh(data=len(jax.devices())),
+                           sched=sched)
+        e.warmup()
+        for s in burst:
+            e.submit(SimRequest(
+                rid=s["rid"], primary_energy=s["primary_energy"],
+                n_events=s["n_events"], seed=s["seed"],
+                priority=s["priority"] if with_priority else 0,
+                deadline_s=deadline_s))
+        t0 = time.time()
+        served = e.run()
+        return e, served, time.time() - t0
+
+    _fifo_eng, fifo_done, fifo_s = _serve_burst()
+    fifo_lats = sorted(r.latency_s for r in fifo_done)
+
+    # SLA-derived bound at ~70% of the burst backlog, rate measured from
+    # the request-mix pass above; deadlines at 3x the SLA so violations
+    # mean real starvation, not an aggressive bound.
+    drain_rate = n_ev / serve_s
+    sla_s = 0.7 * total_ev / max(drain_rate, 1e-9)
+    deadline_s = 3.0 * sla_s
+    sched_cfg = SchedulerConfig.for_sla(drain_rate, sla_s,
+                                        promote_after_steps=4)
+    sch_eng, sch_done, sch_s = _serve_burst(sched=sched_cfg,
+                                            deadline_s=deadline_s,
+                                            with_priority=True)
+    sch_lats = sorted(r.latency_s for r in sch_done)
+    fifo_p99 = _pct(fifo_lats, 0.99)
+    sch_p99 = _pct(sch_lats, 0.99)
+    n_shed = len(sch_eng.rejected)
+    # the resilience contract: a served request past its deadline is a
+    # bug — late completions must come back as structured rejections
+    late_unrejected = sum(1 for r in sch_done
+                          if r.status == "done" and r.latency_s > deadline_s)
+
     return {
         "config": "calo3dgan.bench",
         "train_steps": train_steps,
@@ -134,13 +209,40 @@ def run(train_steps=30, requests=24, max_events=96, gate_window=256, seed=0):
         "train_kl": {k: train_rep[k] for k in worst},
         "gate_over_train_ratio": {k: round(v, 3) for k, v in ratios.items()},
         "gate_within_2x_of_training": within_2x,
+        # overload / resilience section (tools/bench_compare gates the
+        # machine-normalized speedup ratio; _ms fields are absolute)
+        "overload_requests": overload_requests,
+        "overload_events": total_ev,
+        "overload_sla_s": round(sla_s, 3),
+        "overload_fifo_serve_s": round(fifo_s, 3),
+        "overload_fifo_p50_ms": round(1e3 * _pct(fifo_lats, 0.50), 1),
+        "overload_fifo_p99_ms": round(1e3 * fifo_p99, 1),
+        "overload_serve_s": round(sch_s, 3),
+        "overload_p50_ms": round(1e3 * _pct(sch_lats, 0.50), 1),
+        "overload_p99_ms": round(1e3 * sch_p99, 1),
+        "overload_served": len(sch_done),
+        "overload_shed": n_shed,
+        "overload_shed_rate": round(n_shed / overload_requests, 3),
+        "overload_shed_by_reason": dict(sch_eng.scheduler.stats["rejected"]),
+        "overload_deadline_violations_unrejected": late_unrejected,
+        "p99_fifo_over_sched_speedup": round(fifo_p99 / max(sch_p99, 1e-9),
+                                             3),
     }
 
 
 def main():
-    rows = run()
-    os.makedirs(RESULTS, exist_ok=True)
-    path = os.path.join(RESULTS, "BENCH_serve_fastsim.json")
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--train-steps", type=int, default=30)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--overload-requests", type=int, default=48)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=os.path.join(
+        RESULTS, "BENCH_serve_fastsim.json"))
+    args = ap.parse_args()
+    rows = run(train_steps=args.train_steps, requests=args.requests,
+               seed=args.seed, overload_requests=args.overload_requests)
+    path = args.out
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     with open(path, "w") as f:
         json.dump({"benchmark": "serve_fastsim", "rows": rows}, f, indent=2,
                   default=str)
@@ -160,6 +262,19 @@ def main():
               f"{rows['train_kl'][k]:.4f} = {v}")
     print("  gate within 2x of training-time divergence: "
           f"{rows['gate_within_2x_of_training']}")
+    print(f"  overload ({rows['overload_requests']} requests / "
+          f"{rows['overload_events']} events, SLA {rows['overload_sla_s']}s):")
+    print(f"    fifo      p50={rows['overload_fifo_p50_ms']:.0f}ms "
+          f"p99={rows['overload_fifo_p99_ms']:.0f}ms (served all)")
+    print(f"    scheduled p50={rows['overload_p50_ms']:.0f}ms "
+          f"p99={rows['overload_p99_ms']:.0f}ms "
+          f"served={rows['overload_served']} shed={rows['overload_shed']} "
+          f"({100 * rows['overload_shed_rate']:.0f}%, "
+          f"{rows['overload_shed_by_reason']})")
+    print("    p99 fifo/scheduled speedup: "
+          f"{rows['p99_fifo_over_sched_speedup']}x, deadline violations "
+          f"without rejection: "
+          f"{rows['overload_deadline_violations_unrejected']}")
     print(f"[wrote {path}]")
     return rows
 

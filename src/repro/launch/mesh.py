@@ -186,6 +186,26 @@ def shrink_node_mesh(mesh, lost_node: int):
     return jax.sharding.Mesh(grid, ("node", "device"))
 
 
+def replica_meshes(mesh):
+    """Split a ``(node, device)`` mesh into one 1-D ``device`` mesh per
+    node row — the serving runtime's replica layout.
+
+    Training shards ONE step over the whole grid; serving instead runs
+    N independent generator replicas (one per node), so a preempted
+    node takes out exactly one replica and `serve/replicas.ReplicaGroup`
+    fails the in-flight bucket step over to a survivor.  Row order is
+    preserved, so replica rank == node row == the ``node`` index a
+    `train/faults.FaultPlan` ``preempt`` event targets.
+    """
+    grid = np.asarray(mesh.devices)
+    if grid.ndim != 2 or mesh.axis_names != ("node", "device"):
+        raise ValueError(
+            f"expected a (node, device) mesh, got {mesh.axis_names} "
+            f"of shape {grid.shape}")
+    return [jax.sharding.Mesh(grid[r], ("device",))
+            for r in range(grid.shape[0])]
+
+
 def make_production_mesh(*, multi_pod: bool = False, data: int = 16,
                          model: int = 16):
     """Single pod: (data=16, model=16) = 256 chips (default).

@@ -62,8 +62,11 @@ def serve_gan(args):
     from repro.configs import calo3dgan
     from repro.core import gan, validation
     from repro.data.calo import CaloSimulator, CaloSpec
+    from repro.serve.replicas import ReplicaFaultInjector, ReplicaGroup
+    from repro.serve.scheduler import SchedulerConfig
     from repro.serve.simulate import PhysicsGate, SimRequest, SimulateEngine
     from repro.train import checkpoint as ckpt_lib
+    from repro.train.faults import FaultPlan
 
     cfg = calo3dgan.reduced() if args.reduced else calo3dgan.config()
     if args.ckpt and os.path.exists(os.path.join(args.ckpt, "arrays.npz")):
@@ -85,8 +88,23 @@ def serve_gan(args):
                        window=args.gate_window)
     buckets = tuple(int(b) for b in args.buckets.split(","))
     mesh = make_dev_mesh(data=len(jax.devices()))
+
+    # resilience wiring: SLA-derived admission + replica failover
+    sched = None
+    if args.sla_s > 0 and args.drain_rate > 0:
+        sched = SchedulerConfig.for_sla(args.drain_rate, args.sla_s,
+                                        promote_after_steps=args.promote_after)
+    elif args.promote_after > 0:
+        sched = SchedulerConfig(promote_after_steps=args.promote_after)
+    replicas = None
+    if args.replicas > 1 or args.chaos_trace:
+        injector = (ReplicaFaultInjector(FaultPlan.load(args.chaos_trace))
+                    if args.chaos_trace else None)
+        replicas = ReplicaGroup(max(args.replicas, 2), injector=injector,
+                                hedge_stall_ms=args.hedge_stall_ms)
     eng = SimulateEngine(cfg, params, buckets=buckets, mesh=mesh, gate=gate,
-                         policy_name=policy_name)
+                         policy_name=policy_name, sched=sched,
+                         replicas=replicas, max_kl=args.max_kl)
     eng.warmup()
 
     rng = np.random.default_rng(args.seed)
@@ -95,7 +113,9 @@ def serve_gan(args):
             rid=rid,
             primary_energy=float(rng.uniform(10.0, 500.0)),
             n_events=int(rng.integers(1, args.max_events + 1)),
-            seed=int(rng.integers(0, 2**31 - 1))))
+            seed=int(rng.integers(0, 2**31 - 1)),
+            deadline_s=args.sla_s if args.sla_s > 0 else None,
+            priority=int(rng.integers(0, args.priorities))))
     t0 = time.time()
     done = eng.run()
     dt = time.time() - t0
@@ -114,6 +134,17 @@ def serve_gan(args):
           f"{eng.stats['bucket_steps']} padded={eng.stats['padded_events']} "
           f"transfers={eng.stats['device_transfers']} "
           f"compiles={eng.compile_count}")
+    if eng.rejected:
+        print(f"  rejected {len(eng.rejected)} requests:")
+        for r in eng.rejected[:8]:
+            print(f"    req {r.rid}: {r.error['reason']} — "
+                  f"{r.error['detail']}")
+    if replicas is not None:
+        print(f"  replicas: {replicas.health_report()} "
+              f"group_stats={replicas.stats}")
+    report = eng.degraded_report()
+    if report["mode"] != "healthy":
+        print(f"  DEGRADED: {report['mode']} shed={report['shed']}")
     for i, rep in enumerate(gate.reports):
         print(f"  gate window {i}: "
               + " ".join(f"{k}={rep[k]:.4f}" for k in
@@ -150,6 +181,26 @@ def main():
                     help="events per physics-gate report")
     ap.add_argument("--max-kl", type=float, default=1.0,
                     help="drift threshold on the worst profile KL")
+    # gan resilience (serve/scheduler.py + serve/replicas.py)
+    ap.add_argument("--sla-s", type=float, default=0.0,
+                    help="per-request latency SLA in seconds (0 = no "
+                         "deadlines, no admission bound)")
+    ap.add_argument("--drain-rate", type=float, default=0.0,
+                    help="measured service throughput (events/s) used to "
+                         "derive the admission bound from --sla-s")
+    ap.add_argument("--promote-after", type=int, default=0,
+                    help="age-based promotion after this many passed-over "
+                         "bucket steps (0 = off)")
+    ap.add_argument("--priorities", type=int, default=1,
+                    help="draw request priorities uniformly from "
+                         "[0, priorities)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help=">1 enables the replica failover group")
+    ap.add_argument("--chaos-trace", default="",
+                    help="replay a train/faults.FaultPlan JSON against the "
+                         "replica group (e.g. results/serve_chaos_trace.json)")
+    ap.add_argument("--hedge-stall-ms", type=float, default=200.0,
+                    help="hedge scripted stalls at/above this many ms")
     args = ap.parse_args()
     if args.model == "gan":
         serve_gan(args)

@@ -22,9 +22,19 @@ incremental* (a request is a sequence of dependent steps over a cache),
 fast-sim serving is *stateless and bulk* (a request is an independent
 batch of samples) — so the LM engine optimises slot reuse while the GAN
 engine optimises bucket packing and transfer counts.
+
+What they SHARE is the resilience layer (the front-end unification
+hook): `serve/scheduler.Scheduler` owns deadlines, priorities,
+admission control and load shedding for both engines, and
+`serve/replicas.ReplicaGroup` owns health-checked failover dispatch —
+see ``docs/fastsim_service.md`` for the semantics.
 """
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.replicas import (NoHealthyReplicas, Replica,
+                                  ReplicaFaultInjector, ReplicaGroup)
+from repro.serve.scheduler import (Rejection, Scheduler, SchedulerConfig)
 from repro.serve.simulate import PhysicsGate, SimRequest, SimulateEngine
 
-__all__ = ["PhysicsGate", "Request", "ServeEngine", "SimRequest",
-           "SimulateEngine"]
+__all__ = ["NoHealthyReplicas", "PhysicsGate", "Rejection", "Replica",
+           "ReplicaFaultInjector", "ReplicaGroup", "Request", "Scheduler",
+           "SchedulerConfig", "ServeEngine", "SimRequest", "SimulateEngine"]

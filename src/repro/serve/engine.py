@@ -12,6 +12,7 @@ recurrent-state archs expose the same prefill/decode_step signatures).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, List, Optional
 
 import jax
@@ -19,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import api
+from repro.serve.scheduler import Scheduler, SchedulerConfig
 from repro.substrate.precision import get_policy
 from repro.train import steps as steps_lib
 
@@ -29,16 +31,29 @@ class Request:
     prompt: np.ndarray              # (prompt_len,) int32
     max_new_tokens: int = 32
     eos_id: int = -1                # -1: never stops early
+    priority: int = 0               # higher wins slot admission
+    deadline_s: Optional[float] = None   # latency SLA from submit
     # filled by the engine:
     tokens: Optional[list] = None
     done: bool = False
+    status: str = "queued"          # "queued" | "done" | "rejected"
+    error: Optional[dict] = None
 
 
 class ServeEngine:
-    """Slot-based continuous batching on a single compiled decode step."""
+    """Slot-based continuous batching on a single compiled decode step.
+
+    Slot admission goes through the same `serve/scheduler.Scheduler` as
+    the fast-sim engine (the service front-end unification hook):
+    deadlines, priorities, admission bound and age promotion apply to
+    LM requests too, with ``max_new_tokens`` as the backlog weight.
+    The default ``sched`` reproduces the legacy FIFO slot fill exactly.
+    """
 
     def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 512,
-                 policy_name: str = "f32", mesh=None):
+                 policy_name: str = "f32", mesh=None,
+                 sched: Optional[SchedulerConfig] = None,
+                 clock=time.monotonic):
         self.cfg = cfg
         self.model = api.get_model(cfg)
         self.policy = get_policy(policy_name)
@@ -60,14 +75,22 @@ class ServeEngine:
         self.pos = np.zeros((slots,), np.int32)
         self.slot_req: List[Optional[Request]] = [None] * slots
         self.cur_tok = np.zeros((slots, 1), np.int32)
-        self._queue: List[Request] = []
+        self.clock = clock
+        self.scheduler = Scheduler(sched or SchedulerConfig(), clock=clock)
+        self.rejected: List[Request] = []
         self._finished: List[Request] = []
 
     # -- host API ----------------------------------------------------------
 
     def submit(self, req: Request):
         req.tokens = []
-        self._queue.append(req)
+        deadline = (self.clock() + float(req.deadline_s)
+                    if req.deadline_s is not None else None)
+        res = self.scheduler.admit(req, rid=req.rid,
+                                   n_events=req.max_new_tokens,
+                                   priority=req.priority, deadline=deadline)
+        for item, rej in res.rejections:
+            self._reject(item, rej)
 
     def run(self, max_steps: int = 10_000):
         """Drive until queue + slots drain (or max_steps)."""
@@ -80,10 +103,19 @@ class ServeEngine:
 
     # -- internals -----------------------------------------------------------
 
+    def _reject(self, req: Request, rej):
+        req.status = "rejected"
+        req.error = rej.to_dict()
+        self.rejected.append(req)
+
     def _fill_slots(self):
+        for item, rej in self.scheduler.expire():
+            self._reject(item, rej)
         for s in range(self.slots):
-            if self.slot_req[s] is None and self._queue:
-                req = self._queue.pop(0)
+            if self.slot_req[s] is None:
+                req = self.scheduler.pop_next()
+                if req is None:
+                    break
                 self.slot_req[s] = req
                 self._prefill_slot(s, req)
 
@@ -167,5 +199,6 @@ class ServeEngine:
                         and req.tokens[-1] == req.eos_id)
                     or self.pos[s] >= self.max_len - 1):
                 req.done = True
+                req.status = "done"
                 self._finished.append(req)
                 self.slot_req[s] = None

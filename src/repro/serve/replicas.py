@@ -1,0 +1,249 @@
+"""Replica groups for the serving runtime: health, failover, hedging.
+
+A production fast-sim service does not run on one accelerator: the
+cloud planner (`cloud/planner.recommend`) provisions N generator
+replicas across a `launch/mesh.Topology`, and — on the preemptible
+capacity the paper's cost story favors — some of them WILL die or stall
+mid-traffic.  This module is the dispatch layer that rides through
+that:
+
+- :class:`Replica` — one generator worker: a health flag, its own
+  compiled-program cache (a respawned replacement starts cold), and
+  per-replica dispatch stats.  On a real cluster each replica owns one
+  node row of the topology (`launch.mesh.replica_meshes`); on this
+  container replicas share the host devices and are distinguished by
+  the fault channel — the policy logic is identical.
+- :class:`ReplicaGroup` — round-robin dispatch over the healthy set
+  with **retry + exponential backoff**: when the chosen replica is dead
+  (or dies mid-bucket), the SAME bucket step re-dispatches onto a
+  surviving replica after ``backoff_s * 2^(attempt-1)``.  Because the
+  engine's per-event ``fold_in`` RNG makes a bucket step a pure
+  function of its inputs, the re-dispatched step returns showers
+  **bit-identical** to the fault-free run — the chaos suite's
+  acceptance bar.
+- **hedged re-dispatch** — a replica scripted to stall longer than
+  ``hedge_stall_ms`` is skipped for that step (charged a bounded hedge
+  wait) and the bucket runs on a peer instead; short stalls are simply
+  absorbed.  The stalled replica stays healthy.
+- :class:`ReplicaFaultInjector` — the serve-side consumer of
+  `train/faults.FaultPlan`: ``preempt`` events kill replica ``node``
+  (``lose_node=False`` respawns it, cache cleared, after the step
+  completes elsewhere), ``stall`` events slow it.  Faults fire at exact
+  GROUP DISPATCH indices and each fires once, so a committed trace
+  (``results/serve_chaos_trace.json``) replays byte-for-byte in CI —
+  the same determinism discipline as the elastic training suite.
+
+When the last replica dies, :meth:`ReplicaGroup.dispatch` raises
+:class:`NoHealthyReplicas`; the engine converts that into structured
+``capacity`` rejections and a degraded-state report rather than
+hanging its queue.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.train.faults import FaultEvent, FaultInjector, FaultPlan
+
+
+class NoHealthyReplicas(RuntimeError):
+    """Every replica in the group is dead — a total capacity outage."""
+
+    def __init__(self, step: int):
+        super().__init__(f"no healthy replica left for dispatch {step}")
+        self.step = int(step)
+
+
+class ReplicaFaultInjector(FaultInjector):
+    """`train/faults.FaultInjector` re-aimed at a replica group.
+
+    Same :class:`~repro.train.faults.FaultPlan` format, same fire-once
+    and replayability guarantees; ``step`` indices count the GROUP's
+    bucket dispatches (not training steps), ``node`` names the target
+    replica rank.  ``kills(step)`` / ``stalls(step)`` fire and return
+    this dispatch's events, keyed by replica rank.
+    """
+
+    def kills(self, step: int) -> Dict[int, FaultEvent]:
+        out = {}
+        for idx, ev in self.pending(step):
+            if ev.kind == "preempt":
+                self.fire(idx, ev)
+                out[ev.node] = ev
+        return out
+
+    def stalls(self, step: int) -> Dict[int, FaultEvent]:
+        out = {}
+        for idx, ev in self.pending(step):
+            if ev.kind == "stall":
+                self.fire(idx, ev)
+                out[ev.node] = ev
+        return out
+
+
+@dataclasses.dataclass
+class Replica:
+    """One generator worker in the group.
+
+    ``mesh`` is the replica's device submesh on a real cluster (one
+    node row via `launch.mesh.replica_meshes`); ``None`` when replicas
+    share the host devices (tests, single-node deployments).
+    ``compiled`` is the replica's OWN program cache — a respawned
+    replacement recompiles, exactly like a fresh process would.
+    """
+    rank: int
+    mesh: object = None
+    healthy: bool = True
+    compiled: Dict[int, object] = dataclasses.field(default_factory=dict)
+    stats: Dict[str, int] = dataclasses.field(default_factory=lambda: {
+        "dispatches": 0, "failures": 0, "stalls": 0, "respawns": 0})
+
+
+class ReplicaGroup:
+    """Failover dispatch over N replicas.
+
+    Parameters
+    ----------
+    n / meshes
+        Build ``n`` device-sharing replicas, or one per mesh in
+        ``meshes`` (e.g. `launch.mesh.replica_meshes(node_mesh)`).
+    injector
+        Optional :class:`ReplicaFaultInjector` firing a scripted
+        :class:`~repro.train.faults.FaultPlan` against the group.
+    max_attempts / backoff_s
+        Failover policy: how many replicas one bucket step may try, and
+        the base of the exponential backoff slept between attempts.
+    hedge_stall_ms
+        Stalls scripted at or above this are hedged (the step re-routes
+        to a peer after a ``hedge_stall_ms`` wait) instead of absorbed.
+        ``None`` disables hedging — every stall is absorbed in place.
+    sleep
+        Injected for tests; defaults to ``time.sleep``.
+    """
+
+    def __init__(self, n: int = 2, *, meshes: Optional[Sequence] = None,
+                 injector: Optional[ReplicaFaultInjector] = None,
+                 max_attempts: int = 3, backoff_s: float = 0.01,
+                 hedge_stall_ms: Optional[float] = None,
+                 sleep: Callable[[float], None] = time.sleep):
+        if meshes is not None:
+            self.replicas = [Replica(r, mesh=m)
+                             for r, m in enumerate(meshes)]
+        else:
+            self.replicas = [Replica(r) for r in range(int(n))]
+        if not self.replicas:
+            raise ValueError("a replica group needs at least one replica")
+        self.injector = injector
+        self.max_attempts = max(int(max_attempts), 1)
+        self.backoff_s = float(backoff_s)
+        self.hedge_stall_ms = hedge_stall_ms
+        self._sleep = sleep
+        self._step = 0
+        self._rr = 0
+        self.stats = {"dispatches": 0, "failovers": 0, "retries": 0,
+                      "hedges": 0, "respawns": 0, "backoff_s": 0.0}
+
+    # -- health --------------------------------------------------------------
+
+    def healthy(self) -> List[Replica]:
+        return [r for r in self.replicas if r.healthy]
+
+    def health_report(self) -> dict:
+        return {
+            "total": len(self.replicas),
+            "healthy": len(self.healthy()),
+            "replicas": [{"rank": r.rank, "healthy": r.healthy,
+                          **r.stats} for r in self.replicas],
+        }
+
+    # -- dispatch ------------------------------------------------------------
+
+    def _pick(self, skip: set) -> Optional[Replica]:
+        """Round-robin over healthy replicas not skipped this step."""
+        n = len(self.replicas)
+        for off in range(n):
+            r = self.replicas[(self._rr + off) % n]
+            if r.healthy and r.rank not in skip:
+                self._rr = (self._rr + off + 1) % n
+                return r
+        return None
+
+    def dispatch(self, run: Callable[[Replica], object]) -> object:
+        """Run one bucket step on a healthy replica, failing over past
+        scripted (or real) replica deaths with exponential backoff and
+        hedging past scripted stalls.  ``run(replica)`` must be a pure
+        function of the step's inputs — the engine's per-event fold_in
+        RNG guarantees that — so a failover re-dispatch returns a
+        bit-identical result.
+        """
+        step, self._step = self._step, self._step + 1
+        kills = self.injector.kills(step) if self.injector else {}
+        stalls = self.injector.stalls(step) if self.injector else {}
+        respawn: List[Replica] = []
+        skip: set = set()
+        attempts = 0
+        while True:
+            rep = self._pick(skip)
+            if rep is None:
+                raise NoHealthyReplicas(step)
+            if rep.rank in kills:
+                ev = kills.pop(rep.rank)
+                rep.healthy = False
+                rep.stats["failures"] += 1
+                if not ev.lose_node:
+                    respawn.append(rep)
+                attempts += 1
+                self.stats["failovers"] += 1
+                self._backoff(attempts)
+                continue
+            if rep.rank in stalls:
+                ev = stalls.pop(rep.rank)
+                rep.stats["stalls"] += 1
+                if self.hedge_stall_ms is not None \
+                        and ev.stall_ms >= self.hedge_stall_ms:
+                    # hedge: charge a bounded wait, re-route to a peer
+                    # (unless this is the only healthy replica left)
+                    if len(self.healthy()) - len(skip) > 1:
+                        self.stats["hedges"] += 1
+                        self._sleep(self.hedge_stall_ms / 1e3)
+                        skip.add(rep.rank)
+                        continue
+                self._sleep(ev.stall_ms / 1e3)       # absorbed in place
+            try:
+                result = run(rep)
+            except Exception:
+                # a REAL mid-bucket death (not scripted): same failover
+                rep.healthy = False
+                rep.stats["failures"] += 1
+                attempts += 1
+                self.stats["failovers"] += 1
+                if attempts >= self.max_attempts:
+                    raise
+                self._backoff(attempts)
+                continue
+            rep.stats["dispatches"] += 1
+            self.stats["dispatches"] += 1
+            # scripted deaths that were not in this step's dispatch path
+            # still happened — mark them before the step returns
+            for rank, ev in kills.items():
+                r = self.replicas[rank]
+                if r.healthy:
+                    r.healthy = False
+                    r.stats["failures"] += 1
+                    if not ev.lose_node:
+                        respawn.append(r)
+            for r in respawn:                # replacement came up: cold cache
+                r.healthy = True
+                r.compiled.clear()
+                r.stats["respawns"] += 1
+                self.stats["respawns"] += 1
+            return result
+
+    def _backoff(self, attempts: int) -> None:
+        if attempts >= self.max_attempts and not self.healthy():
+            return                            # about to raise, don't sleep
+        delay = self.backoff_s * (2 ** max(attempts - 1, 0))
+        self.stats["retries"] += 1
+        self.stats["backoff_s"] += delay
+        self._sleep(delay)

@@ -26,7 +26,25 @@ accelerator work the same way the training side does:
   ``window`` events the gate drains ONE small pytree and reports the
   paper's Fig. 3/7 divergences against a fixed MC reference
   (:class:`PhysicsGate`), so generator drift in production is detected
-  with the same numbers that validate training fidelity.
+  with the same numbers that validate training fidelity;
+- **resilient scheduling** — request ordering, per-request deadlines
+  and priorities, admission control and load shedding all live in
+  `serve/scheduler.Scheduler` (the default config reproduces the old
+  FIFO drain bit-for-bit).  A request that cannot be served — deadline
+  expired, queue bound exceeded, degraded mode, no healthy replica —
+  is REJECTED with a structured error (``req.status == "rejected"``,
+  ``req.error``), never silently dropped and never left to hang;
+- **replica failover** — with a `serve/replicas.ReplicaGroup`, bucket
+  steps round-robin over health-checked generator replicas and a
+  killed or stalled replica's step re-dispatches onto a survivor
+  (retry with exponential backoff, hedging).  Because per-event
+  ``fold_in`` RNG makes each step a pure function of its inputs, a
+  request that survives a replica failure returns showers
+  bit-identical to a fault-free run;
+- **graceful degradation** — under a PhysicsGate ``drifted()`` alarm
+  (``max_kl``) or a total replica outage the engine sheds
+  lowest-priority work first and surfaces a structured
+  :meth:`SimulateEngine.degraded_report` instead of silently queueing.
 
 Typical use::
 
@@ -57,21 +75,35 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import gan, validation
 from repro.parallel import sharding
+from repro.serve.replicas import NoHealthyReplicas, ReplicaGroup
+from repro.serve.scheduler import Rejection, Scheduler, SchedulerConfig
 from repro.substrate.precision import get_policy
 
 
 @dataclasses.dataclass
 class SimRequest:
-    """One event-generation request: n_events showers at one beam setting."""
+    """One event-generation request: n_events showers at one beam setting.
+
+    ``priority`` (higher wins; lowest sheds first under overload or
+    degradation) and ``deadline_s`` (a relative latency SLA, measured
+    from submit) feed the scheduler; both default to the legacy
+    "no-SLA, single-class" behavior.  A request that cannot be served
+    ends ``status == "rejected"`` with the structured ``error`` dict
+    (`serve/scheduler.Rejection`) instead of hanging.
+    """
     rid: int
     primary_energy: float          # E_p in GeV (conditioning label)
     n_events: int
     seed: int = 0
     theta: float = float(np.pi / 2)   # incidence angle (rad); 90 deg = normal
+    priority: int = 0
+    deadline_s: Optional[float] = None
     # filled by the engine:
     images: Optional[np.ndarray] = None   # (n_events, X, Y, Z, 1)
     latency_s: float = 0.0
     done: bool = False
+    status: str = "queued"         # "queued" | "done" | "rejected"
+    error: Optional[dict] = None
 
 
 @dataclasses.dataclass
@@ -81,6 +113,7 @@ class _Cursor:
     t0: float
     next_ev: int = 0
     chunks: List[jax.Array] = dataclasses.field(default_factory=list)
+    deadline_t: Optional[float] = None   # absolute, engine-clock time
 
 
 class PhysicsGate:
@@ -164,11 +197,33 @@ class SimulateEngine:
     gate
         Optional :class:`PhysicsGate`; fed once per step, drains itself
         once per window.
+    sched
+        Optional `serve/scheduler.SchedulerConfig` — deadlines,
+        priorities, admission bound, age promotion.  ``None`` keeps the
+        legacy FIFO semantics exactly (an unconfigured scheduler).
+    replicas
+        Optional `serve/replicas.ReplicaGroup`; bucket steps dispatch
+        through it (health-checked failover, backoff, hedging) instead
+        of the engine's single program cache.
+    max_kl
+        PhysicsGate drift budget.  When the gate's worst profile KL
+        exceeds it the engine enters QUALITY-DEGRADED mode: queued and
+        arriving requests below ``sched.degrade_shed_below`` priority
+        are shed with reason ``degraded`` and
+        :meth:`degraded_report` turns structured.  ``None`` disables.
+    clock
+        Injected time source for deadlines/latency (default
+        ``time.perf_counter``); chaos tests pass a fake clock so
+        deadline expiry and shed counts replay deterministically.
     """
 
     def __init__(self, cfg, g_params, *, buckets: Sequence[int] = (8, 32, 128),
                  mesh=None, policy_name: str = "f32",
-                 gate: Optional[PhysicsGate] = None):
+                 gate: Optional[PhysicsGate] = None,
+                 sched: Optional[SchedulerConfig] = None,
+                 replicas: Optional[ReplicaGroup] = None,
+                 max_kl: Optional[float] = None,
+                 clock=time.perf_counter):
         self.cfg = cfg
         self.policy = get_policy(policy_name)
         self.mesh = mesh
@@ -190,12 +245,18 @@ class SimulateEngine:
         else:
             self.params = g_params
         self.gate = gate
+        self.max_kl = max_kl
+        self.clock = clock
+        self.replicas = replicas
+        self.scheduler = Scheduler(sched or SchedulerConfig(), clock=clock)
         self._compiled: Dict[int, object] = {}
         self.compile_count = 0
-        self._queue: List[_Cursor] = []
         self._finished: List[SimRequest] = []
+        self.rejected: List[SimRequest] = []
+        self._submitted = 0
+        self._degraded: List[dict] = []     # degradation ladder transitions
         self.stats = {"steps": 0, "events_generated": 0, "padded_events": 0,
-                      "device_transfers": 0,
+                      "device_transfers": 0, "events_wasted": 0,
                       "bucket_steps": {b: 0 for b in self.buckets}}
 
     @classmethod
@@ -222,52 +283,147 @@ class SimulateEngine:
                 self._compiled[b] = self._compile_bucket(b)
 
     def submit(self, req: SimRequest) -> None:
+        """Admission-controlled enqueue.  A shed arrival (queue bound,
+        infeasible/expired deadline, degraded mode) is marked
+        ``rejected`` with a structured ``error`` — check ``req.status``
+        after submit when the engine runs with an admission policy."""
         if req.n_events <= 0:
             raise ValueError(f"request {req.rid}: n_events must be positive")
-        self._queue.append(_Cursor(req, time.perf_counter()))
+        now = self.clock()
+        self._submitted += 1
+        cur = _Cursor(req, now)
+        if req.deadline_s is not None:
+            cur.deadline_t = now + float(req.deadline_s)
+        if self._degraded and \
+                req.priority < self.scheduler.config.degrade_shed_below:
+            self._reject(cur, Rejection(
+                req.rid, "degraded",
+                f"degraded mode ({self._degraded[-1]['reason']}): only "
+                f"priority >= {self.scheduler.config.degrade_shed_below} "
+                "admitted", t=now, priority=req.priority))
+            return
+        res = self.scheduler.admit(cur, rid=req.rid, n_events=req.n_events,
+                                   priority=req.priority,
+                                   deadline=cur.deadline_t)
+        for item, rej in res.rejections:
+            self._reject(item, rej)
 
     def run(self, max_steps: int = 100_000) -> List[SimRequest]:
-        """Drain the queue (or stop after ``max_steps`` bucket steps);
-        returns every request finished so far, FIFO order."""
+        """Serve until the queue drains (or ``max_steps`` bucket steps);
+        returns every request finished so far.
+
+        Each iteration: expire dead deadlines (structured rejections,
+        never hangs), check the PhysicsGate drift alarm (degrade +
+        shed low priority), plan one bucket step (scheduler order:
+        promoted, then priority, then earliest deadline), dispatch it —
+        through the replica group when configured — and finalize any
+        requests whose last event landed.  A total replica outage
+        rejects the remaining queue with reason ``capacity`` instead of
+        looping forever.
+        """
         for _ in range(max_steps):
-            if not self._queue:
+            for item, rej in self.scheduler.expire():
+                self._reject(item, rej)
+            self._check_gate_drift()
+            plan = self.scheduler.plan_step(self.buckets)
+            if plan is None:
                 break
-            bucket, inputs, spans, n_real = self._pack()
-            img, sums = self._dispatch(bucket, inputs)
+            bucket, assignments = plan
+            inputs, spans, n_real = self._pack_plan(bucket, assignments)
+            try:
+                img, sums = self._dispatch(bucket, inputs)
+            except NoHealthyReplicas:
+                self._enter_degraded("no_healthy_replicas")
+                for item, rej in self.scheduler.drain(
+                        "capacity", "no healthy replica left"):
+                    self._reject(item, rej)
+                break
+            self.scheduler.commit(plan)
             if self.gate is not None:
                 self.gate.update(sums, n_real)
             self.stats["padded_events"] += bucket - n_real
             for cur, row, take in spans:
                 cur.chunks.append(img[row:row + take])
+                cur.next_ev += take
                 if cur.next_ev == cur.req.n_events:
                     self._finalize(cur)
-            self._queue = [c for c in self._queue if not c.req.done]
         return list(self._finished)
 
     def generate_events(self, primary_energy: float, n_events: int,
                         seed: int = 0) -> np.ndarray:
         """One-shot convenience: serve a single request, return its images."""
-        rid = len(self._finished) + len(self._queue)
-        req = SimRequest(rid=rid, primary_energy=primary_energy,
+        req = SimRequest(rid=self._submitted, primary_energy=primary_energy,
                          n_events=n_events, seed=seed)
         self.submit(req)
         self.run()
         return req.images
 
+    # -- degradation ladder ------------------------------------------------
+
+    def _enter_degraded(self, reason: str) -> None:
+        if self._degraded and self._degraded[-1]["reason"] == reason:
+            return
+        self._degraded.append({"reason": reason, "t": self.clock(),
+                               "step": self.stats["steps"]})
+
+    def _check_gate_drift(self) -> None:
+        """PhysicsGate alarm -> quality-degraded mode: shed everything
+        below the configured priority floor, keep serving the rest."""
+        if self.gate is None or self.max_kl is None:
+            return
+        if not self.gate.drifted(self.max_kl):
+            return
+        self._enter_degraded("gate_drift")
+        floor = self.scheduler.config.degrade_shed_below
+        worst = self.gate.latest()
+        for item, rej in self.scheduler.shed_below(
+                floor, "degraded",
+                f"physics gate drifted past max_kl={self.max_kl} "
+                f"(longitudinal_kl={worst['longitudinal_kl']:.4f})"):
+            self._reject(item, rej)
+
+    def degraded_report(self) -> dict:
+        """Structured service-state report — what an operator (or the
+        autoscaler) polls instead of grepping logs.  ``mode`` is
+        ``healthy`` until a degradation transition is recorded."""
+        sched = self.scheduler
+        return {
+            "mode": self._degraded[-1]["reason"] if self._degraded
+            else "healthy",
+            "transitions": list(self._degraded),
+            "queue": {"requests": sched.queue_depth(),
+                      "events": sched.backlog_events()},
+            "shed": dict(sched.stats["rejected"]),
+            "replicas": (self.replicas.health_report()
+                         if self.replicas is not None else None),
+            "gate": self.gate.latest() if self.gate is not None else None,
+            "drifted": (self.gate.drifted(self.max_kl)
+                        if self.gate is not None and self.max_kl is not None
+                        else False),
+            "served": len(self._finished),
+            "rejected": len(self.rejected),
+        }
+
+    # -- rejection bookkeeping ---------------------------------------------
+
+    def _reject(self, cur: _Cursor, rej: Rejection) -> None:
+        req = cur.req
+        req.status = "rejected"
+        req.error = rej.to_dict()
+        req.done = False
+        req.images = None
+        self.stats["events_wasted"] += cur.next_ev
+        cur.chunks = []
+        self.rejected.append(req)
+
     # -- packing -----------------------------------------------------------
 
-    def _pick_bucket(self, remaining: int) -> int:
-        for b in self.buckets:
-            if b >= remaining:
-                return b
-        return self.buckets[-1]
-
-    def _pack(self):
-        """Fill one bucket batch from the queue head (FIFO, requests may
-        split across steps or share one).  Padded rows carry a benign
-        mid-range E_p and mask=0 so they never reach the gate or a user."""
-        remaining = sum(c.req.n_events - c.next_ev for c in self._queue)
-        bucket = self._pick_bucket(remaining)
+    def _pack_plan(self, bucket: int, assignments):
+        """Materialise a scheduler plan into one bucket batch.  Padded
+        rows carry a benign mid-range E_p and mask=0 so they never reach
+        the gate or a user.  Bucket choice and span order are the
+        scheduler's — with the default config that reproduces the old
+        FIFO ``_pack`` exactly."""
         seeds = np.zeros((bucket,), np.int32)
         ev_idx = np.zeros((bucket,), np.int32)
         e_p = np.full((bucket,), 100.0, np.float32)
@@ -275,12 +431,8 @@ class SimulateEngine:
         mask = np.zeros((bucket,), np.float32)
         spans = []
         row = 0
-        for cur in self._queue:
-            if row == bucket:
-                break
-            take = min(bucket - row, cur.req.n_events - cur.next_ev)
-            if take == 0:
-                continue
+        for entry, take in assignments:
+            cur = entry.item
             seeds[row:row + take] = cur.req.seed
             ev_idx[row:row + take] = np.arange(cur.next_ev,
                                                cur.next_ev + take)
@@ -288,9 +440,8 @@ class SimulateEngine:
             theta[row:row + take] = cur.req.theta
             mask[row:row + take] = 1.0
             spans.append((cur, row, take))
-            cur.next_ev += take
             row += take
-        return bucket, (seeds, ev_idx, e_p, theta, mask), spans, row
+        return (seeds, ev_idx, e_p, theta, mask), spans, row
 
     # -- compiled steps ----------------------------------------------------
 
@@ -348,20 +499,42 @@ class SimulateEngine:
         return tuple(jnp.asarray(a) for a in arrs)
 
     def _dispatch(self, bucket: int, inputs):
-        if bucket not in self._compiled:
-            self._compiled[bucket] = self._compile_bucket(bucket)
-        img, sums = self._compiled[bucket](self.params, *self._place(inputs))
+        placed = self._place(inputs)
+        if self.replicas is not None:
+            # per-replica program caches: a respawned replica starts cold
+            # and recompiles (compile_count counts that, like a fresh
+            # process would); failover re-dispatches the SAME placed
+            # inputs, so the surviving replica's result is bit-identical.
+            def run_on(rep):
+                if bucket not in rep.compiled:
+                    rep.compiled[bucket] = self._compile_bucket(bucket)
+                return rep.compiled[bucket](self.params, *placed)
+            img, sums = self.replicas.dispatch(run_on)
+        else:
+            if bucket not in self._compiled:
+                self._compiled[bucket] = self._compile_bucket(bucket)
+            img, sums = self._compiled[bucket](self.params, *placed)
         self.stats["steps"] += 1
         self.stats["bucket_steps"][bucket] += 1
         return img, sums
 
     def _finalize(self, cur: _Cursor) -> None:
+        now = self.clock()
+        if cur.deadline_t is not None and now > cur.deadline_t:
+            # generated, but too late to honor the SLA: a structured
+            # rejection, never a silently-late result
+            self._reject(cur, Rejection(
+                cur.req.rid, "deadline",
+                f"completed {now - cur.deadline_t:.3f}s past its deadline",
+                t=now, priority=cur.req.priority))
+            return
         dev = (cur.chunks[0] if len(cur.chunks) == 1
                else jnp.concatenate(cur.chunks, axis=0))
         cur.req.images = np.asarray(dev)   # the ONE transfer per request
         cur.chunks = []
         self.stats["device_transfers"] += 1
         self.stats["events_generated"] += cur.req.n_events
-        cur.req.latency_s = time.perf_counter() - cur.t0
+        cur.req.latency_s = now - cur.t0
         cur.req.done = True
+        cur.req.status = "done"
         self._finished.append(cur.req)

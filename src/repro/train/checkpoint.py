@@ -174,6 +174,35 @@ def restore_latest(root: str, template) -> Tuple[int, Any, Optional[dict],
     return 0, None, None, skipped
 
 
+def restore_latest_mirrored(root: str, mirror: Optional[str],
+                            template) -> Tuple[int, Any, Optional[dict], int]:
+    """Newest valid snapshot across a primary root AND its mirror.
+
+    The bidirectional fallback for :class:`AsyncCheckpointer`'s mirror
+    directory (a cross-host replication stand-in): for each step,
+    newest-first, try the primary's copy then the mirror's — so a
+    corrupt or missing snapshot on EITHER side falls back to the other
+    before falling back to an older step.  Same return contract as
+    :func:`restore_latest`; ``mirror=None`` degrades to it exactly.
+    """
+    candidates = set(checkpoint_steps(root))
+    if mirror:
+        candidates |= set(checkpoint_steps(mirror))
+    skipped = 0
+    for step in sorted(candidates, reverse=True):
+        for base in (root, mirror):
+            if not base:
+                continue
+            path = step_dir(base, step)
+            if not os.path.isdir(path):
+                continue
+            try:
+                return step, restore(path, template), manifest(path), skipped
+            except Exception:
+                skipped += 1
+    return 0, None, None, skipped
+
+
 class AsyncCheckpointer:
     """Keep-last-K snapshot writer off the training critical path.
 
@@ -185,19 +214,39 @@ class AsyncCheckpointer:
     topology that wrote them, and the precision policy — recovery uses it
     to decide how to reshard and at what precision to resume.
 
+    Write resilience: ``retries`` re-attempts a failed snapshot write
+    with exponential backoff (``retry_backoff_s * 2^attempt``) before
+    surfacing the error — a transient filesystem hiccup (cloud disk
+    detach/reattach, NFS blip) costs a retry, not the snapshot.  An
+    optional ``mirror`` directory receives a second atomic copy of every
+    snapshot (the cross-host replication stand-in); mirror failures are
+    counted, never fatal, and recovery via
+    :func:`restore_latest_mirrored` falls back across both sides.
+
     ``stats``: {"saved", "pruned", "snapshot_ms" (main-thread dispatch
-    cost), "write_ms" (writer-thread transfer+IO), "writer_thread"}.
+    cost), "write_ms" (writer-thread transfer+IO), "write_retries",
+    "mirror_saved", "mirror_errors", "writer_thread"}.
     Writer-side exceptions are re-raised on :meth:`wait`.
     """
 
     def __init__(self, root: str, *, keep: int = 3,
-                 extra: Optional[dict] = None):
+                 extra: Optional[dict] = None, retries: int = 0,
+                 retry_backoff_s: float = 0.05,
+                 mirror: Optional[str] = None, sleep=time.sleep):
         os.makedirs(root, exist_ok=True)
         self.root = root
         self.keep = max(int(keep), 1)
         self.extra = dict(extra or {})
+        self.retries = max(int(retries), 0)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.mirror = mirror
+        if mirror:
+            os.makedirs(mirror, exist_ok=True)
+        self._sleep = sleep
         self.stats = {"saved": 0, "pruned": 0, "snapshot_ms": 0.0,
-                      "write_ms": 0.0, "writer_thread": None}
+                      "write_ms": 0.0, "write_retries": 0,
+                      "mirror_saved": 0, "mirror_errors": 0,
+                      "writer_thread": None}
         self._q: queue.Queue = queue.Queue()
         self._err: Optional[BaseException] = None
         self._thread = threading.Thread(target=self._drain, daemon=True,
@@ -243,27 +292,49 @@ class AsyncCheckpointer:
             try:
                 t0 = time.perf_counter()
                 host = jax.tree.map(np.asarray, snap)   # d2h, writer-side
-                tmp = os.path.join(self.root,
-                                   f".tmp-step-{step:08d}-{os.getpid()}")
-                if os.path.exists(tmp):
-                    shutil.rmtree(tmp)
-                save(tmp, host, step=step, extra=extra)
-                final = step_dir(self.root, step)
-                if os.path.exists(final):
-                    shutil.rmtree(final)
-                os.rename(tmp, final)                   # atomic publish
+                self._publish(self.root, step, host, extra)
                 self.stats["write_ms"] += 1e3 * (time.perf_counter() - t0)
                 self.stats["saved"] += 1
-                self._prune()
+                self._prune(self.root)
+                if self.mirror:
+                    try:
+                        self._publish(self.mirror, step, host, extra)
+                        self.stats["mirror_saved"] += 1
+                        self._prune(self.mirror)
+                    except BaseException:   # mirror loss is non-fatal
+                        self.stats["mirror_errors"] += 1
             except BaseException as e:                  # surface on wait()
                 self._err = e
             finally:
                 self._q.task_done()
 
-    def _prune(self):
-        steps = checkpoint_steps(self.root)
+    def _publish(self, root: str, step: int, host, extra: dict):
+        """Atomic snapshot publish into ``root`` with retry + backoff.
+        A partially-written temp dir from a failed attempt is removed
+        before the next try; the rename is the only visible event."""
+        for attempt in range(self.retries + 1):
+            tmp = os.path.join(root, f".tmp-step-{step:08d}-{os.getpid()}")
+            try:
+                if os.path.exists(tmp):
+                    shutil.rmtree(tmp)
+                save(tmp, host, step=step, extra=extra)
+                final = step_dir(root, step)
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.rename(tmp, final)                   # atomic publish
+                return
+            except BaseException:
+                shutil.rmtree(tmp, ignore_errors=True)
+                if attempt >= self.retries:
+                    raise
+                self.stats["write_retries"] += 1
+                self._sleep(self.retry_backoff_s * (2 ** attempt))
+
+    def _prune(self, root: Optional[str] = None):
+        root = root or self.root
+        steps = checkpoint_steps(root)
         for step in steps[:-self.keep]:
-            shutil.rmtree(step_dir(self.root, step), ignore_errors=True)
+            shutil.rmtree(step_dir(root, step), ignore_errors=True)
             self.stats["pruned"] += 1
 
     # -- lifecycle ----------------------------------------------------------

@@ -31,8 +31,9 @@ fallbacks, re-meshes) is what `tools/run_elastic.py` turns into
 """
 from __future__ import annotations
 
+import signal as signal_lib
 import time
-from typing import Callable, Iterable, Optional
+from typing import Callable, Iterable, Optional, Sequence
 
 import jax
 import numpy as np
@@ -65,7 +66,8 @@ class ElasticEngine:
                  loop: str = "builtin", ckpt_dir: str, ckpt_every: int = 2,
                  keep: int = 3, grad_reduce="flat", bucket_mb: float = 4.0,
                  donate: bool = True, prefetch_size: int = 2,
-                 ckpt_extra: Optional[dict] = None):
+                 ckpt_extra: Optional[dict] = None, ckpt_retries: int = 0,
+                 ckpt_mirror: Optional[str] = None):
         self.nodes = int(nodes)
         self.devices_per_node = int(devices_per_node)
         self.loop = loop
@@ -75,7 +77,9 @@ class ElasticEngine:
         self.donate = donate
         self.prefetch_size = prefetch_size
         self.ckpt = ckpt_lib.AsyncCheckpointer(ckpt_dir, keep=keep,
-                                               extra=dict(ckpt_extra or {}))
+                                               extra=dict(ckpt_extra or {}),
+                                               retries=ckpt_retries,
+                                               mirror=ckpt_mirror)
 
     def _engine(self) -> engine_lib.Engine:
         mesh = mesh_lib.make_node_mesh(self.nodes, self.devices_per_node)
@@ -88,13 +92,31 @@ class ElasticEngine:
     def fit(self, task, make_batches: Callable[[int], Iterable[dict]],
             steps: int, *, rng: jax.Array,
             injector: Optional[FaultInjector] = None, log=None,
-            log_every: int = 1):
+            log_every: int = 1,
+            handle_signals: Optional[Sequence[int]] = None,
+            resume: bool = False):
         """Train ``steps`` global steps, riding through scripted faults.
 
         ``make_batches(start)`` must return the host batch stream for
         global steps ``start, start+1, ...`` — the deterministic-replay
         contract (a seeded generator with a skip, or a list slice).
         Returns ``(state, report)``.
+
+        ``handle_signals`` (e.g. ``(signal.SIGTERM, signal.SIGINT)``)
+        installs wall-clock preemption handlers for the duration of the
+        fit: the cloud's shutdown warning is converted into the SAME
+        deterministic :class:`Preemption` path as a scripted fault — the
+        handler only sets a flag; at the NEXT step boundary the engine
+        snapshots the completed state, flushes the writer, and exits 0
+        (``SystemExit``).  A relaunch with the same arguments resumes
+        from that snapshot bit-pinned, exactly like a scripted
+        ``lose_node=False`` preemption.  Previous handlers are restored
+        on exit.
+
+        ``resume=True`` restores the newest valid snapshot (primary or
+        mirror) from ``ckpt_dir`` before the first step — how the
+        respawned job after a signal exit (or any crash) picks the run
+        back up; a missing/empty checkpoint dir just starts from step 0.
         """
         eng = self._engine()
         self.ckpt.extra["topology"] = [self.nodes, self.devices_per_node]
@@ -103,10 +125,47 @@ class ElasticEngine:
             hooks.append(injector.hook(self.ckpt))
         template = _zeros_template(task, jax.random.key(0))
 
+        self._signal: Optional[int] = None
+        installed = {}
+        if handle_signals:
+            def _on_signal(signum, frame):
+                del frame               # async-signal-safe: flag only
+                self._signal = signum
+
+            def _signal_hook(step: int, state):
+                # step boundary: convert the flag into the Preemption
+                # path with a snapshot of the COMPLETED state first
+                if self._signal is not None:
+                    self.ckpt.save(step + 1, state)
+                    raise Preemption(step + 1, node=0, lose_node=False)
+
+            for s in handle_signals:
+                installed[s] = signal_lib.signal(s, _on_signal)
+            hooks.append(_signal_hook)
+
         report = {"recoveries": [], "lost_steps": 0, "recovery_s": 0.0,
                   "fallbacks": 0, "remeshes": 0, "restarts": 0,
                   "preemptions": 0}
+        try:
+            return self._fit_loop(task, make_batches, steps, rng, injector,
+                                  log, log_every, eng, hooks, template,
+                                  report, resume)
+        finally:
+            for s, h in installed.items():
+                signal_lib.signal(s, h)
+
+    def _fit_loop(self, task, make_batches, steps, rng, injector, log,
+                  log_every, eng, hooks, template, report, resume):
         state, metrics, start = None, {}, 0
+        if resume:
+            ckpt_step, tree, _man, skipped = \
+                ckpt_lib.restore_latest_mirrored(
+                    self.ckpt.root, self.ckpt.mirror, template)
+            report["fallbacks"] += skipped
+            if tree is not None:
+                state = jax.device_put(tree, NamedSharding(eng.mesh, P()))
+                start = ckpt_step
+                report["resumed_from"] = ckpt_step
         while start < steps:
             stream = make_batches(start)
             if injector is not None:
@@ -120,6 +179,14 @@ class ElasticEngine:
             except Preemption as p:
                 t0 = time.perf_counter()
                 self.ckpt.wait()            # newest snapshot is on disk
+                if self._signal is not None:
+                    # wall-clock preemption: snapshot is flushed; hand
+                    # the machine back with a clean exit (the respawned
+                    # job resumes from the checkpoint)
+                    print(f"elastic: signal {self._signal} -> "
+                          f"checkpointed step {p.step}, exiting 0",
+                          flush=True)
+                    raise SystemExit(0)
                 report["preemptions"] += 1
                 if p.lose_node and self.nodes > 1:
                     self.nodes -= 1         # capacity gone: re-mesh
@@ -129,8 +196,9 @@ class ElasticEngine:
                                                    self.devices_per_node]
                 else:                       # replacement respawns
                     report["restarts"] += 1
-                ckpt_step, tree, _man, skipped = ckpt_lib.restore_latest(
-                    self.ckpt.root, template)
+                ckpt_step, tree, _man, skipped = \
+                    ckpt_lib.restore_latest_mirrored(
+                        self.ckpt.root, self.ckpt.mirror, template)
                 report["fallbacks"] += skipped
                 if tree is None:            # no valid snapshot: from scratch
                     state, start = None, 0

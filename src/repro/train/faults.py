@@ -39,6 +39,15 @@ Fault kinds:
 ``corrupt``
     The latest on-disk snapshot is truncated (:func:`corrupt_latest`),
     forcing recovery to fall back to the previous one.
+
+The SERVING side reuses the same plan format against its replica groups
+(`serve/replicas.ReplicaFaultInjector`): a ``preempt`` event is a
+replica kill (``node`` = replica rank; ``lose_node=True`` means the
+replica stays dead, ``False`` means a replacement respawns with a cold
+compile cache) and a ``stall`` event is a slow replica (``node`` picks
+which one, ``stall_ms`` how slow) — so one trace format, one replay
+discipline, and one CI determinism story cover both the training and
+the serving chaos suites.
 """
 from __future__ import annotations
 
@@ -194,12 +203,20 @@ class FaultInjector:
         self.fired: List[FaultEvent] = []
         self._done: set = set()
 
-    def _pending(self, step: int):
+    def pending(self, step: int) -> List[Tuple[int, FaultEvent]]:
+        """Unfired (index, event) pairs scheduled at ``step`` — the
+        once-only view subclasses and the serve-side injector consume."""
         return [(i, e) for i, e in self.plan.at(step) if i not in self._done]
 
-    def _fire(self, idx: int, event: FaultEvent):
+    def fire(self, idx: int, event: FaultEvent) -> None:
+        """Mark plan index ``idx`` fired (it will never fire again) and
+        record the event in ``fired`` for replay/determinism asserts."""
         self._done.add(idx)
         self.fired.append(event)
+
+    # internal aliases kept for the call sites below
+    _pending = pending
+    _fire = fire
 
     def wrap(self, batches: Iterable[dict],
              start_step: int = 0) -> Iterator[dict]:

@@ -348,6 +348,160 @@ def test_fault_event_validation_and_committed_trace():
     assert any(e.lose_node for e in plan.events if e.kind == "preempt")
 
 
+def test_sigterm_graceful_preemption_subprocess(tmp_path):
+    """The wall-clock preemption path: a real SIGTERM mid-training is
+    converted into the deterministic Preemption path — snapshot the
+    completed step, flush the writer, exit 0 — and a relaunch with
+    ``resume=True`` finishes bit-identical to an uninterrupted run."""
+    ckpt_dir = str(tmp_path / "sig_ck")
+    interrupted = r"""
+import os, signal, sys
+import jax
+from repro.configs import calo3dgan
+from repro.data.calo import CaloSimulator, CaloSpec
+from repro.optim import optimizers as opt_lib
+from repro.train import engine as engine_lib
+from repro.train.elastic import ElasticEngine
+
+cfg = calo3dgan.bench()
+spec = CaloSpec(image_shape=cfg.image_shape)
+task = engine_lib.gan_task(cfg, opt_lib.rmsprop(1e-4), opt_lib.rmsprop(1e-4))
+
+def make_batches(start):
+    def gen():
+        sim = CaloSimulator(spec, seed=11)
+        for i, b in enumerate(sim.batches(4, skip=start)):
+            if start + i == 5:          # a real OS signal, mid-stream
+                os.kill(os.getpid(), signal.SIGTERM)
+            yield b
+    return gen()
+
+eng = ElasticEngine(1, 1, loop="builtin", ckpt_dir=sys.argv[1],
+                    ckpt_every=2, keep=3)
+eng.fit(task, make_batches, 12, rng=jax.random.key(1),
+        handle_signals=(signal.SIGTERM, signal.SIGINT))
+print("UNREACHABLE: fit returned despite the signal")
+sys.exit(3)
+"""
+    resumed = r"""
+import signal, sys
+import jax, numpy as np
+from repro.configs import calo3dgan
+from repro.data.calo import CaloSimulator, CaloSpec
+from repro.optim import optimizers as opt_lib
+from repro.train import engine as engine_lib
+from repro.train.elastic import ElasticEngine
+
+cfg = calo3dgan.bench()
+spec = CaloSpec(image_shape=cfg.image_shape)
+make_batches = lambda start: CaloSimulator(spec, seed=11).batches(
+    4, skip=start)
+task = lambda: engine_lib.gan_task(cfg, opt_lib.rmsprop(1e-4),
+                                   opt_lib.rmsprop(1e-4))
+import tempfile
+with tempfile.TemporaryDirectory() as td:
+    clean_eng = ElasticEngine(1, 1, loop="builtin", ckpt_dir=td + "/c",
+                              ckpt_every=2, keep=3)
+    clean, _ = clean_eng.fit(task(), make_batches, 12,
+                             rng=jax.random.key(1))
+eng = ElasticEngine(1, 1, loop="builtin", ckpt_dir=sys.argv[1],
+                    ckpt_every=2, keep=3)
+state, rep = eng.fit(task(), make_batches, 12, rng=jax.random.key(1),
+                     resume=True, handle_signals=(signal.SIGTERM,))
+assert rep["resumed_from"] >= 2, rep
+for a, b in zip(jax.tree.leaves(clean.g_params)
+                + jax.tree.leaves(clean.d_params),
+                jax.tree.leaves(state.g_params)
+                + jax.tree.leaves(state.d_params)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+print(f"signal resume parity OK from step {rep['resumed_from']}")
+"""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", interrupted, ckpt_dir],
+                       env=env, cwd=REPO, capture_output=True, text=True,
+                       timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "exiting 0" in r.stdout, r.stdout + r.stderr
+    assert ckpt_lib.checkpoint_steps(ckpt_dir), "no snapshot on disk"
+    r2 = subprocess.run([sys.executable, "-c", resumed, ckpt_dir],
+                        env=env, cwd=REPO, capture_output=True, text=True,
+                        timeout=600)
+    assert r2.returncode == 0, r2.stdout + r2.stderr
+    assert "signal resume parity OK" in r2.stdout
+
+
+def test_checkpointer_retries_transient_write_failure(tmp_path,
+                                                      monkeypatch):
+    """A transient filesystem failure costs retries, not the snapshot:
+    the writer re-attempts with backoff and the snapshot still lands."""
+    real_save = ckpt_lib.save
+    fails = {"n": 2}
+
+    def flaky_save(path, tree, step=0, extra=None):
+        if fails["n"] > 0:
+            fails["n"] -= 1
+            raise OSError("disk detached")
+        return real_save(path, tree, step=step, extra=extra)
+
+    monkeypatch.setattr(ckpt_lib, "save", flaky_save)
+    ckpt = ckpt_lib.AsyncCheckpointer(str(tmp_path / "ck"), keep=3,
+                                      retries=3, retry_backoff_s=0.001)
+    ckpt.save(2, {"w": np.ones(3, np.float32)})
+    ckpt.close()
+    assert ckpt.stats["saved"] == 1
+    assert ckpt.stats["write_retries"] == 2
+    assert ckpt_lib.checkpoint_steps(ckpt.root) == [2]
+    got = ckpt_lib.restore(ckpt_lib.step_dir(ckpt.root, 2),
+                           {"w": np.zeros(3, np.float32)})
+    np.testing.assert_array_equal(got["w"], np.ones(3, np.float32))
+
+
+def test_checkpointer_write_failure_surfaces_without_retries(tmp_path,
+                                                            monkeypatch):
+    """retries=0 keeps the old contract: a write failure is stashed and
+    re-raised on wait(), never swallowed."""
+    def broken_save(path, tree, step=0, extra=None):
+        raise OSError("disk gone for good")
+
+    monkeypatch.setattr(ckpt_lib, "save", broken_save)
+    ckpt = ckpt_lib.AsyncCheckpointer(str(tmp_path / "ck"), keep=3)
+    ckpt.save(2, {"w": np.ones(3, np.float32)})
+    with pytest.raises(OSError, match="disk gone"):
+        ckpt.wait()
+
+
+def test_checkpoint_mirror_bidirectional_fallback(tmp_path):
+    """The mirror directory is a full second copy, and recovery falls
+    back across BOTH sides: corrupt primary -> mirror serves the same
+    step; corrupt both newest -> the previous step (primary) serves."""
+    root, mirror = str(tmp_path / "ck"), str(tmp_path / "mirror")
+    ckpt = ckpt_lib.AsyncCheckpointer(root, keep=3, mirror=mirror)
+    for step, val in ((2, 2.0), (4, 4.0)):
+        ckpt.save(step, {"w": np.full(3, val, np.float32)})
+    ckpt.close()
+    assert ckpt.stats["mirror_saved"] == 2
+    assert ckpt_lib.checkpoint_steps(mirror) == [2, 4]
+    template = {"w": np.zeros(3, np.float32)}
+
+    assert faults.corrupt_latest(root) == 4   # primary's newest is torn
+    step, tree, _, skipped = ckpt_lib.restore_latest_mirrored(
+        root, mirror, template)
+    assert (step, skipped) == (4, 1)          # mirror served step 4
+    np.testing.assert_array_equal(tree["w"], np.full(3, 4.0, np.float32))
+
+    assert faults.corrupt_latest(mirror) == 4  # now both copies of 4 die
+    step, tree, _, skipped = ckpt_lib.restore_latest_mirrored(
+        root, mirror, template)
+    assert (step, skipped) == (2, 2)
+    np.testing.assert_array_equal(tree["w"], np.full(3, 2.0, np.float32))
+
+    # no mirror configured degrades to plain restore_latest
+    step, _, _, _ = ckpt_lib.restore_latest_mirrored(root, None, template)
+    assert step == 2
+
+
 def test_injector_fires_each_event_once():
     plan = faults.FaultPlan(events=(
         faults.FaultEvent(2, "preempt", lose_node=False),))

@@ -1,0 +1,403 @@
+"""Chaos suite for the resilient serving runtime (scheduler + replicas).
+
+The serving acceptance bar mirrors the elastic training one: every fault
+is scripted from a deterministic `train/faults.FaultPlan` (dispatch-
+indexed, fire-once), every clock is injected, and the assertions are
+exact — a replica kill mid-traffic must return showers BIT-IDENTICAL to
+the fault-free run (per-event fold_in RNG makes a bucket step a pure
+function of its inputs), a dead deadline must become a structured
+rejection rather than a hang, an overload's shed count must replay
+exactly under a seeded arrival trace, and a PhysicsGate drift alarm must
+produce the degraded-mode ladder (shed low priority, structured report).
+The committed CI trace (``results/serve_chaos_trace.json``) is replayed
+twice here, same as the elastic smoke discipline.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import calo3dgan
+from repro.core import gan, validation
+from repro.data.calo import CaloSimulator, CaloSpec
+from repro.launch.mesh import make_dev_mesh
+from repro.serve.replicas import (NoHealthyReplicas, ReplicaFaultInjector,
+                                  ReplicaGroup)
+from repro.serve.scheduler import Scheduler, SchedulerConfig
+from repro.serve.simulate import PhysicsGate, SimRequest, SimulateEngine
+from repro.train.faults import FaultEvent, FaultPlan
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TRACE = os.path.join(REPO, "results", "serve_chaos_trace.json")
+CFG = calo3dgan.bench()
+
+
+@pytest.fixture(scope="module")
+def g_params():
+    return gan.init_generator(jax.random.key(0), CFG)
+
+
+class Ticker:
+    """Injected clock: advances only when the test says so."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def _engine(g_params, **kw):
+    kw.setdefault("buckets", (4, 16))
+    kw.setdefault("mesh", make_dev_mesh())
+    return SimulateEngine(CFG, g_params, **kw)
+
+
+def _requests(sizes, **kw):
+    return [SimRequest(rid=i, primary_energy=100.0 + i, n_events=n,
+                       seed=i, **kw) for i, n in enumerate(sizes)]
+
+
+# ---------------------------------------------------------------------------
+# replica failover: bit-identical showers
+# ---------------------------------------------------------------------------
+
+
+def test_replica_kill_failover_bit_identical(g_params):
+    """A replica killed mid-traffic: its bucket step re-dispatches onto
+    the survivor and every request's showers are BIT-IDENTICAL to the
+    fault-free run — the tentpole acceptance bar."""
+    sizes = [3, 5, 17, 1]
+    clean = _engine(g_params)
+    for r in _requests(sizes):
+        clean.submit(r)
+    baseline = {r.rid: r.images for r in clean.run()}
+
+    # dispatch 1 round-robins onto rank 1 — the kill hits the replica
+    # actually chosen for that bucket step
+    plan = FaultPlan(events=(
+        FaultEvent(1, "preempt", node=1, lose_node=False),))
+    group = ReplicaGroup(2, injector=ReplicaFaultInjector(plan),
+                         sleep=lambda s: None)
+    eng = _engine(g_params, replicas=group)
+    for r in _requests(sizes):
+        eng.submit(r)
+    done = {r.rid: r for r in eng.run()}
+
+    assert group.stats["failovers"] == 1
+    assert group.stats["respawns"] == 1          # lose_node=False came back
+    assert len(done) == len(sizes) and not eng.rejected
+    for rid, img in baseline.items():
+        np.testing.assert_array_equal(img, done[rid].images)
+
+
+def test_replica_stall_hedged_and_bit_identical(g_params):
+    """A long scripted stall is hedged onto a peer (bounded wait, never
+    the full stall) and numerics are untouched."""
+    baseline = _engine(g_params).generate_events(150.0, 7, seed=4)
+    plan = FaultPlan(events=(
+        FaultEvent(0, "stall", node=0, stall_ms=5000.0),))
+    waits = []
+    group = ReplicaGroup(2, injector=ReplicaFaultInjector(plan),
+                         hedge_stall_ms=200.0, sleep=waits.append)
+    eng = _engine(g_params, replicas=group)
+    img = eng.generate_events(150.0, 7, seed=4)
+    assert group.stats["hedges"] == 1
+    assert waits and max(waits) <= 0.2 + 1e-9    # never the 5s stall
+    np.testing.assert_array_equal(baseline, img)
+
+
+def test_total_outage_rejects_capacity_not_hang(g_params):
+    """Both replicas dead: the queue is drained with structured
+    ``capacity`` rejections and a degraded report — run() returns."""
+    plan = FaultPlan(events=(
+        FaultEvent(0, "preempt", node=0, lose_node=True),
+        FaultEvent(0, "preempt", node=1, lose_node=True)))
+    group = ReplicaGroup(2, injector=ReplicaFaultInjector(plan),
+                         sleep=lambda s: None)
+    eng = _engine(g_params, replicas=group)
+    reqs = _requests([3, 9])
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert done == []
+    assert [r.error["reason"] for r in eng.rejected] == ["capacity"] * 2
+    assert all(r.status == "rejected" for r in reqs)
+    report = eng.degraded_report()
+    assert report["mode"] == "no_healthy_replicas"
+    assert report["replicas"]["healthy"] == 0
+
+
+def test_committed_trace_replays_identically(g_params):
+    """The CI smoke contract: replaying results/serve_chaos_trace.json
+    twice produces identical showers, identical failover/respawn/hedge
+    counts, and identical health reports."""
+    plan = FaultPlan.load(TRACE)
+
+    def run_once():
+        group = ReplicaGroup(2, injector=ReplicaFaultInjector(plan),
+                             hedge_stall_ms=200.0, sleep=lambda s: None)
+        # buckets=(4,) gives the 37-event trace 10 dispatches, spanning
+        # every scripted fault index
+        eng = _engine(g_params, buckets=(4,), replicas=group)
+        for r in _requests([3, 5, 17, 1, 9, 2]):
+            eng.submit(r)
+        done = {r.rid: r.images for r in eng.run()}
+        return done, dict(group.stats), group.health_report()
+
+    a_imgs, a_stats, a_health = run_once()
+    b_imgs, b_stats, b_health = run_once()
+    assert sorted(a_imgs) == sorted(b_imgs) and len(a_imgs) == 6
+    for rid in a_imgs:
+        np.testing.assert_array_equal(a_imgs[rid], b_imgs[rid])
+    a_stats.pop("backoff_s"), b_stats.pop("backoff_s")
+    assert a_stats == b_stats
+    assert a_health == b_health
+    # the trace bites: one respawn kill, one hedge, one permanent kill
+    assert a_stats["failovers"] == 2
+    assert a_stats["hedges"] == 1
+    assert a_stats["respawns"] == 1
+    assert a_health["healthy"] == 1              # rank 1 stays dead
+
+
+# ---------------------------------------------------------------------------
+# deadlines: structured rejection, never a hang or a silent late serve
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_expiry_in_queue_structured_rejection(g_params):
+    clock = Ticker()
+    eng = _engine(g_params, clock=clock)
+    doomed = SimRequest(rid=0, primary_energy=90.0, n_events=3, seed=0,
+                        deadline_s=1.0)
+    fine = SimRequest(rid=1, primary_energy=90.0, n_events=3, seed=1)
+    eng.submit(doomed)
+    eng.submit(fine)
+    clock.t = 2.0                                # the SLA window passes
+    done = eng.run()
+    assert [r.rid for r in done] == [1]
+    assert doomed.status == "rejected" and doomed.images is None
+    assert doomed.error["reason"] == "deadline"
+    assert "expired in queue" in doomed.error["detail"]
+
+
+def test_deadline_already_expired_or_infeasible_at_admission(g_params):
+    clock = Ticker(10.0)
+    eng = _engine(g_params, clock=clock,
+                  sched=SchedulerConfig(drain_rate_ev_s=10.0))
+    dead = SimRequest(rid=0, primary_energy=50.0, n_events=2, seed=0,
+                      deadline_s=-1.0)
+    eng.submit(dead)
+    assert dead.status == "rejected"
+    assert dead.error["reason"] == "deadline"
+    # 100 events at 10 ev/s need 10s; a 1s deadline can never be met
+    hopeless = SimRequest(rid=1, primary_energy=50.0, n_events=100, seed=1,
+                          deadline_s=1.0)
+    eng.submit(hopeless)
+    assert hopeless.status == "rejected"
+    assert "infeasible" in hopeless.error["detail"]
+    assert eng.scheduler.queue_depth() == 0
+
+
+def test_completed_late_is_rejected_not_served(g_params, monkeypatch):
+    """A request whose last event lands after its deadline must come back
+    as a structured ``deadline`` rejection, not a silently-late result."""
+    clock = Ticker()
+    eng = _engine(g_params, clock=clock)
+    real_dispatch = eng._dispatch
+
+    def slow_dispatch(bucket, inputs):           # each step costs 1.0s
+        out = real_dispatch(bucket, inputs)
+        clock.t += 1.0
+        return out
+
+    monkeypatch.setattr(eng, "_dispatch", slow_dispatch)
+    late = SimRequest(rid=0, primary_energy=70.0, n_events=3, seed=0,
+                      deadline_s=0.5)
+    eng.submit(late)
+    done = eng.run()
+    assert done == [] and late.status == "rejected"
+    assert late.error["reason"] == "deadline"
+    assert "past its deadline" in late.error["detail"]
+    assert eng.stats["events_wasted"] == 3
+
+
+# ---------------------------------------------------------------------------
+# admission control / overload shedding
+# ---------------------------------------------------------------------------
+
+
+def test_overload_shed_count_deterministic_seeded_trace(g_params):
+    """A seeded arrival trace over the SLA-derived admission bound sheds
+    an EXACT, replayable set of requests — run twice, compare."""
+    def run_once():
+        clock = Ticker()
+        eng = _engine(g_params, clock=clock,
+                      sched=SchedulerConfig(max_queue_events=24))
+        rng = np.random.default_rng(0)
+        reqs = [SimRequest(rid=i, primary_energy=float(rng.uniform(20, 400)),
+                           n_events=int(rng.integers(1, 12)),
+                           seed=i, priority=int(rng.integers(0, 3)))
+                for i in range(16)]
+        for r in reqs:
+            eng.submit(r)
+        shed = sorted(r.rid for r in eng.rejected)
+        reasons = {r.error["reason"] for r in eng.rejected}
+        done = eng.run()
+        return shed, reasons, len(done), eng.scheduler.stats["rejected"]
+
+    a = run_once()
+    b = run_once()
+    assert a == b                                 # bit-for-bit replay
+    shed, reasons, n_done, counts = a
+    assert shed and reasons == {"overload"}
+    assert n_done + len(shed) == 16               # nothing lost silently
+    assert counts["overload"] == len(shed)
+
+
+def test_admission_evicts_lower_priority_first(g_params):
+    clock = Ticker()
+    eng = _engine(g_params, clock=clock,
+                  sched=SchedulerConfig(max_queue_events=8))
+    lo = SimRequest(rid=0, primary_energy=50.0, n_events=6, seed=0,
+                    priority=0)
+    hi = SimRequest(rid=1, primary_energy=50.0, n_events=6, seed=1,
+                    priority=2)
+    eng.submit(lo)
+    eng.submit(hi)                                # over the bound: evict lo
+    assert lo.status == "rejected" and lo.error["reason"] == "overload"
+    assert "evicted" in lo.error["detail"]
+    done = eng.run()
+    assert [r.rid for r in done] == [1]
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation: PhysicsGate drift alarm
+# ---------------------------------------------------------------------------
+
+
+def test_gate_drift_sheds_low_priority_with_report(g_params):
+    """An untrained generator trips the gate after its first window; the
+    engine enters quality-degraded mode: queued priority-0 work is shed
+    with reason ``degraded``, priority>=1 keeps being served, later
+    low-priority arrivals are refused at the door, and the structured
+    report says why."""
+    mc = next(CaloSimulator(CaloSpec(image_shape=CFG.image_shape),
+                            seed=0).batches(64))
+    gate = PhysicsGate(validation.reference_profiles(mc["image"], mc["e_p"]),
+                       window=4)
+    eng = _engine(g_params, buckets=(4,), gate=gate, max_kl=0.0,
+                  sched=SchedulerConfig(degrade_shed_below=1))
+    hi = SimRequest(rid=0, primary_energy=200.0, n_events=8, seed=0,
+                    priority=1)
+    lo = SimRequest(rid=1, primary_energy=200.0, n_events=8, seed=1,
+                    priority=0)
+    eng.submit(hi)
+    eng.submit(lo)
+    done = eng.run()
+    assert [r.rid for r in done] == [0]           # high priority survives
+    assert lo.status == "rejected"
+    assert lo.error["reason"] == "degraded"
+    assert "drifted" in lo.error["detail"]
+    report = eng.degraded_report()
+    assert report["mode"] == "gate_drift" and report["drifted"]
+    assert report["shed"]["degraded"] == 1
+    # degraded mode also gates the door
+    late_lo = SimRequest(rid=2, primary_energy=100.0, n_events=2, seed=2,
+                         priority=0)
+    eng.submit(late_lo)
+    assert late_lo.status == "rejected"
+    assert late_lo.error["reason"] == "degraded"
+
+
+def test_healthy_report_by_default(g_params):
+    eng = _engine(g_params)
+    eng.generate_events(100.0, 3, seed=0)
+    report = eng.degraded_report()
+    assert report["mode"] == "healthy" and not report["transitions"]
+    assert report["served"] == 1 and report["rejected"] == 0
+
+
+# ---------------------------------------------------------------------------
+# anti-starvation: age-based promotion (satellite regression)
+# ---------------------------------------------------------------------------
+
+
+def _starvation_trace(config):
+    """Mixed arrival trace at the scheduler level: an old small request
+    races a continuous stream of newer high-priority large ones."""
+    sched = Scheduler(config, clock=Ticker())
+    sched.admit("old-small", rid=0, n_events=2, priority=0)
+    served_at = None
+    for step in range(8):
+        sched.admit(f"hi-{step}", rid=step + 1, n_events=4, priority=5)
+        plan = sched.plan_step((4,))
+        assert plan is not None
+        if any(e.item == "old-small" for e, _ in plan[1]):
+            served_at = step
+            break
+        sched.commit(plan)
+    return served_at
+
+
+def test_age_promotion_prevents_starvation():
+    """Without promotion the old request starves behind the stream; with
+    ``promote_after_steps`` it jumps the order within the bound."""
+    assert _starvation_trace(SchedulerConfig()) is None
+    served_at = _starvation_trace(SchedulerConfig(promote_after_steps=2))
+    assert served_at is not None and served_at <= 3
+
+
+def test_promotion_mixed_arrivals_engine_level(g_params):
+    """Engine-level mixed arrival trace: a 2-event request submitted
+    first must not wait out six 4-event priority-5 arrivals when
+    promotion is on."""
+    eng = _engine(g_params, buckets=(4,),
+                  sched=SchedulerConfig(promote_after_steps=2))
+    small = SimRequest(rid=0, primary_energy=80.0, n_events=2, seed=0,
+                       priority=0)
+    eng.submit(small)
+    for i in range(1, 7):
+        eng.submit(SimRequest(rid=i, primary_energy=80.0, n_events=4,
+                              seed=i, priority=5))
+        eng.run(max_steps=1)
+        if small.done:
+            break
+    assert small.done and small.images.shape[0] == 2
+    assert eng.scheduler.stats["promotions"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# scheduler invariants
+# ---------------------------------------------------------------------------
+
+
+def test_plan_is_pure_commit_applies():
+    sched = Scheduler(SchedulerConfig(), clock=Ticker())
+    sched.admit("a", rid=0, n_events=6, priority=0)
+    plan = sched.plan_step((4,))
+    assert sched.backlog_events() == 6            # planning consumed nothing
+    sched.commit(plan)
+    assert sched.backlog_events() == 2
+    again = sched.plan_step((4,))
+    sched.commit(again)
+    assert sched.backlog_events() == 0
+    assert sched.plan_step((4,)) is None
+
+
+def test_rejection_reason_validated():
+    from repro.serve.scheduler import Rejection
+    with pytest.raises(ValueError, match="reason"):
+        Rejection(0, "bored", "nope")
+
+
+def test_replica_group_raises_on_empty_and_exhausted():
+    with pytest.raises(ValueError):
+        ReplicaGroup(0)
+    plan = FaultPlan(events=(
+        FaultEvent(0, "preempt", node=0, lose_node=True),))
+    group = ReplicaGroup(1, injector=ReplicaFaultInjector(plan),
+                         sleep=lambda s: None)
+    with pytest.raises(NoHealthyReplicas):
+        group.dispatch(lambda rep: "unreachable")
