@@ -1,0 +1,206 @@
+"""Kernel benchmark: Pallas flash-attention vs the pure-JAX reference.
+
+Times forward and forward+backward on representative LM attention shapes
+(self-attention, GQA head grouping, sliding window) for both routes:
+
+- ``pallas``: the flash-attention kernel family (online-softmax forward
+  emitting the LSE residual, flash-2 recompute backward), block sizes
+  from the shared autotune registry.  On the CPU stand-in this runs in
+  INTERPRET mode, which measures the emulation, not the MXU — the
+  numbers seed the perf trajectory and become meaningful on TPU.
+- ``ref``: the O(S*T)-memory reference (`flash_attention/ref.py`).
+
+The ``tile_rows`` section is the autotuner's report card: each case is
+timed on the Pallas route with the HEURISTIC default blocks at f32
+against the AUTOTUNED blocks at ``--precision`` (tuned via the shared
+`kernels/autotune.autotune_signature` driver, persisted under
+results/autotune/).
+
+Writes machine-readable results to results/BENCH_kernel_attention.json.
+
+  PYTHONPATH=src python -m benchmarks.bench_kernel_attention \
+      [--batch 1] [--steps 2] [--precision bf16] [--no-tile-rows]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import autotune as autotune_lib
+from repro.kernels.flash_attention import tune as tune_lib
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.substrate.precision import get_policy
+
+HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(HERE, "results", "BENCH_kernel_attention.json")
+
+# (name, seq_q, seq_kv, heads, kv_heads, d_head, causal, window)
+CASES = [
+    ("self_128", 128, 128, 4, 4, 64, True, 0),
+    ("gqa_128", 128, 128, 8, 2, 32, True, 0),
+    ("window_256", 256, 256, 4, 2, 64, True, 64),
+]
+
+
+def _timed(fn, args, steps, repeats=3):
+    """Min-of-repeats per-step time — the autotuner's clock, so recorded
+    numbers and tuning winners are measured identically."""
+    return autotune_lib.time_min_of_repeats(fn, args, steps, repeats)
+
+
+def _case_args(seq_q, seq_kv, heads, kv_heads, d_head, batch, rng, dtype):
+    q = jnp.asarray(rng.normal(0, 1, (batch, seq_q, heads, d_head)), dtype)
+    k = jnp.asarray(rng.normal(0, 1, (batch, seq_kv, kv_heads, d_head)),
+                    dtype)
+    v = jnp.asarray(rng.normal(0, 1, (batch, seq_kv, kv_heads, d_head)),
+                    dtype)
+    return q, k, v
+
+
+def _time_route(op, causal, window, args, steps):
+    fwd = jax.jit(lambda q_, k_, v_: op(q_, k_, v_, causal, window))
+    fwdbwd = jax.jit(jax.grad(
+        lambda q_, k_, v_: jnp.sum(
+            op(q_, k_, v_, causal, window).astype(jnp.float32) ** 2),
+        argnums=(0, 1, 2)))
+    return (1e3 * _timed(fwd, args, steps), 1e3 * _timed(fwdbwd, args, steps))
+
+
+def bench_case(name, seq_q, seq_kv, heads, kv_heads, d_head, causal, window,
+               batch, steps, rng, dtype):
+    args = _case_args(seq_q, seq_kv, heads, kv_heads, d_head, batch, rng,
+                      dtype)
+    row = {"case": name, "batch": batch, "seq_q": seq_q, "seq_kv": seq_kv,
+           "heads": heads, "kv_heads": kv_heads, "d_head": d_head,
+           "causal": causal, "window": window}
+    ops = {
+        "pallas": flash_attention,
+        "ref": lambda q_, k_, v_, c, w: attention_ref(q_, k_, v_, causal=c,
+                                                      window=w),
+    }
+    for route, op in ops.items():
+        f, fb = _time_route(op, causal, window, args, steps)
+        row[f"{route}_fwd_ms"], row[f"{route}_fwdbwd_ms"] = f, fb
+    row["fwd_speedup"] = row["ref_fwd_ms"] / row["pallas_fwd_ms"]
+    row["fwdbwd_speedup"] = row["ref_fwdbwd_ms"] / row["pallas_fwdbwd_ms"]
+    return row
+
+
+def bench_case_tiles(name, seq_q, seq_kv, heads, kv_heads, d_head, causal,
+                     window, batch, steps, rng, precision, autotune_steps=2):
+    """Autotuned-vs-default-block row: f32 operands + heuristic default
+    blocks against ``--precision`` operands + autotuned blocks."""
+    policy = get_policy(precision)
+    dtype = policy.compute_dtype
+    snapshot = dict(autotune_lib._REGISTRY)
+    row = {"case": name, "seq_q": seq_q, "seq_kv": seq_kv, "heads": heads,
+           "kv_heads": kv_heads, "d_head": d_head, "precision": precision}
+    try:
+        sig32 = tune_lib.signature(seq_q, seq_kv, heads, kv_heads, d_head,
+                                   causal, window, jnp.float32)
+        autotune_lib.register_schedule(sig32,
+                                       autotune_lib.default_schedule(sig32))
+        args32 = _case_args(seq_q, seq_kv, heads, kv_heads, d_head, batch,
+                            rng, jnp.float32)
+        f32_fwd, f32_fwdbwd = _time_route(flash_attention, causal, window,
+                                          args32, steps)
+        # unpin BEFORE autotuning: the driver persists the whole registry,
+        # and the heuristic baseline must not overwrite tuned f32 entries
+        autotune_lib._REGISTRY.pop(sig32, None)
+
+        sig = tune_lib.signature(seq_q, seq_kv, heads, kv_heads, d_head,
+                                 causal, window, dtype)
+        best, measured = autotune_lib.autotune_signature(
+            sig, steps=autotune_steps)
+        row["blocks"] = {"block_q": best.block_q, "block_kv": best.block_kv}
+        args_p = _case_args(seq_q, seq_kv, heads, kv_heads, d_head, batch,
+                            rng, dtype)
+        at_fwd, at_fwdbwd = _time_route(flash_attention, causal, window,
+                                        args_p, steps)
+    finally:
+        autotune_lib._REGISTRY.clear()
+        autotune_lib._REGISTRY.update(snapshot)
+    row.update({
+        "default_f32_fwd_ms": f32_fwd, "default_f32_fwdbwd_ms": f32_fwdbwd,
+        "autotuned_fwd_ms": at_fwd, "autotuned_fwdbwd_ms": at_fwdbwd,
+        "autotune_measurements": measured,
+        "fwd_speedup": f32_fwd / at_fwd,
+        "fwdbwd_speedup": f32_fwdbwd / at_fwdbwd,
+    })
+    return row
+
+
+def run(batch=1, steps=2, seed=0, precision="f32"):
+    dtype = get_policy(precision).compute_dtype
+    rng = np.random.default_rng(seed)
+    return [bench_case(*case, batch=batch, steps=steps, rng=rng, dtype=dtype)
+            for case in CASES]
+
+
+def run_tiles(batch=1, steps=2, seed=0, precision="bf16"):
+    rng = np.random.default_rng(seed)
+    return [bench_case_tiles(*case, batch=batch, steps=steps, rng=rng,
+                             precision=precision)
+            for case in CASES]
+
+
+def write_json(rows, path=OUT_PATH, **meta):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    payload = {"benchmark": "kernel_attention",
+               "backend": jax.default_backend(),
+               "interpret": jax.default_backend() != "tpu", **meta,
+               "rows": rows}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=str)
+    return path
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--steps", type=int, default=2)
+    ap.add_argument("--precision", default="bf16",
+                    help="compute dtype for the route rows and the "
+                         "autotuned side of the tile rows")
+    ap.add_argument("--no-tile-rows", action="store_true",
+                    help="skip the autotuned-vs-default-block comparison")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args(argv)
+    rows = run(args.batch, args.steps, precision=args.precision)
+    print(f"bench_kernel_attention: Pallas flash vs reference "
+          f"(B={args.batch}, precision={args.precision}, "
+          f"backend={jax.default_backend()})")
+    print(f"{'case':>12} {'S':>5} {'H':>3} {'KH':>3} {'pallas_fwd':>11} "
+          f"{'ref_fwd':>9} {'pallas_fb':>10} {'ref_fb':>8} {'fb_speedup':>10}")
+    for r in rows:
+        print(f"{r['case']:>12} {r['seq_q']:>5} {r['heads']:>3} "
+              f"{r['kv_heads']:>3} {r['pallas_fwd_ms']:>9.1f}ms "
+              f"{r['ref_fwd_ms']:>7.1f}ms {r['pallas_fwdbwd_ms']:>8.1f}ms "
+              f"{r['ref_fwdbwd_ms']:>6.1f}ms {r['fwdbwd_speedup']:>10.2f}")
+    meta = {"batch": args.batch, "precision": args.precision}
+    if not args.no_tile_rows:
+        tile_rows = run_tiles(args.batch, args.steps,
+                              precision=args.precision)
+        print(f"\nblock autotuner: {args.precision}+autotuned vs "
+              "f32+default blocks (Pallas route, fwd+bwd)")
+        for r in tile_rows:
+            b = r.get("blocks", {})
+            bl = f"bq={b.get('block_q', '?')},bkv={b.get('block_kv', '?')}"
+            print(f"{r['case']:>12} {bl:>16} "
+                  f"{r['default_f32_fwdbwd_ms']:>9.1f}ms "
+                  f"{r['autotuned_fwdbwd_ms']:>7.1f}ms "
+                  f"{r['fwdbwd_speedup']:>8.2f}")
+        meta["tile_rows"] = tile_rows
+    path = write_json(rows, args.out, **meta)
+    print(f"wrote {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

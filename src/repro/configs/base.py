@@ -81,6 +81,12 @@ class ArchConfig:
     decode_supported: bool = True
     subquadratic: bool = False   # can serve long_500k natively
 
+    # kernel routing: replace the pure-JAX attention / SSD-scan training
+    # paths with the Pallas kernels (tiles/chunks come from the shared
+    # autotune registry; interpret-mode off-TPU, compiled on TPU)
+    use_pallas_attn: bool = False
+    use_pallas_ssm: bool = False
+
     def __post_init__(self):
         if self.d_head == 0:
             object.__setattr__(self, "d_head", self.d_model // self.n_heads)

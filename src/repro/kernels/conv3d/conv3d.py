@@ -37,29 +37,15 @@ MODEL_FLOPS / HLO_FLOPs ratio.
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.autotune import (default_interpret,
+                                    resolve_interpret as _resolve_interpret)
 from repro.kernels.conv3d import tiles as tiles_lib
-
-
-def default_interpret() -> bool:
-    """Interpret (CPU stand-in) unless running on a real TPU backend.
-
-    Override with REPRO_PALLAS_INTERPRET=0/1.
-    """
-    env = os.environ.get("REPRO_PALLAS_INTERPRET", "")
-    if env != "":                        # empty string == unset
-        return env.lower() not in ("0", "false", "no")
-    return jax.default_backend() != "tpu"
-
-
-def _resolve_interpret(interpret):
-    return default_interpret() if interpret is None else interpret
 
 
 # ---------------------------------------------------------------------------

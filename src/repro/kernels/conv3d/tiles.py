@@ -10,16 +10,16 @@ small ones, and for tiny Ci the per-tap (P, Ci) x (Ci, bn) contractions
 are so thin that gathering ALL taps into one wide GEMM
 (``fuse_taps=True``) wins outright.
 
-This module is the one place that decision lives:
+The generic registry/cache/measurement machinery that used to live here
+moved to :mod:`repro.kernels.autotune` so flash-attention and the SSD
+scan tune through the same substrate; this module keeps the conv
+specifics (signature layout, ``ConvTiles``, the candidate sweep, the
+problem builder, the GAN-config signature enumerator) and re-exports the
+shared API under its historical names:
 
-- :func:`get_tiles` — registry lookup by problem signature (now including
-  the operand dtype), falling back to a shape heuristic.
-- :func:`register_tiles` — pin a tile config for a signature.
-- :func:`autotune` — measure a callable over candidate configs and
-  register the argmin (the in-memory hook, unchanged API).
-- :func:`autotune_signature` / :func:`autotune_config` — the REAL
-  measurement driver: build the conv problem a signature describes, time
-  every candidate on the live device, register + persist the winner.
+- :func:`get_tiles` / :func:`register_tiles` — registry lookup / pin.
+- :func:`autotune` / :func:`autotune_signature` / :func:`autotune_config`
+  — the measurement drivers.
 - :func:`load_cache` / :func:`save_cache` — on-disk JSON persistence
   under ``results/autotune/``, keyed by (signature, dtype, device kind).
   ``get_tiles`` warm-loads the cache for the current device on first use,
@@ -32,14 +32,19 @@ registrations take priority over the disk cache.
 from __future__ import annotations
 
 import dataclasses
-import json
-import os
-import time
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
-_HERE = os.path.dirname(os.path.dirname(os.path.dirname(
-    os.path.dirname(os.path.dirname(os.path.abspath(__file__))))))
-DEFAULT_CACHE_DIR = os.path.join(_HERE, "results", "autotune")
+from repro.kernels import autotune as autotune_lib
+from repro.kernels.autotune import (   # noqa: F401  (historical API)
+    DEFAULT_CACHE_DIR, Signature, _device_kind, _round_up, _sig_from_str,
+    _sig_to_str, cache_path, clear_registry, dtype_name as _dtype_name,
+    load_cache, save_cache, time_min_of_repeats,
+)
+
+# the registry and warm-load set are the SAME objects as the shared
+# substrate's — conv, attention, and ssm schedules live in one table
+_REGISTRY = autotune_lib._REGISTRY
+_CACHE_LOADED = autotune_lib._CACHE_LOADED
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,12 +68,6 @@ class ConvTiles:
     fuse_taps: bool = False
 
 
-Signature = Tuple  # (kind, spatial..., Ci, Co, K, stride[, dtype])
-
-_REGISTRY: Dict[Signature, ConvTiles] = {}
-_CACHE_LOADED: set = set()      # device kinds whose disk cache was merged
-
-
 def signature(kind: str, spatial: Sequence[int], ci: int, co: int,
               k: int, stride: int, dtype=None) -> Signature:
     """Hashable problem identity: kernel kind + the shape that drives
@@ -81,18 +80,8 @@ def signature(kind: str, spatial: Sequence[int], ci: int, co: int,
     return base + (_dtype_name(dtype),)
 
 
-def _dtype_name(dtype) -> str:
-    return getattr(dtype, "name", None) or getattr(dtype, "__name__", None) \
-        or str(dtype)
-
-
 def register_tiles(sig: Signature, tiles: ConvTiles) -> None:
-    _REGISTRY[sig] = tiles
-
-
-def clear_registry() -> None:
-    _REGISTRY.clear()
-    _CACHE_LOADED.clear()
+    autotune_lib.register_schedule(sig, tiles)
 
 
 def default_tiles(sig: Signature) -> ConvTiles:
@@ -114,21 +103,7 @@ def get_tiles(sig: Signature) -> ConvTiles:
     entries keep working), then the on-disk autotune cache for the
     current device (warm-loaded once per process), then the heuristic.
     """
-    hit = _REGISTRY.get(sig)
-    if hit is not None:
-        return hit
-    if len(sig) == 7:                    # dtype-qualified: try the base sig
-        hit = _REGISTRY.get(sig[:6])
-        if hit is not None:
-            return hit
-    kind = _device_kind()
-    if kind not in _CACHE_LOADED:
-        load_cache(kind=kind)
-        hit = _REGISTRY.get(sig) or (
-            _REGISTRY.get(sig[:6]) if len(sig) == 7 else None)
-        if hit is not None:
-            return hit
-    return default_tiles(sig)
+    return autotune_lib.get_schedule(sig)
 
 
 def autotune(sig: Signature, measure: Callable[[ConvTiles], float],
@@ -136,19 +111,9 @@ def autotune(sig: Signature, measure: Callable[[ConvTiles], float],
     """Measure ``candidates`` (seconds, lower is better), register the best.
 
     ``measure`` runs the kernel with a given config and returns its cost;
-    the driver below passes timed executions, tests pass analytic
-    stand-ins.
+    the driver passes timed executions, tests pass analytic stand-ins.
     """
-    if candidates is None:
-        candidates = candidate_tiles(sig)
-    best, best_cost = None, float("inf")
-    for cand in candidates:
-        cost = measure(cand)
-        if cost < best_cost:
-            best, best_cost = cand, cost
-    assert best is not None, "autotune needs at least one candidate"
-    register_tiles(sig, best)
-    return best
+    return autotune_lib.autotune(sig, measure, candidates)
 
 
 def candidate_tiles(sig: Signature) -> List[ConvTiles]:
@@ -171,35 +136,8 @@ def candidate_tiles(sig: Signature) -> List[ConvTiles]:
 
 
 # ---------------------------------------------------------------------------
-# measurement driver: time candidates on the live device
+# measurement problem builder (the conv half of the shared driver)
 # ---------------------------------------------------------------------------
-
-
-def time_min_of_repeats(fn, args, steps: int = 3, repeats: int = 3) -> float:
-    """Seconds per execution of ``fn(*args)``: warmup + min over
-    ``repeats`` timed batches of ``steps`` calls.  The min is the
-    least-contended execution — robust to scheduler noise on shared
-    hosts.  Shared by the autotune driver and the kernel benchmarks so
-    winners and recorded numbers come from the same clock."""
-    import jax
-    out = fn(*args)                       # compile + warmup
-    jax.block_until_ready(out)
-    best = float("inf")
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        for _ in range(steps):
-            out = fn(*args)
-        jax.block_until_ready(out)
-        best = min(best, (time.perf_counter() - t0) / steps)
-    return best
-
-
-def _device_kind() -> str:
-    import jax
-    try:
-        return jax.devices()[0].device_kind.replace(" ", "_")
-    except Exception:                     # no backend yet — be permissive
-        return "unknown"
 
 
 def _build_problem(sig: Signature):
@@ -280,20 +218,9 @@ def autotune_signature(sig: Signature, *, steps: int = 3,
     cache already held an entry (the warm-start the CLI asserts on).
     Winners are registered in-memory AND persisted.
     """
-    if use_cache:
-        load_cache(cache_dir=cache_dir)
-        if sig in _REGISTRY:
-            return _REGISTRY[sig], 0
-    run = _build_problem(sig)
-    measured = [0]
-
-    def measure(tiles: ConvTiles) -> float:
-        measured[0] += 1
-        return run(tiles, steps=steps)
-
-    best = autotune(sig, measure)
-    save_cache(cache_dir=cache_dir)
-    return best, measured[0]
+    return autotune_lib.autotune_signature(sig, steps=steps,
+                                           cache_dir=cache_dir,
+                                           use_cache=use_cache)
 
 
 def _bwd_signatures(kind: str, spatial, ci: int, co: int, k: int,
@@ -363,104 +290,12 @@ def autotune_config(cfg, dtype=None, *, steps: int = 3,
     return report
 
 
-# ---------------------------------------------------------------------------
-# on-disk persistence (results/autotune/<device_kind>.json)
-# ---------------------------------------------------------------------------
-
-
-def cache_path(kind: Optional[str] = None,
-               cache_dir: Optional[str] = None) -> str:
-    env_dir = os.environ.get("REPRO_AUTOTUNE_DIR", "")
-    base = cache_dir or env_dir or DEFAULT_CACHE_DIR
-    return os.path.join(base, f"{kind or _device_kind()}.json")
-
-
-def _sig_to_str(sig: Signature) -> str:
-    kind, spatial, ci, co, k, stride = sig[:6]
-    parts = [kind, "x".join(str(s) for s in spatial), str(ci), str(co),
-             str(k), str(stride)]
-    if len(sig) == 7:
-        parts.append(sig[6])
-    return "|".join(parts)
-
-
-def _sig_from_str(s: str) -> Optional[Signature]:
-    parts = s.split("|")
-    if len(parts) not in (6, 7):
-        return None
-    kind, spatial, ci, co, k, stride = parts[:6]
-    try:
-        sig = (kind, tuple(int(d) for d in spatial.split("x")), int(ci),
-               int(co), int(k), int(stride))
-    except ValueError:                    # hand-edited/truncated key
-        return None
-    if len(parts) == 7:
-        sig = sig + (parts[6],)
-    return sig
-
-
-def save_cache(kind: Optional[str] = None,
-               cache_dir: Optional[str] = None) -> str:
-    """Persist the in-memory registry for this device kind (merging over
-    whatever the file already holds, so concurrent tuners compose)."""
-    path = cache_path(kind, cache_dir)
-    entries = {}
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                entries = json.load(f).get("tiles", {})
-        except (json.JSONDecodeError, OSError):
-            entries = {}                  # corrupt cache: overwrite
-    for sig, tiles in _REGISTRY.items():
-        entries[_sig_to_str(sig)] = dataclasses.asdict(tiles)
-    os.makedirs(os.path.dirname(path), exist_ok=True)
-    payload = {"device_kind": kind or _device_kind(),
-               "version": 1, "tiles": entries}
-    tmp = path + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump(payload, f, indent=1, sort_keys=True)
-    os.replace(tmp, path)
-    return path
-
-
-def load_cache(kind: Optional[str] = None,
-               cache_dir: Optional[str] = None) -> int:
-    """Merge the on-disk cache into the registry (in-memory entries win).
-
-    A missing, corrupt, or shape-mismatched file is NOT an error — the
-    kernels must never fail because a cache went stale; they fall back to
-    :func:`default_tiles`.  Returns the number of entries merged.
-    """
-    kind = kind or _device_kind()
-    if cache_dir is None:
-        # only a DEFAULT-location load satisfies get_tiles' warm-load;
-        # an explicit scratch cache_dir must not suppress it
-        _CACHE_LOADED.add(kind)
-    path = cache_path(kind, cache_dir)
-    if not os.path.exists(path):
-        return 0
-    try:
-        with open(path) as f:
-            payload = json.load(f)
-        entries = payload["tiles"]
-        assert isinstance(entries, dict)
-    except (json.JSONDecodeError, OSError, KeyError, AssertionError):
-        return 0                          # corrupt cache -> heuristic
-    n = 0
-    known = {f.name for f in dataclasses.fields(ConvTiles)}
-    for key, val in entries.items():
-        sig = _sig_from_str(key)
-        if sig is None or not isinstance(val, dict):
-            continue
-        try:
-            tiles = ConvTiles(**{k: v for k, v in val.items() if k in known})
-        except TypeError:
-            continue
-        if sig not in _REGISTRY:          # in-memory registrations win
-            _REGISTRY[sig] = tiles
-            n += 1
-    return n
-
-
-def _round_up(x: int, m: int) -> int:
-    return -(-x // m) * m
+autotune_lib.register_kernel(autotune_lib.KernelSpec(
+    family="conv3d",
+    kinds=("conv", "conv_t", "dw", "dw_t"),
+    schedule_cls=ConvTiles,
+    sig_len=6,
+    default=default_tiles,
+    candidates=candidate_tiles,
+    build=_build_problem,
+))

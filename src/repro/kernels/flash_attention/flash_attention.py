@@ -11,7 +11,17 @@ TPU adaptation (vs. the CUDA algorithm):
   skinny matmuls into one MXU-shaped (>=128 rows) matmul per tile;
 - score math is f32 (MXU accumulates bf16 inputs into f32).
 
-Grid: (B, KH, n_q_blocks, n_kv_blocks), kv innermost.
+The backward pass is the flash-2 recompute scheme: the forward also emits
+the per-row log-sum-exp, so each backward tile rebuilds its probabilities
+as ``p = exp(s - lse)`` from the SAME tiled score matmul (no (S, T) score
+matrix ever hits HBM).  Two kernels, because the two accumulation orders
+differ: dq sums over kv blocks (kv innermost, like the forward), dk/dv
+sum over q blocks (q innermost).  ``delta = rowsum(dO * O)`` — the
+softmax-jacobian correction — is a cheap elementwise reduction computed
+outside the kernels in f32.
+
+Grid: (B, KH, n_q_blocks, n_kv_blocks), kv innermost (dq / forward);
+      (B, KH, n_kv_blocks, n_q_blocks), q innermost (dk/dv).
 """
 from __future__ import annotations
 
@@ -22,11 +32,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.autotune import resolve_interpret
+
 NEG_INF = -1e30
+# padded-row LSE: exp(s - LSE_PAD) underflows to exactly 0, so rows past
+# the true sequence end contribute nothing to any backward accumulation
+LSE_PAD = 1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
-                  scale: float, causal: bool, window: int,
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref,
+                  l_ref, *, scale: float, causal: bool, window: int,
                   block_q: int, block_kv: int, seq_k: int):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
@@ -59,15 +74,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
             q2, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale  # (bq*G, bk)
 
-        rows = jax.lax.broadcasted_iota(jnp.int32, (bq * G, block_kv), 0)
-        qpos = q_start + rows // G
-        kpos = k_start + jax.lax.broadcasted_iota(
-            jnp.int32, (bq * G, block_kv), 1)
-        mask = kpos < seq_k                            # guard padded tail
-        if causal:
-            mask &= qpos >= kpos
-        if window:
-            mask &= kpos > qpos - window
+        mask = _tile_mask(q_start, k_start, bq, G, block_kv, seq_k,
+                          causal, window)
         s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_ref[...]                            # (bq*G, 1)
@@ -88,12 +96,33 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         bq, G, D = q_ref[0].shape
         o = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
         o_ref[...] = o.reshape(1, bq, G, D).astype(o_ref.dtype)
+        lse = m_ref[...] + jnp.log(jnp.maximum(l_ref[...], 1e-30))
+        lse_ref[...] = lse.reshape(1, bq, 1, G)
+
+
+def _tile_mask(q_start, k_start, bq, G, block_kv, seq_k, causal, window):
+    """The (bq*G, block_kv) validity mask of one score tile — the padded
+    kv tail plus the causal / sliding-window structure, with the G folded
+    query heads sharing each query position."""
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bq * G, block_kv), 0)
+    qpos = q_start + rows // G
+    kpos = k_start + jax.lax.broadcasted_iota(
+        jnp.int32, (bq * G, block_kv), 1)
+    mask = kpos < seq_k                                # guard padded tail
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= kpos > qpos - window
+    return mask
 
 
 def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
                         block_q: int = 128, block_kv: int = 128,
-                        interpret: bool = True):
-    """q: (B, S, H, D); k/v: (B, T, KH, D). Returns (B, S, H, D)."""
+                        interpret: bool | None = None, return_lse: bool = False):
+    """q: (B, S, H, D); k/v: (B, T, KH, D). Returns (B, S, H, D), and the
+    per-row f32 log-sum-exp (B, S, H) when ``return_lse`` (the backward
+    residual)."""
+    interpret = resolve_interpret(interpret)
     B, S, H, D = q.shape
     T, KH = k.shape[1], k.shape[2]
     assert H % KH == 0, (H, KH)
@@ -114,7 +143,7 @@ def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
         _flash_kernel, scale=1.0 / (D ** 0.5), causal=causal, window=window,
         block_q=block_q, block_kv=block_kv, seq_k=T)
 
-    out = pl.pallas_call(
+    out, lse = pl.pallas_call(
         kernel,
         grid=(B, KH, n_q, n_kv),
         in_specs=[
@@ -122,9 +151,16 @@ def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
             pl.BlockSpec((1, block_kv, 1, D), lambda b, h, qi, ki: (b, ki, h, 0)),
             pl.BlockSpec((1, block_kv, 1, D), lambda b, h, qi, ki: (b, ki, h, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_q, G, D),
-                               lambda b, h, qi, ki: (b, qi, h, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, n_q * block_q, H, D), q.dtype),
+        out_specs=[
+            pl.BlockSpec((1, block_q, G, D),
+                         lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, block_q, 1, G),
+                         lambda b, h, qi, ki: (b, qi, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n_q * block_q, H, D), q.dtype),
+            jax.ShapeDtypeStruct((B, n_q * block_q, KH, G), jnp.float32),
+        ],
         scratch_shapes=[
             pltpu.VMEM((block_q * G, D), jnp.float32),
             pltpu.VMEM((block_q * G, 1), jnp.float32),
@@ -132,4 +168,204 @@ def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
         ],
         interpret=interpret,
     )(q, k, v)
-    return out[:, :S]
+    out = out[:, :S]
+    if not return_lse:
+        return out
+    # (B, Sp, KH, G) -> (B, S, H): head kh*G+g matches q's head layout
+    return out, lse.reshape(B, n_q * block_q, H)[:, :S]
+
+
+# ---------------------------------------------------------------------------
+# backward kernels (flash-2 recompute)
+# ---------------------------------------------------------------------------
+
+
+def _recompute_p(q_ref, k_ref, lse_ref, q_start, k_start, block_kv, seq_k,
+                 scale, causal, window):
+    """Rebuild one tile's probabilities p = exp(s - lse) plus the pieces
+    the grads need (q2, k, mask).  Masked entries are exactly 0 — the
+    where guards AFTER the exp, because masked scores are finite raw
+    dot products, not NEG_INF."""
+    q = q_ref[0]                                       # (bq, G, D)
+    bq, G, D = q.shape
+    q2 = q.reshape(bq * G, D)
+    k = k_ref[0, :, 0, :]                              # (bk, D)
+    s = jax.lax.dot_general(
+        q2, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale    # (bq*G, bk)
+    mask = _tile_mask(q_start, k_start, bq, G, block_kv, seq_k,
+                      causal, window)
+    lse = lse_ref[0, :, 0, :].reshape(bq * G, 1)       # same row folding
+    p = jnp.where(mask, jnp.exp(s - lse), 0.0)
+    return q2, k, p
+
+
+def _flash_bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref,
+                         dq_ref, acc_ref, *, scale: float, causal: bool,
+                         window: int, block_q: int, block_kv: int,
+                         seq_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    n_kv = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_kv
+    run = True
+    if causal:
+        run = k_start <= q_start + block_q - 1
+    if window:
+        run = jnp.logical_and(run, k_start + block_kv > q_start - window + 1)
+
+    @pl.when(run)
+    def _compute():
+        q2, k, p = _recompute_p(q_ref, k_ref, lse_ref, q_start, k_start,
+                                block_kv, seq_k, scale, causal, window)
+        bq, G, D = q_ref[0].shape
+        v = v_ref[0, :, 0, :]
+        do = do_ref[0].reshape(bq * G, D)
+        delta = dl_ref[0, :, 0, :].reshape(bq * G, 1)
+        dp = jax.lax.dot_general(
+            do, v, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)        # (bq*G, bk)
+        ds = p * (dp - delta) * scale
+        acc_ref[...] += jax.lax.dot_general(
+            ds.astype(k.dtype), k, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)        # (bq*G, D)
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        bq, G, D = q_ref[0].shape
+        dq_ref[...] = acc_ref[...].reshape(1, bq, G, D).astype(dq_ref.dtype)
+
+
+def _flash_bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref,
+                          dk_ref, dv_ref, dk_acc, dv_acc, *, scale: float,
+                          causal: bool, window: int, block_q: int,
+                          block_kv: int, seq_k: int):
+    ki = pl.program_id(2)
+    qi = pl.program_id(3)
+    n_q = pl.num_programs(3)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q_start = qi * block_q
+    k_start = ki * block_kv
+    run = True
+    if causal:
+        run = k_start <= q_start + block_q - 1
+    if window:
+        run = jnp.logical_and(run, k_start + block_kv > q_start - window + 1)
+
+    @pl.when(run)
+    def _compute():
+        q2, k, p = _recompute_p(q_ref, k_ref, lse_ref, q_start, k_start,
+                                block_kv, seq_k, scale, causal, window)
+        bq, G, D = q_ref[0].shape
+        v = v_ref[0, :, 0, :]
+        do = do_ref[0].reshape(bq * G, D)
+        delta = dl_ref[0, :, 0, :].reshape(bq * G, 1)
+        # padded q rows carry do = 0 and delta = 0, so both accumulations
+        # receive exactly zero from them — no qpos < seq_q mask needed
+        dv_acc[...] += jax.lax.dot_general(
+            p.astype(do.dtype), do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)        # (bk, D)
+        dp = jax.lax.dot_general(
+            do, v, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        ds = p * (dp - delta) * scale
+        dk_acc[...] += jax.lax.dot_general(
+            ds.astype(q2.dtype), q2, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)        # (bk, D)
+
+    @pl.when(qi == n_q - 1)
+    def _finalize():
+        bk, D = dk_acc.shape
+        dk_ref[...] = dk_acc[...].reshape(1, bk, 1, D).astype(dk_ref.dtype)
+        dv_ref[...] = dv_acc[...].reshape(1, bk, 1, D).astype(dv_ref.dtype)
+
+
+def flash_attention_bwd(q, k, v, o, lse, do, *, causal: bool = True,
+                        window: int = 0, block_q: int = 128,
+                        block_kv: int = 128, interpret: bool | None = None):
+    """Tiled recompute backward.  ``o``/``lse`` are the forward outputs
+    (lse in f32, (B, S, H)); returns (dq, dk, dv) in the operand dtypes."""
+    interpret = resolve_interpret(interpret)
+    B, S, H, D = q.shape
+    T, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    block_q = min(block_q, S)
+    block_kv = min(block_kv, T)
+    n_q = -(-S // block_q)
+    n_kv = -(-T // block_kv)
+    pad_s = n_q * block_q - S
+    pad_t = n_kv * block_kv - T
+
+    # the softmax-jacobian row correction, in f32 regardless of operand
+    # dtype — it divides grads that were accumulated in f32
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32),
+                    axis=-1)                            # (B, S, H)
+    if pad_s:
+        qpad = ((0, 0), (0, pad_s), (0, 0), (0, 0))
+        q = jnp.pad(q, qpad)
+        do = jnp.pad(do, qpad)
+        lse = jnp.pad(lse, ((0, 0), (0, pad_s), (0, 0)),
+                      constant_values=LSE_PAD)
+        delta = jnp.pad(delta, ((0, 0), (0, pad_s), (0, 0)))
+    if pad_t:
+        kpad = ((0, 0), (0, pad_t), (0, 0), (0, 0))
+        k = jnp.pad(k, kpad)
+        v = jnp.pad(v, kpad)
+    Sp = n_q * block_q
+    lse = lse.reshape(B, Sp, KH, G)
+    delta = delta.reshape(B, Sp, KH, G)
+
+    opts = dict(scale=1.0 / (D ** 0.5), causal=causal, window=window,
+                block_q=block_q, block_kv=block_kv, seq_k=T)
+    q_spec = pl.BlockSpec((1, block_q, G, D),
+                          lambda b, h, qi, ki: (b, qi, h, 0))
+    row_spec = pl.BlockSpec((1, block_q, 1, G),
+                            lambda b, h, qi, ki: (b, qi, h, 0))
+    kv_spec = pl.BlockSpec((1, block_kv, 1, D),
+                           lambda b, h, qi, ki: (b, ki, h, 0))
+
+    dq = pl.pallas_call(
+        functools.partial(_flash_bwd_dq_kernel, **opts),
+        grid=(B, KH, n_q, n_kv),
+        in_specs=[q_spec, kv_spec, kv_spec, q_spec, row_spec, row_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Sp, H, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q * G, D), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    # dk/dv accumulate over q blocks — q is the innermost (sequential)
+    # grid dimension here, so the index maps swap their last two args
+    q_spec_t = pl.BlockSpec((1, block_q, G, D),
+                            lambda b, h, ki, qi: (b, qi, h, 0))
+    row_spec_t = pl.BlockSpec((1, block_q, 1, G),
+                              lambda b, h, ki, qi: (b, qi, h, 0))
+    kv_spec_t = pl.BlockSpec((1, block_kv, 1, D),
+                             lambda b, h, ki, qi: (b, ki, h, 0))
+    dk, dv = pl.pallas_call(
+        functools.partial(_flash_bwd_dkv_kernel, **opts),
+        grid=(B, KH, n_kv, n_q),
+        in_specs=[q_spec_t, kv_spec_t, kv_spec_t, q_spec_t, row_spec_t,
+                  row_spec_t],
+        out_specs=[kv_spec_t, kv_spec_t],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n_kv * block_kv, KH, D), k.dtype),
+            jax.ShapeDtypeStruct((B, n_kv * block_kv, KH, D), v.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_kv, D), jnp.float32),
+                        pltpu.VMEM((block_kv, D), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    return dq[:, :S], dk[:, :T], dv[:, :T]

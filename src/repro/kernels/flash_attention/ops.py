@@ -1,39 +1,61 @@
 """jit'd public wrapper for the flash-attention kernel.
 
-Forward runs the Pallas kernel; backward differentiates the ref oracle
-(numerically identical math), so ``flash_attention`` is safe to use inside
-training code while the fused backward kernel is future work.
+Forward AND backward run the Pallas kernels: the forward emits the
+per-row log-sum-exp residual, the backward is the flash-2 tiled
+recompute (dq over kv blocks, dk/dv over q blocks) — no ref-oracle
+fallback, no (S, T) score matrix in HBM in either direction.
+
+``block_q``/``block_kv`` come from the shared autotune registry
+(:mod:`repro.kernels.autotune`) by problem signature, so an offline
+``tools/autotune_kernels.py`` run retiles both directions here without
+touching call sites.  ``interpret=None`` freezes the device-kind default
+at trace time — compiled on TPU, interpreter everywhere else.
 """
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
 
-from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
-from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels import autotune as autotune_lib
+from repro.kernels.flash_attention import tune as tune_lib
+from repro.kernels.flash_attention.flash_attention import (
+    flash_attention_bwd, flash_attention_fwd)
+
+
+def _schedule(q, k, causal, window) -> tune_lib.AttnBlocks:
+    sig = tune_lib.signature(q.shape[1], k.shape[1], q.shape[2], k.shape[2],
+                             q.shape[3], causal, window, q.dtype)
+    return autotune_lib.get_schedule(sig)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
 def flash_attention(q, k, v, causal: bool = True, window: int = 0,
-                    interpret: bool = True):
-    return flash_attention_fwd(q, k, v, causal=causal, window=window,
-                               interpret=interpret)
+                    interpret: bool | None = None):
+    blocks = _schedule(q, k, causal, window)
+    return flash_attention_fwd(
+        q, k, v, causal=causal, window=window, block_q=blocks.block_q,
+        block_kv=blocks.block_kv,
+        interpret=autotune_lib.resolve_interpret(interpret))
 
 
 def _fwd(q, k, v, causal, window, interpret):
-    out = flash_attention_fwd(q, k, v, causal=causal, window=window,
-                              interpret=interpret)
-    return out, (q, k, v)
+    blocks = _schedule(q, k, causal, window)
+    out, lse = flash_attention_fwd(
+        q, k, v, causal=causal, window=window, block_q=blocks.block_q,
+        block_kv=blocks.block_kv,
+        interpret=autotune_lib.resolve_interpret(interpret),
+        return_lse=True)
+    return out, (q, k, v, out, lse)
 
 
 def _bwd(causal, window, interpret, res, g):
-    q, k, v = res
-    _, vjp = jax.vjp(
-        lambda q_, k_, v_: attention_ref(q_, k_, v_, causal=causal,
-                                         window=window), q, k, v)
-    return vjp(g)
+    q, k, v, out, lse = res
+    blocks = _schedule(q, k, causal, window)
+    return flash_attention_bwd(
+        q, k, v, out, lse, g, causal=causal, window=window,
+        block_q=blocks.block_q, block_kv=blocks.block_kv,
+        interpret=autotune_lib.resolve_interpret(interpret))
 
 
 flash_attention.defvjp(_fwd, _bwd)

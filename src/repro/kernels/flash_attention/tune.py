@@ -1,0 +1,123 @@
+"""Autotune family registration for the flash-attention Pallas kernels.
+
+Plugs the attention kernels into :mod:`repro.kernels.autotune`: the
+signature is the shape that drives tiling — (seq_q, seq_kv, heads,
+kv_heads, d_head, causal, window) plus the optional dtype qualifier —
+and the schedule is an :class:`AttnBlocks` (block_q, block_kv) pair.
+The measurement builder times the full fwd+bwd through the Pallas
+kernels, because the winning tile must serve the training step, not
+just inference.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.kernels import autotune as autotune_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnBlocks:
+    """Schedule for the flash kernels: the q-row and kv-column tile
+    sizes of the online-softmax sweep (clamped to the sequence lengths
+    at trace time)."""
+    block_q: int = 128
+    block_kv: int = 128
+
+
+def signature(seq_q: int, seq_kv: int, heads: int, kv_heads: int,
+              d_head: int, causal, window: int, dtype=None):
+    """Hashable problem identity for one attention shape.  ``causal``
+    is stored as an int so the cache key round-trips through the generic
+    ``kind|field|...`` string format."""
+    base = ("attn", int(seq_q), int(seq_kv), int(heads), int(kv_heads),
+            int(d_head), int(bool(causal)), int(window))
+    if dtype is None:
+        return base
+    return base + (autotune_lib.dtype_name(dtype),)
+
+
+_SIG_LEN = 8
+
+
+def default_blocks(sig) -> AttnBlocks:
+    """MXU-native 128x128; the wrappers clamp to the actual sequence
+    lengths, so short sequences never pay padded tiles."""
+    return AttnBlocks()
+
+
+def candidate_blocks(sig) -> List[AttnBlocks]:
+    """The sweep space: the block_q x block_kv grid, deduplicated after
+    clamping to (seq_q, seq_kv) so short sequences don't measure
+    aliases of the same effective schedule."""
+    _, seq_q, seq_kv = sig[:3]
+    cands, seen = [], set()
+    for bq in (64, 128, 256, 512):
+        for bkv in (64, 128, 256, 512):
+            eff = (min(bq, seq_q), min(bkv, seq_kv))
+            if eff in seen:
+                continue
+            seen.add(eff)
+            cands.append(AttnBlocks(block_q=bq, block_kv=bkv))
+    return cands
+
+
+def _build_problem(sig):
+    """Representative arrays + runner: one jitted fwd+bwd through the
+    Pallas kernels per candidate (blocks are trace-time static)."""
+    import jax
+    import jax.numpy as jnp
+
+    import importlib
+    fa = importlib.import_module(
+        "repro.kernels.flash_attention.flash_attention")
+
+    _, S, T, H, KH, D, causal, window = sig[:_SIG_LEN]
+    dtype = jnp.dtype(sig[_SIG_LEN]) if len(sig) > _SIG_LEN else jnp.float32
+    kq, kk, kv, kg = jax.random.split(jax.random.key(0), 4)
+    q = jax.random.normal(kq, (1, S, H, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(kk, (1, T, KH, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(kv, (1, T, KH, D), jnp.float32).astype(dtype)
+    do = jax.random.normal(kg, (1, S, H, D), jnp.float32).astype(dtype)
+    interpret = autotune_lib.default_interpret()
+
+    def make(blocks: AttnBlocks):
+        def fwd_bwd(q_, k_, v_, do_):
+            out, lse = fa.flash_attention_fwd(
+                q_, k_, v_, causal=bool(causal), window=window,
+                block_q=blocks.block_q, block_kv=blocks.block_kv,
+                interpret=interpret, return_lse=True)
+            return fa.flash_attention_bwd(
+                q_, k_, v_, out, lse, do_, causal=bool(causal),
+                window=window, block_q=blocks.block_q,
+                block_kv=blocks.block_kv, interpret=interpret)
+        return jax.jit(fwd_bwd)
+
+    args = (q, k, v, do)
+
+    def run(blocks: AttnBlocks, steps: int = 3, repeats: int = 3) -> float:
+        return autotune_lib.time_min_of_repeats(make(blocks), args, steps,
+                                                repeats)
+
+    return run
+
+
+def model_signatures(cfg, seq_len: int, dtype=None,
+                     window: Optional[int] = None) -> list:
+    """The attention signatures one LM config hits at a given training
+    sequence length (self-attention, causal; the config's sliding
+    window unless overridden)."""
+    win = cfg.sliding_window if window is None else window
+    return [signature(seq_len, seq_len, cfg.n_heads, cfg.n_kv_heads,
+                      cfg.d_head, True, win, dtype)]
+
+
+autotune_lib.register_kernel(autotune_lib.KernelSpec(
+    family="flash_attention",
+    kinds=("attn",),
+    schedule_cls=AttnBlocks,
+    sig_len=_SIG_LEN,
+    default=default_blocks,
+    candidates=candidate_blocks,
+    build=_build_problem,
+))

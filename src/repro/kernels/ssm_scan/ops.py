@@ -1,31 +1,59 @@
-"""jit'd public wrapper for the SSD scan kernel (ref-backed backward)."""
+"""jit'd public wrapper for the SSD scan kernel.
+
+Forward AND backward run the Pallas kernels: the forward saves the
+per-chunk entry states as the recompute anchor, the backward sweeps the
+chunk grid in reverse with a VMEM gradient-state carry — no ref-oracle
+``jax.vjp`` detour, no materialised (S, S) attention-like matrix.
+
+``chunk`` comes from the shared autotune registry
+(:mod:`repro.kernels.autotune`) by problem signature when left ``None``,
+so an offline ``tools/autotune_kernels.py`` run re-chunks both
+directions here without touching call sites.  ``interpret=None``
+freezes the device-kind default at trace time — compiled on TPU,
+interpreter everywhere else.
+"""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 
-from repro.kernels.ssm_scan.ref import ssm_scan_ref
-from repro.kernels.ssm_scan.ssm_scan import ssm_scan as _ssm_scan_fwd
+from repro.kernels import autotune as autotune_lib
+from repro.kernels.ssm_scan import tune as tune_lib
+from repro.kernels.ssm_scan.ssm_scan import (ssm_scan as _ssm_scan_fwd,
+                                             ssm_scan_bwd as _ssm_scan_bwd)
+
+
+def _chunk_for(x, B, chunk: Optional[int]) -> int:
+    if chunk is not None:
+        return chunk
+    sig = tune_lib.signature(x.shape[1], x.shape[2], x.shape[3], B.shape[-1],
+                             x.dtype)
+    return autotune_lib.get_schedule(sig).chunk
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
-def ssm_scan(x, B, C, dt, A, chunk: int = 128, interpret: bool = True):
-    y, _ = _ssm_scan_fwd(x, B, C, dt, A, chunk=chunk, interpret=interpret)
+def ssm_scan(x, B, C, dt, A, chunk: Optional[int] = None,
+             interpret: Optional[bool] = None):
+    y, _ = _ssm_scan_fwd(x, B, C, dt, A, chunk=_chunk_for(x, B, chunk),
+                         interpret=autotune_lib.resolve_interpret(interpret))
     return y
 
 
 def _fwd(x, B, C, dt, A, chunk, interpret):
-    y, _ = _ssm_scan_fwd(x, B, C, dt, A, chunk=chunk, interpret=interpret)
-    return y, (x, B, C, dt, A)
+    y, _, si = _ssm_scan_fwd(
+        x, B, C, dt, A, chunk=_chunk_for(x, B, chunk),
+        interpret=autotune_lib.resolve_interpret(interpret),
+        return_chunk_states=True)
+    return y, (x, B, C, dt, A, si)
 
 
 def _bwd(chunk, interpret, res, g):
-    x, B, C, dt, A = res
-    _, vjp = jax.vjp(
-        lambda x_, B_, C_, dt_, A_: ssm_scan_ref(x_, B_, C_, dt_, A_)[0],
-        x, B, C, dt, A)
-    return vjp(g)
+    x, B, C, dt, A, si = res
+    return _ssm_scan_bwd(
+        x, B, C, dt, A, si, g, chunk=_chunk_for(x, B, chunk),
+        interpret=autotune_lib.resolve_interpret(interpret))
 
 
 ssm_scan.defvjp(_fwd, _bwd)

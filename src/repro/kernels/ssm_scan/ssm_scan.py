@@ -14,7 +14,18 @@ TPU adaptation of the Mamba2 CUDA kernel's split into "intra-chunk" and
 - decay factors are computed from the in-chunk cumsum of log-decay; all
   state math is f32.
 
-Grid: (B, H, n_chunks) — chunks innermost (sequential carry).
+Sequences that don't divide the chunk length are zero-padded: a padded
+step has dt = 0 (decay exp(0) = 1, zero state injection) and x = B = C
+= 0, so the carried state and every valid output row are untouched.
+
+The backward pass is a REVERSE chunk scan through the same dense-matmul
+structure: the forward also records each chunk's ENTRY state, and the
+backward grid walks chunks last-to-first carrying dL/d(chunk-end state)
+in VMEM scratch, emitting dx/dB/dC/ddt (and the log-decay cotangent that
+reduces to dA) per chunk.
+
+Grid: (B, H, n_chunks) — chunks innermost (sequential carry), reversed
+via the block index maps for the backward kernel.
 """
 from __future__ import annotations
 
@@ -25,9 +36,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.autotune import resolve_interpret
+
 
 def _ssd_kernel(x_ref, b_ref, c_ref, dt_ref, a_ref, s0_ref,
-                y_ref, sf_ref, state_ref, *, chunk: int):
+                y_ref, sf_ref, si_ref, state_ref, *, chunk: int):
     ci = pl.program_id(2)
 
     @pl.when(ci == 0)
@@ -44,6 +57,7 @@ def _ssd_kernel(x_ref, b_ref, c_ref, dt_ref, a_ref, s0_ref,
     F = jnp.cumsum(la)                                # inclusive cumsum
     Ftot = F[-1]
     state = state_ref[...]                            # (P, N)
+    si_ref[0, 0, 0] = state                           # backward residual
 
     # ---- inter-chunk: y_t += exp(F_t) * C_t . state
     y_inter = jax.lax.dot_general(
@@ -74,25 +88,41 @@ def _ssd_kernel(x_ref, b_ref, c_ref, dt_ref, a_ref, s0_ref,
         sf_ref[0, 0] = state_ref[...]
 
 
-def ssm_scan(x, B, C, dt, A, init_state=None, *, chunk: int = 128,
-             interpret: bool = True):
-    """Chunked SSD scan.  x: (Bt,S,H,P); B/C: (Bt,S,N); dt: (Bt,S,H);
-    A: (H,).  Returns (y (Bt,S,H,P) f32, final_state (Bt,H,P,N) f32)."""
+def _chunk_layout(x, B, C, dt, chunk):
+    """Clamp + zero-pad to a whole number of chunks and reshape into the
+    kernel's (B, H, nC, L, ...) block layout."""
     Bt, S, H, P = x.shape
     N = B.shape[-1]
     L = min(chunk, S)
-    assert S % L == 0, (S, L)
-    nC = S // L
-
+    nC = -(-S // L)
+    pad = nC * L - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
     xc = x.reshape(Bt, nC, L, H, P).transpose(0, 3, 1, 2, 4)   # (B,H,nC,L,P)
     dtc = dt.reshape(Bt, nC, L, H).transpose(0, 3, 1, 2)[..., None]
     bc = B.reshape(Bt, nC, L, N)
     cc = C.reshape(Bt, nC, L, N)
+    return xc, bc, cc, dtc, L, nC
+
+
+def ssm_scan(x, B, C, dt, A, init_state=None, *, chunk: int = 128,
+             interpret: bool | None = None, return_chunk_states: bool = False):
+    """Chunked SSD scan.  x: (Bt,S,H,P); B/C: (Bt,S,N); dt: (Bt,S,H);
+    A: (H,).  Returns (y (Bt,S,H,P) f32, final_state (Bt,H,P,N) f32),
+    plus the per-chunk ENTRY states (Bt,H,nC,P,N) — the backward
+    residual — when ``return_chunk_states``."""
+    interpret = resolve_interpret(interpret)
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    xc, bc, cc, dtc, L, nC = _chunk_layout(x, B, C, dt, chunk)
     a2 = jnp.broadcast_to(A.astype(jnp.float32)[None], (Bt, H))
     s0 = (init_state.astype(jnp.float32) if init_state is not None
           else jnp.zeros((Bt, H, P, N), jnp.float32))
 
-    y, sf = pl.pallas_call(
+    y, sf, si = pl.pallas_call(
         functools.partial(_ssd_kernel, chunk=L),
         grid=(Bt, H, nC),
         in_specs=[
@@ -106,13 +136,175 @@ def ssm_scan(x, B, C, dt, A, init_state=None, *, chunk: int = 128,
         out_specs=[
             pl.BlockSpec((1, 1, 1, L, P), lambda b, h, c: (b, h, c, 0, 0)),
             pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, P, N), lambda b, h, c: (b, h, c, 0, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((Bt, H, nC, L, P), jnp.float32),
             jax.ShapeDtypeStruct((Bt, H, P, N), jnp.float32),
+            jax.ShapeDtypeStruct((Bt, H, nC, P, N), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
         interpret=interpret,
     )(xc, bc, cc, dtc, a2, s0)
-    y = y.transpose(0, 2, 3, 1, 4).reshape(Bt, S, H, P)
+    y = y.transpose(0, 2, 3, 1, 4).reshape(Bt, nC * L, H, P)[:, :S]
+    if return_chunk_states:
+        return y, sf, si
     return y, sf
+
+
+# ---------------------------------------------------------------------------
+# backward kernel: reverse chunk scan carrying dL/d(state)
+# ---------------------------------------------------------------------------
+
+
+def _ssd_bwd_kernel(x_ref, b_ref, c_ref, dt_ref, a_ref, si_ref, dy_ref,
+                    dx_ref, db_ref, dc_ref, ddt_ref, dla_ref, g_ref, *,
+                    chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        # last chunk first: nothing downstream consumes its end state
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)            # (L, P)
+    B = b_ref[0, 0].astype(jnp.float32)               # (L, N)
+    C = c_ref[0, 0].astype(jnp.float32)               # (L, N)
+    dt = dt_ref[0, 0, 0, :, 0].astype(jnp.float32)    # (L,)
+    A = a_ref[0, 0]
+    s0 = si_ref[0, 0, 0]                              # chunk ENTRY state
+    dy = dy_ref[0, 0, 0]                              # (L, P) f32
+    G = g_ref[...]                                    # dL/d(chunk-end state)
+
+    la = dt * A
+    F = jnp.cumsum(la)
+    Ftot = F[-1]
+    eF = jnp.exp(F)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+
+    # ---- recompute the forward chunk pieces
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (L, L)
+    edec = jnp.where(rows >= cols, jnp.exp(F[:, None] - F[None, :]), 0.0)
+    Mnodt = cb * edec                                 # M without the dt col
+    y_inter = jax.lax.dot_general(
+        C, s0, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * eF[:, None]          # (L, P)
+    w_exp = jnp.exp(Ftot - F)                         # (L,)
+    w = w_exp * dt
+    dstate = jax.lax.dot_general(
+        x * w[:, None], B, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    s1 = s0 * jnp.exp(Ftot) + dstate                  # chunk-end state
+
+    # ---- shared intermediates
+    dyx = jax.lax.dot_general(dy, x, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (L, L)
+    DM = dyx * Mnodt                                  # d(dec) seed, masked
+    T1 = dyx * edec                                   # d(cb) seed / dt
+    BG = jax.lax.dot_general(B, G, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (L, P)
+    xG = jax.lax.dot_general(x, G, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (L, N)
+    xBG = jnp.sum(x * BG, axis=1)                     # (L,)
+
+    # ---- operand grads
+    M = Mnodt * dt[None, :]
+    dx = jax.lax.dot_general(M, dy, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32) \
+        + w[:, None] * BG                                          # (L, P)
+    dB = dt[:, None] * jax.lax.dot_general(
+        T1, C, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) + w[:, None] * xG      # (L, N)
+    dC = jax.lax.dot_general(
+        T1 * dt[None, :], B, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) \
+        + eF[:, None] * jax.lax.dot_general(
+            dy, s0, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)                    # (L, N)
+
+    # ---- log-decay cotangent: every F_t dependence, incl. the chunk-end
+    # state's Ftot (a <G, s1> bump on the last row), then the reverse
+    # cumsum dla_t = sum_{u >= t} dF_u  (written cumsum-only: TPU-safe)
+    DMdt = DM * dt[None, :]
+    dF = (jnp.sum(dy * y_inter, axis=1) + jnp.sum(DMdt, axis=1)
+          - jnp.sum(DMdt, axis=0) - w * xBG)                       # (L,)
+    gs1 = jnp.sum(G * s1)
+    ids = jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0)[:, 0]
+    dF = dF + jnp.where(ids == chunk - 1, gs1, 0.0)
+    dla = jnp.sum(dF) - jnp.cumsum(dF) + dF
+    ddt = A * dla + jnp.sum(DM, axis=0) + w_exp * xBG
+
+    # ---- carry to the PREVIOUS chunk: dL/d(its end state) = dL/d(s0)
+    g_ref[...] = G * jnp.exp(Ftot) + jax.lax.dot_general(
+        dy * eF[:, None], C, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    dx_ref[0, 0, 0] = dx
+    db_ref[0, 0, 0] = dB
+    dc_ref[0, 0, 0] = dC
+    ddt_ref[0, 0, 0] = ddt[:, None]
+    dla_ref[0, 0, 0] = dla[:, None]
+
+
+def ssm_scan_bwd(x, B, C, dt, A, chunk_states, dy, *, chunk: int = 128,
+                 interpret: bool | None = None):
+    """Reverse chunk scan.  ``chunk_states`` is the forward's per-chunk
+    entry-state residual; ``dy`` the y cotangent.  Returns
+    (dx, dB, dC, ddt, dA) in the operand dtypes (dB/dC summed over
+    heads, matching the broadcast forward)."""
+    interpret = resolve_interpret(interpret)
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    xc, bc, cc, dtc, L, nC = _chunk_layout(x, B, C, dt, chunk)
+    dyc = _chunk_layout(dy.astype(jnp.float32), B, C, dt, chunk)[0]
+    a2 = jnp.broadcast_to(A.astype(jnp.float32)[None], (Bt, H))
+
+    # chunks walk last-to-first: grid step c reads/writes block nC-1-c
+    def rev5(b, h, c):
+        return (b, h, nC - 1 - c, 0, 0)
+
+    def rev4(b, h, c):
+        return (b, nC - 1 - c, 0, 0)
+
+    dxc, dbc, dcc, ddtc, dlac = pl.pallas_call(
+        functools.partial(_ssd_bwd_kernel, chunk=L),
+        grid=(Bt, H, nC),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, L, P), rev5),
+            pl.BlockSpec((1, 1, L, N), rev4),
+            pl.BlockSpec((1, 1, L, N), rev4),
+            pl.BlockSpec((1, 1, 1, L, 1), rev5),
+            pl.BlockSpec((1, 1), lambda b, h, c: (b, h)),
+            pl.BlockSpec((1, 1, 1, P, N), rev5),
+            pl.BlockSpec((1, 1, 1, L, P), rev5),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, L, P), rev5),
+            pl.BlockSpec((1, 1, 1, L, N), rev5),
+            pl.BlockSpec((1, 1, 1, L, N), rev5),
+            pl.BlockSpec((1, 1, 1, L, 1), rev5),
+            pl.BlockSpec((1, 1, 1, L, 1), rev5),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bt, H, nC, L, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bt, H, nC, L, N), jnp.float32),
+            jax.ShapeDtypeStruct((Bt, H, nC, L, N), jnp.float32),
+            jax.ShapeDtypeStruct((Bt, H, nC, L, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Bt, H, nC, L, 1), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xc, bc, cc, dtc, a2, chunk_states, dyc)
+
+    Sp = nC * L
+    dx = dxc.transpose(0, 2, 3, 1, 4).reshape(Bt, Sp, H, P)[:, :S]
+    # B and C are broadcast across heads in the forward -> sum head grads
+    dB = jnp.sum(dbc, axis=1).reshape(Bt, Sp, N)[:, :S]
+    dC = jnp.sum(dcc, axis=1).reshape(Bt, Sp, N)[:, :S]
+    ddt = ddtc[..., 0].transpose(0, 2, 3, 1).reshape(Bt, Sp, H)[:, :S]
+    dla = dlac[..., 0].transpose(0, 2, 3, 1).reshape(Bt, Sp, H)[:, :S]
+    dA = jnp.einsum("bsh,bsh->h", dt.astype(jnp.float32), dla)
+    return (dx.astype(x.dtype), dB.astype(B.dtype), dC.astype(C.dtype),
+            ddt.astype(dt.dtype), dA.astype(A.dtype))

@@ -1,0 +1,119 @@
+"""Autotune family registration for the SSD scan Pallas kernels.
+
+Plugs the chunked Mamba2/SSD scan into :mod:`repro.kernels.autotune`.
+The signature is (seq, heads, head_dim, state_dim) plus the optional
+dtype qualifier, and the schedule is a :class:`ScanChunks` — the chunk
+length of the intra/inter-chunk decomposition.  Chunk length trades the
+O(L^2) intra-chunk matmul against the number of sequential carry steps,
+so the winner is shape- and device-dependent; the measurement builder
+times the full fwd+bwd because the backward sweeps the same chunk grid
+in reverse.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from repro.kernels import autotune as autotune_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanChunks:
+    """Schedule for the SSD scan: the chunk (intra-chunk block) length.
+    Clamped to the sequence length at trace time."""
+    chunk: int = 128
+
+
+def signature(seq: int, heads: int, head_dim: int, state_dim: int,
+              dtype=None):
+    """Hashable problem identity for one scan shape."""
+    base = ("ssm", int(seq), int(heads), int(head_dim), int(state_dim))
+    if dtype is None:
+        return base
+    return base + (autotune_lib.dtype_name(dtype),)
+
+
+_SIG_LEN = 5
+
+
+def default_chunks(sig) -> ScanChunks:
+    """128 balances the L^2 intra-chunk work against carry steps on
+    every shape the models hit; the wrapper clamps to the sequence."""
+    return ScanChunks()
+
+
+def candidate_chunks(sig) -> List[ScanChunks]:
+    """The sweep space: power-of-two chunk lengths, deduplicated after
+    clamping to the sequence length."""
+    seq = sig[1]
+    cands, seen = [], set()
+    for chunk in (32, 64, 128, 256):
+        eff = min(chunk, seq)
+        if eff in seen:
+            continue
+        seen.add(eff)
+        cands.append(ScanChunks(chunk=chunk))
+    return cands
+
+
+def _build_problem(sig):
+    """Representative arrays + runner: one jitted fwd+bwd through the
+    Pallas kernels per candidate (chunk is trace-time static)."""
+    import jax
+    import jax.numpy as jnp
+
+    import importlib
+    scan_mod = importlib.import_module("repro.kernels.ssm_scan.ssm_scan")
+
+    _, S, H, P, N = sig[:_SIG_LEN]
+    dtype = jnp.dtype(sig[_SIG_LEN]) if len(sig) > _SIG_LEN else jnp.float32
+    keys = jax.random.split(jax.random.key(0), 5)
+    x = jax.random.normal(keys[0], (1, S, H, P), jnp.float32).astype(dtype)
+    Bm = jax.random.normal(keys[1], (1, S, N), jnp.float32).astype(dtype)
+    Cm = jax.random.normal(keys[2], (1, S, N), jnp.float32).astype(dtype)
+    dt = jax.nn.softplus(
+        jax.random.normal(keys[3], (1, S, H), jnp.float32)).astype(dtype)
+    A = -jnp.exp(jax.random.normal(keys[4], (H,), jnp.float32))
+    dy = jax.random.normal(keys[0], (1, S, H, P), jnp.float32)
+    interpret = autotune_lib.default_interpret()
+
+    def make(chunks: ScanChunks):
+        def fwd_bwd(x_, b_, c_, dt_, a_, dy_):
+            y, _, si = scan_mod.ssm_scan(
+                x_, b_, c_, dt_, a_, chunk=chunks.chunk,
+                interpret=interpret, return_chunk_states=True)
+            grads = scan_mod.ssm_scan_bwd(
+                x_, b_, c_, dt_, a_, si, dy_, chunk=chunks.chunk,
+                interpret=interpret)
+            return y, grads
+        return jax.jit(fwd_bwd)
+
+    args = (x, Bm, Cm, dt, A, dy)
+
+    def run(chunks: ScanChunks, steps: int = 3, repeats: int = 3) -> float:
+        return autotune_lib.time_min_of_repeats(make(chunks), args, steps,
+                                                repeats)
+
+    return run
+
+
+def model_signatures(cfg, seq_len: int, dtype=None) -> list:
+    """The scan signatures one LM config hits at a given training
+    sequence length (empty for configs without an SSM block)."""
+    ssm = getattr(cfg, "ssm", None)
+    if ssm is None:
+        return []
+    d_in = ssm.expand * cfg.d_model
+    heads = d_in // ssm.head_dim
+    return [signature(seq_len, heads, ssm.head_dim, ssm.state_dim, dtype)]
+
+
+autotune_lib.register_kernel(autotune_lib.KernelSpec(
+    family="ssm_scan",
+    kinds=("ssm",),
+    schedule_cls=ScanChunks,
+    sig_len=_SIG_LEN,
+    default=default_chunks,
+    candidates=candidate_chunks,
+    build=_build_problem,
+))

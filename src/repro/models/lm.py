@@ -54,10 +54,9 @@ def block_axes(cfg):
     return p
 
 
-def _attend(q, k, v, *, causal, window, seq_len):
-    if seq_len <= 1024:
-        return attn_lib.dot_attention(q, k, v, causal=causal, window=window)
-    return attn_lib.blockwise_attention(q, k, v, causal=causal, window=window)
+def _attend(q, k, v, *, causal, window, seq_len, use_pallas=False):
+    return attn_lib.attend(q, k, v, causal=causal, window=window,
+                           use_pallas=use_pallas, seq_len=seq_len)
 
 
 def apply_block(p, x, cos, sin, cfg, *, window=0, mesh=None):
@@ -83,7 +82,8 @@ def apply_block(p, x, cos, sin, cfg, *, window=0, mesh=None):
         q = sharding.constrain_act(q, mesh, ("batch", None, "heads", None))
         k = sharding.constrain_act(k, mesh, ("batch", None, "kv_heads", None))
         v = sharding.constrain_act(v, mesh, ("batch", None, "kv_heads", None))
-    o = _attend(q, k, v, causal=True, window=window, seq_len=S)
+    o = _attend(q, k, v, causal=True, window=window, seq_len=S,
+                use_pallas=cfg.use_pallas_attn)
     if h5:
         o = sharding.constrain_act(o, mesh, ("batch", None, "heads", None))
     o = layers.apply_dense(p["attn"]["wo"], o.reshape(B, S, cfg.q_dim))
@@ -265,7 +265,8 @@ def prefill(params, tokens, cfg, *, policy, positions=None, embeds=None,
         q, k, v = attn_lib.project_qkv(block_p["attn"], hn, cfg)
         q = attn_lib.apply_rope(q, cos, sin) if cos is not None else q
         k = attn_lib.apply_rope(k, cos, sin) if cos is not None else k
-        o = _attend(q, k, v, causal=True, window=window, seq_len=S)
+        o = _attend(q, k, v, causal=True, window=window, seq_len=S,
+                    use_pallas=cfg.use_pallas_attn)
         o = layers.apply_dense(block_p["attn"]["wo"], o.reshape(B, S, cfg.q_dim))
         h = h + o
         hn = layers.apply_norm(block_p["ln2"], h, cfg.norm_type)

@@ -77,10 +77,8 @@ def _apply_shared(sp, x, x0, cfg, cos, sin, cache=None, pos=None):
     if cos is not None:
         q, k = attn_lib.apply_rope(q, cos, sin), attn_lib.apply_rope(k, cos, sin)
     if cache is None:
-        if S <= 1024:
-            o = attn_lib.dot_attention(q, k, v, causal=True)
-        else:
-            o = attn_lib.blockwise_attention(q, k, v, causal=True)
+        o = attn_lib.attend(q, k, v, causal=True, seq_len=S,
+                            use_pallas=cfg.use_pallas_attn)
         new_kv = (k, v)
     else:
         kc, vc, kv_len = cache
@@ -116,7 +114,8 @@ def forward(params, tokens, cfg, *, policy, mesh=None, remat=True, **_):
         h, idx = carry
         block = xs
         hn = layers.apply_norm(block["ln"], h, "rmsnorm")
-        h = h + ssm.apply_mamba2(block["m"], hn, cfg.d_model, cfg.ssm)
+        h = h + ssm.apply_mamba2(block["m"], hn, cfg.d_model, cfg.ssm,
+                                 use_pallas=cfg.use_pallas_ssm)
         h = jax.lax.cond(
             idx % every == 0,
             lambda hh: _apply_shared(shared, hh, x0, cfg, cos, sin)[0],

@@ -191,6 +191,24 @@ def blockwise_attention(q, k, v, *, causal=True, window=0,
         else outs[0].astype(v.dtype)
 
 
+def attend(q, k, v, *, causal=True, window=0, use_pallas=False,
+           seq_len=None):
+    """Training/prefill attention router shared by the model zoo.
+
+    ``use_pallas=True`` routes to the flash-attention Pallas kernels
+    (forward AND backward; block sizes from the shared autotune
+    registry).  The pure-JAX fallback picks ``dot_attention`` for short
+    sequences and ``blockwise_attention`` beyond 1k, as before.
+    """
+    S = q.shape[1] if seq_len is None else seq_len
+    if use_pallas:
+        from repro.kernels.flash_attention.ops import flash_attention
+        return flash_attention(q, k, v, causal, window)
+    if S <= 1024:
+        return dot_attention(q, k, v, causal=causal, window=window)
+    return blockwise_attention(q, k, v, causal=causal, window=window)
+
+
 def dot_attention(q, k, v, *, causal=True, window=0, kv_len=None, q_positions=None):
     """Plain O(S*T)-memory attention for short sequences / decode.
 

@@ -84,8 +84,16 @@ def _causal_conv(xbc, w, b, pad_left=None):
     return jax.nn.silu(out + b.astype(xbc.dtype))
 
 
-def apply_mamba2(p, x, d_model, ssm, init_state=None, return_state=False):
-    """Chunked SSD forward. x: (B, S, d_model) -> (B, S, d_model)."""
+def apply_mamba2(p, x, d_model, ssm, init_state=None, return_state=False,
+                 use_pallas=False):
+    """Chunked SSD forward. x: (B, S, d_model) -> (B, S, d_model).
+
+    ``use_pallas=True`` routes the scan core through the Pallas SSD
+    kernels (forward AND backward; chunk length from the shared autotune
+    registry) on the stateless training path; the stateful prefill /
+    resume paths keep the lax.scan form, which carries conv and ssm
+    state explicitly.
+    """
     B, S, _ = x.shape
     z, xbc, dt_raw, di, H, N = _mamba2_split(p, x, d_model, ssm)
     P = ssm.head_dim
@@ -105,6 +113,17 @@ def apply_mamba2(p, x, d_model, ssm, init_state=None, return_state=False):
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
                          + p["dt_bias"])                      # (B,S,H)
     A = -jnp.exp(p["A_log"])                                  # (H,) negative
+
+    if use_pallas and init_state is None and not return_state:
+        from repro.kernels.ssm_scan.ops import ssm_scan as ssm_scan_kernel
+        y = ssm_scan_kernel(xs.astype(jnp.float32),
+                            Bmat.astype(jnp.float32),
+                            Cmat.astype(jnp.float32), dt, A)
+        y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+        y = y.reshape(B, S, di).astype(x.dtype)
+        y = layers.apply_norm(p["norm"], y) * jax.nn.silu(z)
+        return y @ p["out_proj"].astype(x.dtype)
+
     la = dt * A                                               # log-decay (B,S,H)
 
     L = min(ssm.chunk, S)

@@ -254,3 +254,153 @@ ENTRY %main (a: {dtype}[{dim0},{dim1}]) -> {dtype}[{dim0},{dim1}] {{
     stats = collectives.collective_stats(hlo)
     assert stats["all-reduce"]["bytes"] == trip * dim0 * dim1 * nbytes
     assert stats["all-reduce"]["count"] == trip
+
+
+# ---------------------------------------------------------------------------
+# generic kernel-autotune registry (kernels/autotune)
+# ---------------------------------------------------------------------------
+
+
+def _random_signature(draw):
+    """A random signature from a random registered family, with the
+    matching random schedule."""
+    from repro.kernels import autotune as autotune_lib
+    from repro.kernels.conv3d import tiles as conv_tiles
+    from repro.kernels.flash_attention import tune as attn_tune
+    from repro.kernels.ssm_scan import tune as ssm_tune
+
+    family = draw(st.sampled_from(("conv3d", "attn", "ssm")))
+    dtype = draw(st.sampled_from((None, jnp.float32, jnp.bfloat16)))
+    dim = st.integers(1, 512)
+    if family == "conv3d":
+        sig = conv_tiles.signature(
+            draw(st.sampled_from(("conv", "conv_t", "dw", "dw_t"))),
+            tuple(draw(st.lists(dim, min_size=3, max_size=3))),
+            draw(dim), draw(dim), 3, draw(st.sampled_from((1, 2))), dtype)
+        sched = conv_tiles.ConvTiles(
+            bn=draw(st.sampled_from((8, 64, 128))),
+            fuse_taps=draw(st.booleans()))
+    elif family == "attn":
+        sig = attn_tune.signature(draw(dim), draw(dim), draw(dim),
+                                  draw(dim), draw(dim),
+                                  draw(st.booleans()), draw(dim), dtype)
+        sched = attn_tune.AttnBlocks(
+            block_q=draw(st.sampled_from((32, 128, 512))),
+            block_kv=draw(st.sampled_from((32, 128, 512))))
+    else:
+        sig = ssm_tune.signature(draw(dim), draw(dim), draw(dim),
+                                 draw(dim), dtype)
+        sched = ssm_tune.ScanChunks(chunk=draw(st.sampled_from((16, 64,
+                                                                256))))
+    return sig, sched
+
+
+@given(data=st.data())
+@settings(**SETTINGS)
+def test_autotune_cache_roundtrip_any_family(data, tmp_path_factory):
+    """save_cache -> load_cache is the identity for ANY signature of ANY
+    registered family — the cross-process contract every kernel's
+    schedule lookup relies on."""
+    from repro.kernels import autotune as autotune_lib
+
+    cache = str(tmp_path_factory.mktemp("autotune"))
+    entries = {}
+    for _ in range(data.draw(st.integers(1, 4))):
+        sig, sched = _random_signature(data.draw)
+        entries[sig] = sched
+    try:
+        autotune_lib.clear_registry()     # warm-loaded entries would leak
+        for sig, sched in entries.items():
+            autotune_lib.register_schedule(sig, sched)
+        autotune_lib.save_cache(cache_dir=cache)
+        autotune_lib.clear_registry()
+        n = autotune_lib.load_cache(cache_dir=cache)
+        assert n == len(entries)
+        for sig, sched in entries.items():
+            assert autotune_lib.get_schedule(sig) == sched
+    finally:
+        autotune_lib.clear_registry()
+
+
+@given(data=st.data(), garbage=st.text(max_size=64))
+@settings(**SETTINGS)
+def test_autotune_corrupt_cache_falls_back_to_default(data, garbage,
+                                                      tmp_path_factory):
+    """ANY corrupt cache content must never break a schedule lookup —
+    get_schedule's lazy warm-load swallows it and falls back to the
+    family heuristic default."""
+    import os
+
+    from repro.kernels import autotune as autotune_lib
+
+    cache = tmp_path_factory.mktemp("autotune")
+    kind = autotune_lib._device_kind()
+    (cache / f"{kind}.json").write_text(garbage)
+    sig, _ = _random_signature(data.draw)
+    old_env = os.environ.get("REPRO_AUTOTUNE_DIR")
+    os.environ["REPRO_AUTOTUNE_DIR"] = str(cache)
+    try:
+        autotune_lib.clear_registry()
+        assert autotune_lib.load_cache(cache_dir=str(cache)) == 0
+        # the warm-load path inside get_schedule reads the same corrupt
+        # file (via REPRO_AUTOTUNE_DIR) and must still yield the default
+        assert autotune_lib.get_schedule(sig) == \
+            autotune_lib.default_schedule(sig)
+    finally:
+        autotune_lib.clear_registry()
+        if old_env is None:
+            os.environ.pop("REPRO_AUTOTUNE_DIR", None)
+        else:
+            os.environ["REPRO_AUTOTUNE_DIR"] = old_env
+
+
+@given(data=st.data())
+@settings(**SETTINGS)
+def test_autotune_candidates_nonempty_and_schedule_valid(data):
+    """For ANY shape, every family's candidate space is non-empty, holds
+    only instances of the family's schedule class, and contains the
+    heuristic default's type."""
+    import dataclasses as dc
+
+    from repro.kernels import autotune as autotune_lib
+
+    sig, _ = _random_signature(data.draw)
+    spec = autotune_lib.spec_for(sig)
+    cands = autotune_lib.candidate_schedules(sig)
+    assert cands
+    for c in cands:
+        assert isinstance(c, spec.schedule_cls)
+        for f in dc.fields(c):
+            v = getattr(c, f.name)
+            if isinstance(v, int) and not isinstance(v, bool):
+                assert v > 0, f"non-positive schedule field {f.name}={v}"
+    assert isinstance(autotune_lib.default_schedule(sig),
+                      spec.schedule_cls)
+
+
+@given(data=st.data())
+@settings(**SETTINGS)
+def test_autotune_manual_registration_beats_disk(data, tmp_path_factory):
+    """An in-memory register_schedule always wins over a different
+    schedule persisted on disk for the same signature."""
+    from repro.kernels import autotune as autotune_lib
+
+    cache = str(tmp_path_factory.mktemp("autotune"))
+    sig, disk_sched = _random_signature(data.draw)
+    manual = autotune_lib.default_schedule(sig)
+    if manual == disk_sched:        # make them observably different
+        import dataclasses as dc
+        f = dc.fields(disk_sched)[0].name
+        v = getattr(disk_sched, f)
+        disk_sched = dc.replace(
+            disk_sched, **{f: (v + 1 if isinstance(v, int)
+                               and not isinstance(v, bool) else not v)})
+    try:
+        autotune_lib.register_schedule(sig, disk_sched)
+        autotune_lib.save_cache(cache_dir=cache)
+        autotune_lib.clear_registry()
+        autotune_lib.register_schedule(sig, manual)
+        autotune_lib.load_cache(cache_dir=cache)
+        assert autotune_lib.get_schedule(sig) == manual
+    finally:
+        autotune_lib.clear_registry()

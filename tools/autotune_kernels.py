@@ -1,0 +1,151 @@
+"""Offline multi-kernel autotuner — one sweep, every Pallas family.
+
+Generalises ``tools/autotune_conv3d.py`` over the shared autotune
+substrate (:mod:`repro.kernels.autotune`): for each requested family it
+enumerates the signatures the training configs hit, TIMES the
+candidate schedules on the live device, and persists the winners to the
+on-disk cache under ``results/autotune/<device_kind>.json``.  Every
+kernel wrapper warm-loads that cache on first use, so training, serving
+and the benchmarks pick the tuned schedules up automatically.
+
+- ``conv3d``: the 3DGAN generator/discriminator conv signatures
+  (forward, plus dx/dw backward with ``--train``), via
+  ``kernels/conv3d/tiles.autotune_config`` — unchanged behavior.
+- ``attn``: the flash-attention (block_q, block_kv) signatures of an LM
+  config at ``--seq-len``.
+- ``ssm``: the SSD-scan chunk signatures of a hybrid (Mamba2) config at
+  ``--seq-len``.
+
+The cache makes the sweep idempotent: a SECOND run performs ZERO
+measurements (every signature hits the cache), which is also this CLI's
+self-check — it prints the measurement count and exits nonzero if
+``--expect-cached`` is given but anything had to be measured.
+
+  PYTHONPATH=src python tools/autotune_kernels.py \
+      [--families conv3d attn ssm] [--dtype float32 bfloat16] \
+      [--config bench|reduced|full] [--arch qwen2-1.5b] \
+      [--ssm-arch zamba2-1.2b] [--seq-len 128] [--train] [--steps 3] \
+      [--cache-dir results/autotune] [--expect-cached]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+FAMILIES = ("conv3d", "attn", "ssm")
+
+
+def _tune_signatures(sigs, steps, cache_dir):
+    """Drive ``autotune_signature`` over a list; return the report."""
+    from repro.kernels import autotune as autotune_lib
+
+    rep = {"measured": 0, "cached": 0, "entries": []}
+    for sig in sigs:
+        best, n = autotune_lib.autotune_signature(sig, steps=steps,
+                                                  cache_dir=cache_dir)
+        rep["measured"] += n
+        rep["cached"] += int(n == 0)
+        rep["entries"].append({
+            "signature": autotune_lib._sig_to_str(sig),
+            "schedule": dataclasses.asdict(best),
+            "measurements": n,
+        })
+    return rep
+
+
+def _conv3d_report(args, dtype, cache_dir):
+    from repro.configs import calo3dgan
+    from repro.kernels.conv3d import tiles as tiles_lib
+
+    cfg = {"bench": calo3dgan.bench, "reduced": calo3dgan.reduced,
+           "full": calo3dgan.config}[args.config]()
+    rep = tiles_lib.autotune_config(cfg, dtype, steps=args.steps,
+                                    cache_dir=cache_dir, train=args.train)
+    for e in rep["entries"]:
+        e["schedule"] = e.pop("tiles")
+    return rep
+
+
+def _attn_report(args, dtype, cache_dir):
+    from repro.configs import base as config_base
+    from repro.kernels.flash_attention import tune as tune_lib
+
+    cfg = config_base.reduced_config(args.arch)
+    sigs = tune_lib.model_signatures(cfg, args.seq_len, dtype)
+    return _tune_signatures(sigs, args.steps, cache_dir)
+
+
+def _ssm_report(args, dtype, cache_dir):
+    from repro.configs import base as config_base
+    from repro.kernels.ssm_scan import tune as tune_lib
+
+    cfg = config_base.reduced_config(args.ssm_arch)
+    sigs = tune_lib.model_signatures(cfg, args.seq_len, dtype)
+    return _tune_signatures(sigs, args.steps, cache_dir)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--families", nargs="+", default=list(FAMILIES),
+                    choices=FAMILIES)
+    ap.add_argument("--dtype", nargs="+", default=["float32", "bfloat16"])
+    ap.add_argument("--config", default="bench",
+                    choices=("bench", "reduced", "full"),
+                    help="3DGAN config for the conv3d family")
+    ap.add_argument("--arch", default="qwen2-1.5b",
+                    help="LM arch for the attn family (reduced config)")
+    ap.add_argument("--ssm-arch", default="zamba2-1.2b",
+                    help="hybrid arch for the ssm family (reduced config)")
+    ap.add_argument("--seq-len", type=int, default=128,
+                    help="training sequence length for attn/ssm signatures")
+    ap.add_argument("--train", action="store_true",
+                    help="also tune the conv3d backward (dx/dw) signatures")
+    ap.add_argument("--steps", type=int, default=3,
+                    help="timed executions per candidate")
+    ap.add_argument("--cache-dir", default="",
+                    help="override the results/autotune cache directory")
+    ap.add_argument("--expect-cached", action="store_true",
+                    help="exit 1 if any signature needed measuring "
+                         "(the warm-start assertion)")
+    ap.add_argument("--json", default="", help="also dump the report here")
+    args = ap.parse_args(argv)
+
+    import jax.numpy as jnp
+
+    from repro.kernels import autotune as autotune_lib
+
+    runners = {"conv3d": _conv3d_report, "attn": _attn_report,
+               "ssm": _ssm_report}
+    total = {"measured": 0, "cached": 0, "entries": []}
+    for family in args.families:
+        for dtype_name in args.dtype:
+            rep = runners[family](args, jnp.dtype(dtype_name),
+                                  args.cache_dir or None)
+            total["measured"] += rep["measured"]
+            total["cached"] += rep["cached"]
+            total["entries"] += rep["entries"]
+            print(f"[{family}/{dtype_name}] {rep['cached']} cached "
+                  f"signatures, {rep['measured']} measurements")
+    for e in total["entries"]:
+        mark = "cache" if e["measurements"] == 0 else f"{e['measurements']}x"
+        sched = ",".join(f"{k}={v}" for k, v in e["schedule"].items())
+        print(f"  {e['signature']:<48} -> {sched} [{mark}]")
+    print(f"cache: {autotune_lib.cache_path(cache_dir=args.cache_dir or None)}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(total, f, indent=1)
+    if args.expect_cached and total["measured"]:
+        print(f"EXPECTED warm cache but measured {total['measured']} "
+              "candidates", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
