@@ -12,6 +12,8 @@ the ICI model (it lands on the paper's ~120 s epoch).
 """
 from __future__ import annotations
 
+import argparse
+
 from repro.cloud import planner
 
 # paper: one epoch on 2 V100s (BS=96/GPU) — anchor point, seconds
@@ -21,16 +23,23 @@ BASE_EPOCH_S_2GPU = 5200.0
 TPU_EPOCH_ANCHORS = {"v3-8": 480.0, "v2-8": 1056.0, "v3-32": None}
 
 
-def run(grad_reduce: str = "hierarchical"):
+def run(grad_reduce: str = "overlap"):
     return planner.cost_frontier(BASE_EPOCH_S_2GPU, base_gpus=2,
                                  strategy=grad_reduce,
                                  tpu_epochs=TPU_EPOCH_ANCHORS)
 
 
-def main():
-    rows = run()
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--grad-reduce", default="overlap",
+                    choices=("flat", "hierarchical", "overlap"),
+                    help="reduction strategy the derived efficiencies "
+                         "assume (overlap = comm hidden under backward)")
+    args = ap.parse_args(argv)
+    rows = run(grad_reduce=args.grad_reduce)
     print("bench_fig5_cost: cost per epoch (GCP europe-west4, paper-era; "
-          "efficiencies derived via cloud/interconnect, not tabulated)")
+          f"efficiencies derived via cloud/interconnect with "
+          f"{args.grad_reduce} reduce, not tabulated)")
     print(f"{'device':>16} {'n':>4} {'epoch_s':>9} {'cost_usd':>9} "
           f"{'eff':>6}")
     for r in rows:

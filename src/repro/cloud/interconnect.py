@@ -2,8 +2,9 @@
 
 The paper's weak-scaling story (Fig. 2) lives or dies on how gradient
 all-reduce time grows with node count.  This module prices a reduction
-payload on a :class:`repro.launch.mesh.Topology` under the two strategies
-the runtime implements (``parallel/collectives.make_grad_reduce``):
+payload on a :class:`repro.launch.mesh.Topology` under the three
+strategies the runtime implements
+(``parallel/collectives.make_grad_reduce``):
 
 ``flat``
     One ring over ALL ``nodes * devices_per_node`` replicas.  With more
@@ -16,9 +17,22 @@ the runtime implements (``parallel/collectives.make_grad_reduce``):
     Ring reduce-scatter + all-gather INSIDE each node over NVLink/ICI,
     then per-shard rings ACROSS nodes: the node NIC carries
     ``2*(n-1)/n * nbytes`` once, and only ``2*(n-1)`` latency hops per
-    bucket remain on the slow link.  Bucketing additionally lets early
-    buckets reduce while the backward pass still computes — the exposed
-    (non-overlapped) time is what enters the predicted step time.
+    bucket remain on the slow link.  The runtime still issues these
+    bucketed psums AFTER the full backward, so the model treats the
+    whole reduction as exposed.
+
+``overlap``
+    Same hierarchical bucket collectives, but issued from INSIDE the
+    backward pass in reverse parameter order
+    (``collectives.OverlapReduce``) — every bucket except each round's
+    tail can hide under the remaining backward compute, so only the tail
+    (clamped by the backward window) enters the predicted step time.
+    Historically this overlap credit was (incorrectly) granted to the
+    ``hierarchical`` strategy; since the runtime grew a real overlapping
+    reducer the credit lives where the runtime earns it, and
+    ``parallel/jaxpr_cost.collective_schedule`` measures the actual
+    exposed fraction to compare against this model (the
+    ``bench_fig2_weakscaling`` gap columns).
 
 Payloads come from measurement or structure, not guesses: per-phase
 gradient bytes via ``core/adversarial.grad_reduce_traffic`` /
@@ -77,8 +91,11 @@ def allreduce_s(nbytes: float, topo: Topology, strategy: str = "hierarchical",
         slow = Link(min(topo.intra_link.bandwidth, topo.inter_link.bandwidth),
                     max(topo.intra_link.latency, topo.inter_link.latency))
         return ring_allreduce_s(nbytes, n * d, slow, 1)
-    if strategy != "hierarchical":
+    if strategy not in ("hierarchical", "overlap"):
         raise ValueError(f"unknown strategy {strategy!r}")
+    # "overlap" issues the SAME hierarchical bucket collectives, just
+    # earlier (from inside the backward) — identical wire time; only the
+    # exposed fraction differs (see exposed_comm_s).
     t_intra = ring_allreduce_s(nbytes, d, topo.intra_link, nb)
     # inter-node: after the intra reduce-scatter each of the d devices
     # owns nbytes/d; their cross-node rings run in parallel but share the
@@ -90,36 +107,51 @@ def allreduce_s(nbytes: float, topo: Topology, strategy: str = "hierarchical",
 def exposed_comm_s(rounds: Iterable[Tuple[str, float]], topo: Topology,
                    strategy: str = "hierarchical",
                    bucket_bytes: int = DEFAULT_BUCKET_BYTES,
-                   compute_s: float = 0.0) -> float:
+                   compute_s: float = 0.0,
+                   tail_bytes: dict | None = None) -> float:
     """Non-overlapped communication time of one training step.
 
     ``rounds``: the step's reduction payloads in program order (e.g.
     ``adversarial.grad_reduce_traffic(cfg)["rounds"]``).  Each round is
-    priced by :func:`allreduce_s`; under the bucketed hierarchical
-    strategy everything except each round's LAST bucket can hide under
-    the backward window (``OVERLAP_WINDOW * compute_s``), so the exposed
-    time is ``max(total - window, tail_buckets)``.  The flat strategy
-    reduces whole tensors after the backward — nothing overlaps.
+    priced by :func:`allreduce_s`.
+
+    ``flat`` and ``hierarchical`` reduce AFTER the backward pass, so the
+    whole reduction is exposed.  ``overlap`` issues buckets from inside
+    the backward in reverse parameter order: everything except each
+    round's TAIL bucket (the one carrying the earliest-forward params,
+    whose cotangents arrive last — no compute left to hide under) can
+    overlap with the backward window ``OVERLAP_WINDOW * compute_s``, so
+    the exposed time is ``max(total - window, tails)``.
+
+    ``tail_bytes`` maps round name -> actual bytes of that round's tail
+    bucket (from the runtime's real ``plan_buckets`` plan — tail buckets
+    are whole leaves, so an oversize first layer makes the tail far
+    bigger than the uniform ``bytes/n_buckets`` guess used when the map
+    is absent).  Supplying it is what makes the modeled overlap term
+    track the measured schedule (``jaxpr_cost.collective_schedule``).
     """
     rounds = list(rounds)
     total = sum(allreduce_s(b, topo, strategy, bucket_bytes)
                 for _, b in rounds)
-    if strategy != "hierarchical" or total <= 0:
+    if strategy != "overlap" or total <= 0:
         return total
     tail = sum(
-        allreduce_s(b, topo, strategy, bucket_bytes)
-        / n_buckets(b, bucket_bytes)
-        for _, b in rounds)
+        allreduce_s((tail_bytes or {}).get(name,
+                                           b / n_buckets(b, bucket_bytes)),
+                    topo, strategy, bucket_bytes)
+        for name, b in rounds)
     return max(total - OVERLAP_WINDOW * compute_s, tail)
 
 
 def predict_step_s(compute_s: float, rounds: Sequence[Tuple[str, float]],
                    topo: Topology, strategy: str = "hierarchical",
-                   bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> dict:
+                   bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                   tail_bytes: dict | None = None) -> dict:
     """Predicted per-step wall time on ``topo``: measured/derived compute
     plus the exposed communication term.  Returns the decomposition the
     weak-scaling bench reports side by side with the roofline numbers."""
-    comm = exposed_comm_s(rounds, topo, strategy, bucket_bytes, compute_s)
+    comm = exposed_comm_s(rounds, topo, strategy, bucket_bytes, compute_s,
+                          tail_bytes)
     return {
         "compute_s": compute_s,
         "comm_s": comm,

@@ -97,14 +97,20 @@ def gpu_count_topology(n_gpus: int, gpus_per_node: int = 8) -> Topology:
 def weak_scaling_curve(anchor: Anchor, *,
                        node_counts: Sequence[int] = (1, 2, 4, 8, 16),
                        devices_per_node: int = 8,
-                       strategy: str = "hierarchical",
+                       strategy: str = "overlap",
                        bucket_bytes: int = interconnect.DEFAULT_BUCKET_BYTES,
                        rounds: Optional[list] = None,
                        samples_per_epoch: int = EPOCH_SAMPLES,
-                       family: str = "v100") -> list:
+                       family: str = "v100",
+                       tail_bytes: Optional[dict] = None) -> list:
     """Fig. 2 prediction: per-device batch fixed at the anchor's, global
     batch grows with devices.  Efficiency = anchor step / predicted step
-    — measured compute + modelled exposed comms, nothing tabulated."""
+    — measured compute + modelled exposed comms, nothing tabulated.
+
+    ``tail_bytes`` (round name -> tail-bucket bytes from the runtime's
+    real bucket plan) sharpens the ``overlap`` strategy's exposed term;
+    see :func:`interconnect.exposed_comm_s`.
+    """
     rounds = rounds if rounds is not None else gan_rounds(anchor.config)
     rows = []
     for n in node_counts:
@@ -114,7 +120,8 @@ def weak_scaling_curve(anchor: Anchor, *,
             topo = tpu_topology(family.split("_")[1],
                                 n * devices_per_node)
         pred = interconnect.predict_step_s(anchor.step_s, rounds, topo,
-                                           strategy, bucket_bytes)
+                                           strategy, bucket_bytes,
+                                           tail_bytes)
         devices = topo.total_devices
         global_batch = anchor.per_device_batch * devices
         steps_per_epoch = samples_per_epoch / global_batch
@@ -133,7 +140,7 @@ def weak_scaling_curve(anchor: Anchor, *,
 def efficiency_table(anchor_step_s: float, *,
                      counts: Sequence[int] = (2, 4, 8, 16, 32, 64, 128),
                      base: int = 2,
-                     strategy: str = "hierarchical",
+                     strategy: str = "overlap",
                      bucket_bytes: int = interconnect.DEFAULT_BUCKET_BYTES,
                      rounds: Optional[list] = None,
                      config: str = "full") -> Dict[int, float]:
@@ -163,7 +170,7 @@ def efficiency_table(anchor_step_s: float, *,
 def cost_frontier(base_epoch_s: float, *, base_gpus: int = 2,
                   efficiencies: Optional[Dict[int, float]] = None,
                   anchor_step_s: Optional[float] = None,
-                  strategy: str = "hierarchical",
+                  strategy: str = "overlap",
                   bucket_bytes: int = interconnect.DEFAULT_BUCKET_BYTES,
                   tpu_epochs: Optional[Dict[str, float]] = None) -> list:
     """Fig. 5: cost/epoch across offerings.

@@ -46,7 +46,7 @@ def _freeze_pallas_conv(cfg):
         return cfg                      # config without the field
 
 
-def grad_reduce_traffic(cfg) -> dict:
+def grad_reduce_traffic(cfg, bucket_bytes: Optional[int] = None) -> dict:
     """Per-step gradient-reduction payload of the fused Algorithm-1 step.
 
     Each phase reduces its OWN gradients before its optimizer update —
@@ -55,7 +55,30 @@ def grad_reduce_traffic(cfg) -> dict:
     prices the step as a SEQUENCE of smaller all-reduces, not one big
     one.  Returns {"rounds": [(name, bytes), ...], "bytes_per_step",
     "largest_round_bytes"}; shapes only, nothing is allocated.
+
+    With ``bucket_bytes`` set, also returns ``"tail_bytes"`` — per round,
+    the bytes of the reverse-order overlap reducer's reduction that stay
+    EXPOSED no matter how early buckets are issued
+    (``collectives.OverlapReduce`` granularity is whole
+    ``plan_buckets`` buckets):
+
+    - D rounds map to 0: the following generator-phase compute (the
+      generator forward making the next fakes) is independent of the D
+      gradients, so their reductions hide under it.
+    - G rounds map to their LARGEST bucket: the fused step runs the
+      ``gen_steps_per_disc`` G updates back-to-back in a scan whose next
+      iteration immediately consumes the updated params, and the last
+      one ends the step — there is no independent compute left for the
+      slowest bucket (with an oversize first layer, nearly the whole
+      round) to hide under.
+
+    Feeding this real plan to ``interconnect.exposed_comm_s`` is what
+    makes the modeled overlap term track the measured schedule
+    (``jaxpr_cost.collective_schedule``) instead of assuming a uniform
+    ``bytes / n_buckets`` tail.
     """
+    from repro.parallel import collectives
+
     g_shapes = jax.eval_shape(
         lambda: gan.init_generator(jax.random.key(0), cfg))
     d_shapes = jax.eval_shape(
@@ -65,12 +88,24 @@ def grad_reduce_traffic(cfg) -> dict:
         return int(sum(np.prod(s.shape) * s.dtype.itemsize
                        for s in jax.tree.leaves(t)))
 
+    def largest_bucket_bytes(t):
+        leaves = jax.tree.leaves(t)
+        return max(
+            int(sum(np.prod(leaves[i].shape) * leaves[i].dtype.itemsize
+                    for i in bucket))
+            for bucket in collectives.plan_buckets(leaves, bucket_bytes))
+
     gb, db = tree_bytes(g_shapes), tree_bytes(d_shapes)
     rounds = [("d_real", db), ("d_fake", db)]
     rounds += [(f"g{i}", gb) for i in range(cfg.gen_steps_per_disc)]
-    return {"rounds": rounds,
-            "bytes_per_step": sum(b for _, b in rounds),
-            "largest_round_bytes": max(b for _, b in rounds)}
+    out = {"rounds": rounds,
+           "bytes_per_step": sum(b for _, b in rounds),
+           "largest_round_bytes": max(b for _, b in rounds)}
+    if bucket_bytes is not None:
+        gt = largest_bucket_bytes(g_shapes)
+        out["tail_bytes"] = {name: (0 if name.startswith("d_") else gt)
+                             for name, _ in rounds}
+    return out
 
 
 class GANState(NamedTuple):
@@ -215,7 +250,11 @@ def make_fused_step(cfg, g_optimizer, d_optimizer, mesh=None, policy=None,
     ``grad_reduce``: applied to the gradients of EVERY phase (D-real,
     D-fake, each G step) before its optimizer update — the engine's
     custom loop passes an explicit psum-mean over the data axes here,
-    keeping params replicated without GSPMD's help.
+    keeping params replicated without GSPMD's help.  A reducer exposing
+    ``wrap_params`` (``collectives.OverlapReduce``) is routed through the
+    loss instead: the params are tagged before differentiation so each
+    bucket's collective issues inside the backward pass, and the post-hoc
+    call becomes the identity.
 
     ``microbatches``: gradient accumulation INSIDE each phase.  The batch
     (and the fake-input sampling) is split into this many microbatches;
@@ -227,6 +266,7 @@ def make_fused_step(cfg, g_optimizer, d_optimizer, mesh=None, policy=None,
     M = int(microbatches)
     assert M >= 1, microbatches
     reduce_grads = grad_reduce if grad_reduce is not None else (lambda g: g)
+    wrap_params = getattr(reduce_grads, "wrap_params", None)
     compute_dtype = policy.compute_dtype if policy is not None else None
     to_compute = (policy.cast_to_compute if compute_dtype is not None
                   else (lambda t: t))
@@ -302,6 +342,12 @@ def make_fused_step(cfg, g_optimizer, d_optimizer, mesh=None, policy=None,
             agrees) and a nonfinite phase skips its update entirely.
             Returns (loss, aux, params, opt_state, ls, finite).
             """
+            if wrap_params is not None:
+                # overlap: each bucket's collective fires mid-backward;
+                # psum is linear so reducing the SCALED grads then
+                # unscaling matches the post-hoc order within rounding
+                base_loss = loss_fn
+                loss_fn = lambda p, x: base_loss(wrap_params(p), x)
             if ls is None:
                 l, aux, g = accum(loss_fn, params, xs)
                 upd, new_opt = optimizer.update(reduce_grads(g), opt_state,

@@ -163,12 +163,13 @@ def main():
     ap.add_argument("--microbatches", type=int, default=1,
                     help="gradient accumulation inside each step")
     ap.add_argument("--grad-reduce", default="",
-                    choices=("", "flat", "hierarchical"),
-                    help="gradient-reduction strategy (custom loop): flat "
-                         "psum-mean, or hierarchical 2-level (intra-node "
-                         "psum + bucketed inter-node psums over a "
-                         "(node, device) mesh); empty defers to the "
-                         "config's grad_reduce field")
+                    choices=("", "flat", "hierarchical", "overlap"),
+                    help="gradient-reduction strategy: flat psum-mean, "
+                         "hierarchical 2-level (intra-node psum + bucketed "
+                         "inter-node psums over a (node, device) mesh), or "
+                         "overlap (reverse-order buckets issued inside the "
+                         "backward pass); empty defers to the config's "
+                         "grad_reduce field")
     ap.add_argument("--bucket-mb", type=float, default=0.0,
                     help="inter-node bucket size (MiB) for hierarchical "
                          "grad-reduce (0: config default)")

@@ -6,16 +6,22 @@ Two halves:
    the roofline's third term comes from summing operand/result sizes of
    every collective op in the optimized HLO module.
 2. Gradient reduction — the strategies the custom training loop selects
-   via config (``flat`` | ``hierarchical``).  ``flat`` is one psum-mean
-   over all data axes (what the engine always did); ``hierarchical`` is
-   the 2-level cluster schedule: intra-node psum over the fast ``device``
-   axis first, then a BUCKETED reduction over the slow ``node`` axis —
-   gradient leaves are packed into ~bucket_bytes 1-D buckets, each bucket
-   its own collective, so XLA can start reducing early buckets while the
-   tail of the backward pass still computes, and small leaves stop paying
-   a per-tensor inter-node latency.  Both strategies divide by the total
-   replica count, so they are numerically interchangeable (asserted by
-   tests/test_scaleout.py at f32 tolerance).
+   via config (``flat`` | ``hierarchical`` | ``overlap``).  ``flat`` is
+   one psum-mean over all data axes (what the engine always did);
+   ``hierarchical`` is the 2-level cluster schedule: intra-node psum over
+   the fast ``device`` axis first, then a BUCKETED reduction over the
+   slow ``node`` axis — gradient leaves are packed into ~bucket_bytes 1-D
+   buckets, each bucket its own collective, so XLA can start reducing
+   early buckets while the tail of the backward pass still computes, and
+   small leaves stop paying a per-tensor inter-node latency.  ``overlap``
+   goes one step further: the SAME buckets, issued in reverse parameter
+   order (last-computed grads first) from INSIDE the backward pass — each
+   bucket's reduction is a ``jax.custom_vjp`` identity tag on the
+   parameters whose backward rule performs the collective, so it fires as
+   soon as that bucket's cotangents exist, while earlier layers are still
+   differentiating (see :class:`OverlapReduce`).  All strategies divide
+   by the total replica count, so they are numerically interchangeable
+   (asserted by tests/test_scaleout.py at f32 tolerance).
 """
 from __future__ import annotations
 
@@ -143,7 +149,7 @@ def total_collective_bytes(hlo_text: str) -> int:
     return sum(v["bytes"] for v in collective_stats(hlo_text).values())
 
 
-GRAD_REDUCE_STRATEGIES = ("flat", "hierarchical")
+GRAD_REDUCE_STRATEGIES = ("flat", "hierarchical", "overlap")
 DEFAULT_BUCKET_BYTES = 4 << 20        # 4 MiB per inter-node bucket
 
 
@@ -210,6 +216,100 @@ def bucket_transform(bucket_bytes: int = DEFAULT_BUCKET_BYTES):
     return apply
 
 
+def reverse_bucket_schedule(leaves, bucket_bytes: int = DEFAULT_BUCKET_BYTES):
+    """Bucket plan in backward-completion order.
+
+    The backward pass produces gradients in reverse forward order: the
+    LAST parameters a forward pass touches get their cotangents FIRST.
+    Reversing :func:`plan_buckets` therefore lists buckets in the order
+    their gradients become available — the issue order of the ``overlap``
+    strategy.  The schedule is an exact permutation of the plan_buckets
+    output: same buckets, same intra-bucket leaf order, no leaf dropped
+    or duplicated (pinned by tests/test_property.py).
+    """
+    return list(reversed(plan_buckets(leaves, bucket_bytes)))
+
+
+def _bucket_tag(reduce_vec):
+    """custom_vjp identity over one bucket's parameter leaves.
+
+    Forward: pass the leaves through untouched (zero cost — XLA folds the
+    identity away).  Backward: the bucket's cotangents are concatenated
+    into one 1-D vector, ``reduce_vec`` runs the collective, and the
+    result is sliced back to leaf shapes.  Because the tag sits on the
+    PARAMETERS, its backward rule executes the moment every cotangent of
+    the bucket exists — i.e. mid-backward, overlapping the reduction with
+    the differentiation of earlier layers.
+    """
+    @jax.custom_vjp
+    def tag(*leaves):
+        return leaves
+
+    def fwd(*leaves):
+        return leaves, tuple((l.shape, l.size) for l in leaves)
+
+    def bwd(meta, cts):
+        vec = cts[0].reshape(-1) if len(meta) == 1 else \
+            jnp.concatenate([c.reshape(-1) for c in cts])
+        vec = reduce_vec(vec)
+        out, off = [], 0
+        for shape, n in meta:
+            out.append(jax.lax.slice(vec, (off,), (off + n,)).reshape(shape))
+            off += n
+        return tuple(out)
+
+    tag.defvjp(fwd, bwd)
+    return tag
+
+
+class OverlapReduce:
+    """Dataflow-scheduled gradient reduction (``grad_reduce="overlap"``).
+
+    Two-sided protocol with the train steps:
+
+    - ``wrap_params(params)`` is called on the parameter pytree BEFORE the
+      loss evaluation.  It installs a :func:`_bucket_tag` per
+      reverse-order bucket; differentiating the wrapped loss then reduces
+      each bucket inside the backward pass itself, as soon as its
+      cotangents complete.
+    - ``__call__(grads)`` — the post-hoc hook every step already applies —
+      is the identity: by the time the gradient tree exists, reduction
+      already happened.
+
+    Steps detect the protocol via ``getattr(reduce, "wrap_params", None)``
+    so plain callables and the other strategies keep the old post-hoc
+    contract.
+    """
+
+    def __init__(self, reduce_vec, bucket_bytes: int = DEFAULT_BUCKET_BYTES):
+        self.reduce_vec = reduce_vec
+        self.bucket_bytes = bucket_bytes
+
+    def wrap_params(self, params):
+        flat, treedef = jax.tree.flatten(params)
+        out = list(flat)
+        for bucket in reverse_bucket_schedule(flat, self.bucket_bytes):
+            tagged = _bucket_tag(self.reduce_vec)(*[flat[i] for i in bucket])
+            for j, i in enumerate(bucket):
+                out[i] = tagged[j]
+        return jax.tree.unflatten(treedef, out)
+
+    def __call__(self, tree):
+        return tree
+
+
+def overlap_transform(bucket_bytes: int = DEFAULT_BUCKET_BYTES):
+    """Builtin-loop ``overlap``: identity-valued in-backward regrouping.
+
+    The jit+GSPMD loop's gradients are all-reduced by the partitioner, so
+    — exactly like :func:`bucket_transform` for ``hierarchical`` — the
+    overlap strategy there only re-expresses the gradient stream at
+    bucket granularity, but does it INSIDE the backward pass in reverse
+    bucket order, leaving reduction placement to GSPMD.  Numerics are
+    bit-identical (concat -> slice is the identity)."""
+    return OverlapReduce(lambda v: v, bucket_bytes)
+
+
 def make_grad_reduce(strategy, mesh, axes, *,
                      bucket_bytes: int = DEFAULT_BUCKET_BYTES):
     """Build the ``grad_reduce`` callable the custom (shard_map) loop
@@ -220,8 +320,13 @@ def make_grad_reduce(strategy, mesh, axes, *,
     the slow inter-node axis and ``axes[1:]`` as the fast intra-node axes
     (mesh convention: ``(node, device)``, and ``(pod, data)`` maps the
     same way) — intra psum first, then bucketed psums over the node axis,
-    then one division by the global replica count.  Means are identical
-    to ``flat`` up to f32 summation-order rounding.
+    then one division by the global replica count.  ``"overlap"`` runs
+    the same per-bucket hierarchical collective but returns an
+    :class:`OverlapReduce`, whose ``wrap_params`` hook moves each
+    bucket's reduction INTO the backward pass (reverse bucket order, so
+    the first-completed gradients reduce first); unlike hierarchical it
+    also works on flat (single-axis) meshes.  Means are identical to
+    ``flat`` up to f32 summation-order rounding.
     """
     if strategy is None or callable(strategy):
         return strategy
@@ -233,15 +338,30 @@ def make_grad_reduce(strategy, mesh, axes, *,
         return lambda tree: tree
     if strategy == "flat":
         return lambda tree: jax.lax.pmean(tree, axes)
+    world = 1
+    for a in axes:
+        world *= mesh.shape[a]
+    inv = 1.0 / world
+
+    if strategy == "overlap":
+        if len(axes) >= 2:
+            o_inter, o_intra = axes[0], axes[1:]
+
+            def reduce_vec(v):
+                v = jax.lax.psum(v, o_intra)             # NVLink/ICI hop
+                v = jax.lax.psum(v, o_inter)             # NIC hop
+                return v * jnp.asarray(inv, v.dtype)
+        else:
+            def reduce_vec(v):
+                return jax.lax.psum(v, axes) * jnp.asarray(inv, v.dtype)
+
+        return OverlapReduce(reduce_vec, bucket_bytes)
+
     if len(axes) < 2:
         raise ValueError(
             "hierarchical grad_reduce needs a 2-level mesh (node, device); "
             f"got data axes {axes} — use strategy='flat' on flat meshes")
     inter, intra = axes[0], axes[1:]
-    world = 1
-    for a in axes:
-        world *= mesh.shape[a]
-    inv = 1.0 / world
 
     def reduce(tree):
         tree = jax.lax.psum(tree, intra)                 # NVLink/ICI hop

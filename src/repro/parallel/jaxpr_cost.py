@@ -85,7 +85,18 @@ def _eqn_bytes(eqn) -> int:
 # psum'd bytes ARE the per-phase gradient-reduction payload.
 _COLLECTIVE_PRIMS = {
     "psum", "psum2", "psum_invariant", "pmax", "pmin", "all_gather",
-    "all_to_all", "reduce_scatter", "ppermute", "pbroadcast",
+    "all_to_all", "reduce_scatter", "psum_scatter", "ppermute", "pbroadcast",
+}
+
+# per-kind accumulator keys: the ZeRO-1 schedule (reduce-scatter grads ->
+# local update -> all-gather params) is only visible when gather/scatter
+# traffic is counted separately from the all-reduce psums
+_COLLECTIVE_KIND = {
+    "psum": "psum_bytes", "psum2": "psum_bytes",
+    "psum_invariant": "psum_bytes",
+    "all_gather": "all_gather_bytes",
+    "reduce_scatter": "reduce_scatter_bytes",
+    "psum_scatter": "reduce_scatter_bytes",
 }
 
 
@@ -134,8 +145,11 @@ def _walk(jaxpr, mult: float, acc: dict):
         elif prim in _COLLECTIVE_PRIMS:
             # per-replica payload (the shard_map multiplier already scaled
             # ``mult`` by the mesh size, so this totals GLOBAL bytes)
-            acc["collective_bytes"] += mult * sum(
-                _aval_bytes(v.aval) for v in eqn.outvars)
+            b = mult * sum(_aval_bytes(v.aval) for v in eqn.outvars)
+            acc["collective_bytes"] += b
+            kind = _COLLECTIVE_KIND.get(prim)
+            if kind:
+                acc[kind] += b
         else:
             handled = False
             for key in _CALL_SUBJAXPR_KEYS:
@@ -150,17 +164,21 @@ def _walk(jaxpr, mult: float, acc: dict):
 
 
 def jaxpr_cost(closed_jaxpr) -> dict:
-    """Returns {"flops", "bytes", "dot_count", "collective_bytes"} — GLOBAL
+    """Returns {"flops", "bytes", "dot_count", "collective_bytes",
+    "psum_bytes", "all_gather_bytes", "reduce_scatter_bytes"} — GLOBAL
     (unsharded) totals.
 
     ``flops`` counts matmul/conv MACs*2 (the MXU term); ``bytes`` is the
     structural memory-traffic estimate described in the module docstring;
     ``collective_bytes`` sums explicit jaxpr collectives (psum & friends,
     nonzero only for shard_map programs — the custom loop's gradient
-    reductions) and feeds the interconnect model.
+    reductions) and feeds the interconnect model; the per-kind keys split
+    it so the ZeRO-1 reduce-scatter/all-gather traffic is visible next to
+    the gradient psums.
     """
     acc = {"flops": 0.0, "bytes": 0.0, "dot_count": 0.0,
-           "collective_bytes": 0.0}
+           "collective_bytes": 0.0, "psum_bytes": 0.0,
+           "all_gather_bytes": 0.0, "reduce_scatter_bytes": 0.0}
     _walk(closed_jaxpr.jaxpr, 1.0, acc)
     return acc
 
@@ -168,3 +186,134 @@ def jaxpr_cost(closed_jaxpr) -> dict:
 def cost_of(fn, *args) -> dict:
     """Trace fn(*args) (ShapeDtypeStructs fine) and analyse."""
     return jaxpr_cost(jax.make_jaxpr(fn)(*args))
+
+
+def per_device_state_bytes(state, num_shards: int = 1) -> int:
+    """Bytes of train state ONE device holds.
+
+    Replicated leaves count in full; ZeRO-1 shard-major leaves — arrays
+    under an optimizer's ``"zero1"`` subtree whose leading dim equals
+    ``num_shards`` (`optim.optimizers.zero1`'s ``(N, L)`` layout, which
+    `Engine.state_pspecs` shards over the data axes) — count 1/N.  Works
+    on real arrays and ``jax.eval_shape`` outputs alike; the benches
+    report it as ``state_bytes_per_device``.
+    """
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
+        shape = tuple(getattr(leaf, "shape", np.shape(leaf)))
+        nbytes = int(np.prod(shape, dtype=np.int64)) * leaf.dtype.itemsize
+        if num_shards > 1 and len(shape) >= 1 \
+                and shape[0] == num_shards \
+                and any(getattr(e, "key", None) == "zero1" for e in path):
+            nbytes = -(-nbytes // num_shards)
+        total += nbytes
+    return int(total)
+
+
+# ---------------------------------------------------------------------------
+# Collective scheduling: MEASURED comm/compute overlap
+# ---------------------------------------------------------------------------
+
+
+def collective_schedule(closed_jaxpr) -> dict:
+    """Dependence analysis of WHERE each collective sits in the program.
+
+    A collective can overlap compute iff some compute scheduled after it
+    does not consume its result — then an async runtime (and XLA's
+    collective scheduler) can run them concurrently.  This walks the
+    jaxpr in program order propagating a per-variable taint set of
+    collective ids; a collective is HIDDEN the moment a later
+    dot/conv does not carry its taint, and EXPOSED if every subsequent
+    compute op depends on it (e.g. the monolithic post-backward psum,
+    whose result feeds the optimizer update and nothing else runs).
+
+    Returns ``{"n_collectives", "total_bytes", "hidden_bytes",
+    "exposed_bytes", "exposed_frac"}`` where ``exposed_frac`` is the
+    byte-weighted fraction with no independent later compute — the
+    MEASURED counterpart of the interconnect model's overlap assumption
+    (``cloud/interconnect.exposed_comm_s``).  Approximations: sub-jaxpr
+    loop bodies are analysed once (cross-iteration hiding in a scan is
+    not credited) and ``cond`` branches are all walked; both err toward
+    reporting MORE exposure, never less.
+    """
+    taint: dict = {}                 # core.Var -> frozenset of cids
+    info: list = []                  # cid -> {"bytes": float, "hidden": bool}
+
+    def get(v):
+        if isinstance(v, core.Literal):
+            return frozenset()
+        return taint.get(v, frozenset())
+
+    def walk(jaxpr, mult):
+        for eqn in jaxpr.eqns:
+            prim = eqn.primitive.name
+            in_t = frozenset().union(*(get(v) for v in eqn.invars)) \
+                if eqn.invars else frozenset()
+            out_t = in_t
+            if prim in ("dot_general", "conv_general_dilated"):
+                # compute op: every live collective it does NOT depend on
+                # has found something to hide under
+                for cid, rec in enumerate(info):
+                    if not rec["hidden"] and cid not in in_t:
+                        rec["hidden"] = True
+            elif prim in _COLLECTIVE_PRIMS:
+                cid = len(info)
+                info.append({"bytes": mult * sum(
+                    _aval_bytes(v.aval) for v in eqn.outvars),
+                    "hidden": False})
+                out_t = in_t | {cid}
+            else:
+                sub, submult = None, mult
+                if prim == "scan":
+                    sub = eqn.params["jaxpr"]
+                    submult = mult * eqn.params["length"]
+                elif prim == "shard_map":
+                    mesh = eqn.params["mesh"]
+                    n = getattr(mesh, "size", None) or \
+                        math.prod(mesh.shape.values())
+                    sub = eqn.params["jaxpr"]
+                    submult = mult * n
+                elif prim == "while":
+                    sub = eqn.params["body_jaxpr"]
+                elif prim == "cond":
+                    for br in eqn.params["branches"]:
+                        out_t |= _enter(br, eqn.invars[1:], mult)
+                else:
+                    for key in _CALL_SUBJAXPR_KEYS:
+                        if key in eqn.params:
+                            sub = eqn.params[key]
+                            break
+                if sub is not None:
+                    out_t |= _enter(sub, eqn.invars, submult)
+            for v in eqn.outvars:
+                taint[v] = out_t
+
+    def _enter(sub, call_invars, mult):
+        """Walk a sub-jaxpr with taints seeded from the call site;
+        returns the union of its outvar taints."""
+        inner = sub.jaxpr if hasattr(sub, "jaxpr") else sub
+        iv = list(inner.invars)
+        if len(iv) == len(call_invars):
+            for a, b in zip(iv, call_invars):
+                taint[a] = get(b)
+        else:       # arity mismatch (carry packing): conservative union
+            u = frozenset().union(*(get(b) for b in call_invars)) \
+                if call_invars else frozenset()
+            for a in iv:
+                taint[a] = u
+        walk(inner, mult)
+        return frozenset().union(*(get(v) for v in inner.outvars)) \
+            if inner.outvars else frozenset()
+
+    walk(closed_jaxpr.jaxpr, 1.0)
+    total = sum(r["bytes"] for r in info)
+    hidden = sum(r["bytes"] for r in info if r["hidden"])
+    return {"n_collectives": len(info), "total_bytes": total,
+            "hidden_bytes": hidden, "exposed_bytes": total - hidden,
+            "exposed_frac": (total - hidden) / total if total else 0.0}
+
+
+def schedule_of(fn, *args) -> dict:
+    """Trace fn(*args) (ShapeDtypeStructs fine) and analyse its
+    collective schedule."""
+    return collective_schedule(jax.make_jaxpr(fn)(*args))

@@ -61,7 +61,7 @@ def save(path: str, tree, step: int = 0, extra: dict = None):
         json.dump(meta, f, indent=1)
 
 
-def restore(path: str, template):
+def restore(path: str, template, *, reshard=None):
     """Restore into the structure of `template` (shapes must match).
 
     STRICT: leaves present in the checkpoint but not the template, or
@@ -69,6 +69,12 @@ def restore(path: str, template):
     ``ValueError`` naming the offending key paths — a template that
     disagrees with the saved tree is a code/config mismatch the caller
     must see, never a silent partial restore.
+
+    ``reshard``: optional hook ``(key, array, template_shape) -> array |
+    None`` consulted ONLY on a shape mismatch.  Returning an array of the
+    template shape accepts the leaf (how ZeRO-1 ``(N, L)`` shards restore
+    onto a different device count — see :func:`zero1_reshard`); returning
+    None keeps the strict ``ValueError``.
     """
     with np.load(os.path.join(path, "arrays.npz")) as z:
         arrays = {k: z[k] for k in z.files}
@@ -86,9 +92,44 @@ def restore(path: str, template):
         a = arrays[key]
         shape = tuple(getattr(leaf, "shape", np.shape(leaf)))
         if a.shape != shape:
-            raise ValueError(f"{key}: ckpt {a.shape} vs template {shape}")
-        leaves.append(a.astype(np.asarray(leaf).dtype))
+            resharded = reshard(key, a, shape) if reshard is not None \
+                else None
+            if resharded is None or tuple(resharded.shape) != shape:
+                raise ValueError(f"{key}: ckpt {a.shape} vs template {shape}")
+            a = resharded
+        # `getattr` first so abstract templates (jax.eval_shape output,
+        # ShapeDtypeStruct) work alongside concrete arrays and scalars
+        dtype = getattr(leaf, "dtype", None) or np.asarray(leaf).dtype
+        leaves.append(a.astype(dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def zero1_reshard(key: str, arr, shape):
+    """Reshard hook for ZeRO-1 ``(N, L)`` state leaves saved on a
+    different device count (`optim.optimizers.zero1`).
+
+    The flat concatenation ``arr.reshape(-1)`` is the logical state; rows
+    are just how it was dealt across N devices, and the tail beyond the
+    parameter count is zero padding by construction (zero grads keep
+    element-wise moments at zero).  So restoring onto N' devices is
+    truncate-or-extend to ``N' * L'`` then reshape — bit-exact on every
+    logical entry.  Truncation is only accepted when the dropped tail IS
+    zero (anything else means the layouts genuinely disagree, e.g. a
+    different model — the strict error must fire); non-ZeRO leaves
+    return None and keep the strict contract.
+    """
+    if "zero1" not in key or arr.ndim != 2 or len(shape) != 2:
+        return None
+    flat = arr.reshape(-1)
+    cap = int(shape[0]) * int(shape[1])
+    if flat.size > cap:
+        if np.any(flat[cap:] != 0):
+            return None                 # dropped tail isn't padding
+        flat = flat[:cap]
+    elif flat.size < cap:
+        flat = np.concatenate(
+            [flat, np.zeros(cap - flat.size, dtype=arr.dtype)])
+    return flat.reshape(shape)
 
 
 def latest_step(path: str) -> int:
@@ -153,20 +194,21 @@ def checkpoint_steps(root: str) -> List[int]:
     return sorted(steps)
 
 
-def restore_latest(root: str, template) -> Tuple[int, Any, Optional[dict],
-                                                 int]:
+def restore_latest(root: str, template, *,
+                   reshard=None) -> Tuple[int, Any, Optional[dict], int]:
     """Newest VALID snapshot: ``(step, tree, manifest, n_skipped)``.
 
     Walks snapshots newest-first; a snapshot that fails to load (torn
     write, truncated npz, missing manifest, leaf mismatch) is skipped and
     the previous one is tried — the corrupt-checkpoint fallback.  Returns
     ``(0, None, None, n_skipped)`` when no valid snapshot exists.
+    ``reshard`` is forwarded to :func:`restore` (ZeRO-1 shard layouts).
     """
     skipped = 0
     for step in reversed(checkpoint_steps(root)):
         path = step_dir(root, step)
         try:
-            tree = restore(path, template)
+            tree = restore(path, template, reshard=reshard)
             man = manifest(path)
             return step, tree, man, skipped
         except Exception:
@@ -174,8 +216,9 @@ def restore_latest(root: str, template) -> Tuple[int, Any, Optional[dict],
     return 0, None, None, skipped
 
 
-def restore_latest_mirrored(root: str, mirror: Optional[str],
-                            template) -> Tuple[int, Any, Optional[dict], int]:
+def restore_latest_mirrored(root: str, mirror: Optional[str], template, *,
+                            reshard=None) -> Tuple[int, Any, Optional[dict],
+                                                   int]:
     """Newest valid snapshot across a primary root AND its mirror.
 
     The bidirectional fallback for :class:`AsyncCheckpointer`'s mirror
@@ -197,7 +240,8 @@ def restore_latest_mirrored(root: str, mirror: Optional[str],
             if not os.path.isdir(path):
                 continue
             try:
-                return step, restore(path, template), manifest(path), skipped
+                return (step, restore(path, template, reshard=reshard),
+                        manifest(path), skipped)
             except Exception:
                 skipped += 1
     return 0, None, None, skipped
@@ -213,6 +257,13 @@ class AsyncCheckpointer:
     temp-dir + ``os.rename`` and carry a manifest with the step, the
     topology that wrote them, and the precision policy — recovery uses it
     to decide how to reshard and at what precision to resume.
+
+    Shard-aware: ZeRO-1 sharded optimizer state (`optimizers.zero1`'s
+    ``(N, L)`` leaves) is snapshotted as the full logical array
+    (``np.asarray`` gathers sharded buffers), so a snapshot written at
+    one device count restores onto any other via
+    :func:`zero1_reshard` — elastic re-mesh and resume stay bit-pinned
+    on every logical state entry.
 
     Write resilience: ``retries`` re-attempts a failed snapshot write
     with exponential backoff (``retry_backoff_s * 2^attempt``) before

@@ -37,7 +37,6 @@ from typing import Callable, Iterable, Optional, Sequence
 
 import jax
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.launch import mesh as mesh_lib
 from repro.train import checkpoint as ckpt_lib
@@ -160,10 +159,11 @@ class ElasticEngine:
         if resume:
             ckpt_step, tree, _man, skipped = \
                 ckpt_lib.restore_latest_mirrored(
-                    self.ckpt.root, self.ckpt.mirror, template)
+                    self.ckpt.root, self.ckpt.mirror, template,
+                    reshard=ckpt_lib.zero1_reshard)
             report["fallbacks"] += skipped
             if tree is not None:
-                state = jax.device_put(tree, NamedSharding(eng.mesh, P()))
+                state = jax.device_put(tree, eng._state_shardings(tree))
                 start = ckpt_step
                 report["resumed_from"] = ckpt_step
         while start < steps:
@@ -198,13 +198,14 @@ class ElasticEngine:
                     report["restarts"] += 1
                 ckpt_step, tree, _man, skipped = \
                     ckpt_lib.restore_latest_mirrored(
-                        self.ckpt.root, self.ckpt.mirror, template)
+                        self.ckpt.root, self.ckpt.mirror, template,
+                        reshard=ckpt_lib.zero1_reshard)
                 report["fallbacks"] += skipped
                 if tree is None:            # no valid snapshot: from scratch
                     state, start = None, 0
                 else:                       # reshard onto the new mesh
                     state = jax.device_put(
-                        tree, NamedSharding(eng.mesh, P()))
+                        tree, eng._state_shardings(tree))
                     start = ckpt_step
                 dt = time.perf_counter() - t0
                 report["recovery_s"] += dt

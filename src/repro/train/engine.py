@@ -197,17 +197,24 @@ class Engine:
         Donate the input state buffers to each step (default True).
     grad_reduce
         Reduction strategy for the gradients (``"flat"`` |
-        ``"hierarchical"`` | a callable).  In the custom loop ``flat`` is
-        the classic psum-mean over all data axes and ``hierarchical`` is
-        the 2-level cluster schedule (intra-node psum over the fast axis,
-        bucketed psums over the slow ``node`` axis — see
-        ``collectives.make_grad_reduce``); both are numerically
-        interchangeable.  In the builtin loop GSPMD owns reduction
-        placement (the paper's point about built-in strategies), so
-        ``hierarchical`` only regroups the gradient stream into buckets
-        (``collectives.bucket_transform``, identity numerics).
+        ``"hierarchical"`` | ``"overlap"`` | a callable).  In the custom
+        loop ``flat`` is the classic psum-mean over all data axes,
+        ``hierarchical`` is the 2-level cluster schedule (intra-node psum
+        over the fast axis, bucketed psums over the slow ``node`` axis —
+        see ``collectives.make_grad_reduce``), and ``overlap`` issues the
+        same hierarchical buckets in reverse parameter order from INSIDE
+        the backward pass (``collectives.OverlapReduce`` — each bucket's
+        collective fires as soon as its gradients exist); all are
+        numerically interchangeable.  In the builtin loop GSPMD owns
+        reduction placement (the paper's point about built-in
+        strategies), so ``hierarchical`` only regroups the gradient
+        stream into buckets (``collectives.bucket_transform``) and
+        ``overlap`` does the same regrouping inside the backward
+        (``collectives.overlap_transform``) — identity numerics either
+        way.
     bucket_mb
-        Inter-node bucket size in MiB for the hierarchical strategy.
+        Inter-node bucket size in MiB for the hierarchical and overlap
+        strategies.
     """
 
     def __init__(self, mesh: Mesh, loop: str = "builtin", *,
@@ -298,9 +305,37 @@ class Engine:
 
     # -- state & step compilation -------------------------------------------
 
+    def state_pspecs(self, state_like):
+        """PartitionSpec per state leaf: replicated everywhere EXCEPT
+        ZeRO-1 shard-major leaves — arrays under an optimizer's
+        ``"zero1"`` subtree whose leading dim equals the data-shard count
+        (`optim.optimizers.zero1`'s ``(N, L)`` layout) are sharded over
+        the data axes on dim 0.  That placement is the ZeRO-1 memory
+        story: each device physically holds 1/N of the master params and
+        optimizer moments."""
+        if not self.axes or self.n_shards <= 1:
+            return jax.tree.map(lambda _: P(), state_like)
+        ax = self.axes if len(self.axes) > 1 else self.axes[0]
+
+        def spec(path, leaf):
+            in_zero1 = any(getattr(e, "key", None) == "zero1" for e in path)
+            if in_zero1 and getattr(leaf, "ndim", 0) >= 1 \
+                    and leaf.shape[0] == self.n_shards:
+                return P(ax)
+            return P()
+
+        return jax.tree_util.tree_map_with_path(spec, state_like)
+
+    def _state_shardings(self, state_like):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            self.state_pspecs(state_like),
+                            is_leaf=lambda x: isinstance(x, P))
+
     def init_state(self, task: Task, rng: jax.Array):
-        """Initialise the task state, replicated over the whole mesh."""
-        return jax.device_put(task.init(rng), NamedSharding(self.mesh, P()))
+        """Initialise the task state: replicated over the whole mesh,
+        except ZeRO-1 state shards (see :meth:`state_pspecs`)."""
+        state = task.init(rng)
+        return jax.device_put(state, self._state_shardings(state))
 
     def _grad_reduce(self, tree):
         """Explicit gradient reduction for the custom loop, per strategy:
@@ -325,6 +360,10 @@ class Engine:
         b_specs = self.batch_pspecs(batch_like, task.batch_dims)
         b_shard = {k: NamedSharding(self.mesh, s) for k, s in b_specs.items()}
         donate = (0,) if self.donate else ()
+        # state placement: replicated except ZeRO-1 shard-major leaves
+        state_shapes = jax.eval_shape(lambda: task.init(jax.random.key(0)))
+        s_specs = self.state_pspecs(state_shapes)
+        s_shard = self._state_shardings(state_shapes)
 
         if self.loop == "builtin":
             # GSPMD inserts the gradient all-reduce itself; hierarchical
@@ -335,13 +374,22 @@ class Engine:
                 reduce = self.grad_reduce
             elif self.grad_reduce == "hierarchical":
                 reduce = collectives.bucket_transform(self.bucket_bytes)
+            elif self.grad_reduce == "overlap":
+                reduce = collectives.overlap_transform(self.bucket_bytes)
             else:
                 reduce = None
             step = task.make_step(grad_reduce=reduce, mesh=self.mesh)
-            return jax.jit(step, in_shardings=(rep, b_shard, rep),
-                           out_shardings=(rep, rep), donate_argnums=donate)
+            return jax.jit(step, in_shardings=(s_shard, b_shard, rep),
+                           out_shardings=(s_shard, rep),
+                           donate_argnums=donate)
 
-        local = task.make_step(grad_reduce=self._grad_reduce, mesh=None)
+        # the reducer OBJECT is passed through (not a bound method) so
+        # the overlap strategy's wrap_params protocol reaches the step
+        reduce = (collectives.make_grad_reduce(
+            self.grad_reduce, self.mesh, self.axes,
+            bucket_bytes=self.bucket_bytes) if self.axes
+            else (self.grad_reduce if callable(self.grad_reduce) else None))
+        local = task.make_step(grad_reduce=reduce, mesh=None)
         axes, shape = self.axes, dict(self.mesh.shape)
 
         def local_step(state, batch, rng):
@@ -357,10 +405,10 @@ class Engine:
             return state, metrics
 
         smapped = shard_map(local_step, mesh=self.mesh,
-                            in_specs=(P(), b_specs, P()),
-                            out_specs=(P(), P()), check_rep=False)
-        return jax.jit(smapped, in_shardings=(rep, b_shard, rep),
-                       out_shardings=(rep, rep), donate_argnums=donate)
+                            in_specs=(s_specs, b_specs, P()),
+                            out_specs=(s_specs, P()), check_rep=False)
+        return jax.jit(smapped, in_shardings=(s_shard, b_shard, rep),
+                       out_shardings=(s_shard, rep), donate_argnums=donate)
 
     def build(self, task: Task, batch_shapes: Mapping[str, Any]) -> Built:
         """AOT artifact: jitted step + ShapeDtypeStruct args for .lower().

@@ -50,12 +50,20 @@ def make_train_step(model, cfg, optimizer, policy, mesh=None,
     clipping and the optimizer update.  The data-parallel engine's
     custom loop passes an explicit psum-mean here (the step then runs as
     a per-device program under shard_map); leave ``None`` under jit,
-    where GSPMD inserts the gradient all-reduce itself.
+    where GSPMD inserts the gradient all-reduce itself.  A reducer
+    exposing ``wrap_params`` (``collectives.OverlapReduce``,
+    ``grad_reduce="overlap"``) is applied to the params INSIDE the loss
+    instead, so each bucket's collective issues mid-backward; the
+    post-hoc call is then the identity.
     """
     from repro.parallel import sharding as sharding_lib
 
+    wrap_params = getattr(grad_reduce, "wrap_params", None)
+
     def grad_of(params, mb):
         def loss(p):
+            if wrap_params is not None:
+                p = wrap_params(p)
             with sharding_lib.seq_sharding(seq_shard):
                 return model.loss_fn(p, mb, cfg, policy=policy, mesh=mesh,
                                      remat=remat)
@@ -95,15 +103,24 @@ def make_train_step(model, cfg, optimizer, policy, mesh=None,
     return train_step
 
 
-def grad_reduce_traffic(model, cfg) -> dict:
+def grad_reduce_traffic(model, cfg, bucket_bytes=None) -> dict:
     """LM analogue of ``adversarial.grad_reduce_traffic``: one gradient
-    reduction per step, param-tree-sized.  Feeds cloud/interconnect."""
+    reduction per step, param-tree-sized.  Feeds cloud/interconnect.
+    ``bucket_bytes`` adds the overlap reducer's per-round tail-bucket
+    bytes (see ``adversarial.grad_reduce_traffic``)."""
     import numpy as np
     shapes = jax.eval_shape(lambda: model.init(jax.random.key(0), cfg))
-    nbytes = int(sum(np.prod(s.shape) * s.dtype.itemsize
-                     for s in jax.tree.leaves(shapes)))
-    return {"rounds": [("step", nbytes)], "bytes_per_step": nbytes,
-            "largest_round_bytes": nbytes}
+    leaves = jax.tree.leaves(shapes)
+    nbytes = int(sum(np.prod(s.shape) * s.dtype.itemsize for s in leaves))
+    out = {"rounds": [("step", nbytes)], "bytes_per_step": nbytes,
+           "largest_round_bytes": nbytes}
+    if bucket_bytes is not None:
+        from repro.parallel import collectives
+        out["tail_bytes"] = {"step": max(
+            int(sum(np.prod(leaves[i].shape) * leaves[i].dtype.itemsize
+                    for i in bucket))
+            for bucket in collectives.plan_buckets(leaves, bucket_bytes))}
+    return out
 
 
 def make_serve_step(model, cfg, policy, mesh=None, window: int = 0):

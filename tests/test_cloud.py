@@ -116,11 +116,30 @@ def test_tpu_pod_inter_link_is_ici():
 def test_exposed_comm_overlap_hides_bucketed_reduction():
     topo = gpu_topology(8)
     rounds = [("g", 32 << 20)]
-    total = interconnect.exposed_comm_s(rounds, topo, "hierarchical",
+    total = interconnect.exposed_comm_s(rounds, topo, "overlap",
                                         compute_s=0.0)
-    hidden = interconnect.exposed_comm_s(rounds, topo, "hierarchical",
+    hidden = interconnect.exposed_comm_s(rounds, topo, "overlap",
                                          compute_s=10.0)
     assert 0 < hidden < total
+    # post-backward strategies reduce after the gradients exist: no
+    # backward window to hide under, every byte exposed
+    for strat in ("flat", "hierarchical"):
+        assert interconnect.exposed_comm_s(rounds, topo, strat,
+                                           compute_s=10.0) \
+            == interconnect.exposed_comm_s(rounds, topo, strat,
+                                           compute_s=0.0)
+
+
+def test_exposed_comm_overlap_floors_at_tail_buckets():
+    # the exposed floor is the per-round tail: with huge compute the
+    # remainder is exactly the tail buckets' reduction time
+    topo = gpu_topology(8)
+    rounds = [("g", 32 << 20)]
+    tail = {"g": 4 << 20}
+    floor = interconnect.exposed_comm_s(rounds, topo, "overlap",
+                                        compute_s=100.0, tail_bytes=tail)
+    assert floor == pytest.approx(
+        interconnect.allreduce_s(4 << 20, topo, "overlap"))
 
 
 def test_unknown_strategy_raises():

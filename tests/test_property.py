@@ -178,6 +178,23 @@ def test_plan_buckets_rejects_nonpositive_cap():
         collectives.plan_buckets([np.zeros(4, np.float32)], 0)
 
 
+@given(leaves=st.lists(_LEAF, min_size=0, max_size=12),
+       bucket_kb=st.sampled_from((1, 4, 16)))
+@settings(max_examples=25, deadline=None)
+def test_reverse_bucket_schedule_is_exact_permutation(leaves, bucket_kb):
+    """The overlap reducer's issue order: reverse_bucket_schedule must be
+    EXACTLY plan_buckets reversed — same buckets, same intra-bucket leaf
+    order, no leaf dropped or duplicated.  (A dropped leaf would silently
+    skip its gradient reduction; a duplicate would double-reduce.)"""
+    arrs = [np.zeros(n, jnp.dtype(d)) for n, d in leaves]
+    cap = bucket_kb * 1024
+    plan = collectives.plan_buckets(arrs, cap)
+    sched = collectives.reverse_bucket_schedule(arrs, cap)
+    assert sched == list(reversed(plan))
+    flat = sorted(i for b in sched for i in b)
+    assert flat == list(range(len(arrs)))
+
+
 # ---------------------------------------------------------------------------
 # checkpoint roundtrip over random pytrees / dtypes / shardings
 # ---------------------------------------------------------------------------

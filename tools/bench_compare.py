@@ -7,7 +7,10 @@ visible in the diff.  This tool makes that gate mechanical:
 - **time-like metrics** (keys ending ``_ms`` / ``_s``, plus ``step_ms``
   rows): a regression is FRESH > BASELINE * (1 + tol);
 - **rate-like metrics** (``events_per_s``, ``samples_per_s``,
-  ``*_speedup``, ``speedup``): a regression is FRESH < BASELINE * (1 - tol).
+  ``*_speedup``, ``speedup``): a regression is FRESH < BASELINE * (1 - tol);
+- **ratio metrics** (``*efficiency*``: lower is worse; ``*_frac`` —
+  exposed-comm / overhead fractions: higher is worse): dimensionless and
+  machine-normalized, so they are gated even under ``--relative-only``.
 
 Rows are matched by their identity fields (non-numeric values like
 ``layer`` / ``global_batch``), so re-ordered rows still compare.  Metrics
@@ -42,6 +45,14 @@ def _is_rate(key: str) -> bool:
 def _is_time(key: str) -> bool:
     return (key.endswith("_ms") or key.endswith("_s")) \
         and key not in SKIP_KEYS
+
+
+def _is_higher_better_ratio(key: str) -> bool:
+    return "efficiency" in key
+
+
+def _is_lower_better_ratio(key: str) -> bool:
+    return key.endswith("_frac")
 
 
 def _row_identity(row: dict):
@@ -95,6 +106,10 @@ def compare_file(name: str, fresh: dict, base: dict, tol: float,
                 if relative_only and not key.endswith("speedup"):
                     continue
                 worse = rel < -tol
+            elif _is_higher_better_ratio(key):
+                worse = rel < -tol        # dimensionless: gated always
+            elif _is_lower_better_ratio(key):
+                worse = rel > tol
             elif _is_time(key):
                 if relative_only:         # absolute ms: machine-specific
                     continue

@@ -31,8 +31,8 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--results", default="results",
                     help="dir with BENCH_fig1_loop.json (measured anchor)")
-    ap.add_argument("--grad-reduce", default="hierarchical",
-                    choices=("flat", "hierarchical"))
+    ap.add_argument("--grad-reduce", default="overlap",
+                    choices=("flat", "hierarchical", "overlap"))
     ap.add_argument("--bucket-mb", type=float, default=4.0)
     ap.add_argument("--base-epoch-s", type=float, default=5200.0,
                     help="paper's measured 2-GPU epoch anchor for the "
