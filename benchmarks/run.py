@@ -116,6 +116,11 @@ def main():
     _run_inproc("serve_fastsim", bench_serve_fastsim.main, failures,
                 write=False)
 
+    _banner("Serving — LM continuous batching (chunked prefill, decode)")
+    from benchmarks import bench_serve_lm
+    # writes its own BENCH_serve_lm.json with backend/routing metadata
+    _run_inproc("serve_lm", bench_serve_lm.main, failures, write=False)
+
     _banner("Kernel — fused Pallas conv3d vs lax.conv (fwd / fwd+bwd)")
     from benchmarks import bench_kernel_conv3d
     # writes its own BENCH_kernel_conv3d.json with backend/config metadata

@@ -86,6 +86,7 @@ def _ensure_families() -> None:
     import importlib
     for mod in ("repro.kernels.conv3d.tiles",
                 "repro.kernels.flash_attention.tune",
+                "repro.kernels.flash_attention.decode",
                 "repro.kernels.ssm_scan.tune"):
         try:
             importlib.import_module(mod)
@@ -258,6 +259,23 @@ def default_interpret() -> bool:
 
 def resolve_interpret(interpret: Optional[bool]) -> bool:
     return default_interpret() if interpret is None else bool(interpret)
+
+
+def default_use_pallas(env_var: str) -> bool:
+    """Launcher-level kernel-routing default: ON on real TPUs, OFF
+    elsewhere, overridable per flag family via its env var (``1`` /
+    ``true`` / ``yes`` / ``on`` force on; ``0`` / ``false`` / ``no`` /
+    ``off`` force off).  Resolved once at launcher startup and frozen
+    into the ArchConfig, so the routing decision is trace-time static
+    like every other config field.
+    """
+    env = os.environ.get(env_var, "").lower()
+    if env in ("1", "true", "yes", "on"):
+        return True
+    if env in ("0", "false", "no", "off"):
+        return False
+    import jax
+    return jax.default_backend() == "tpu"
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,315 @@
+"""Split-KV flash-decode: single-query Pallas attention for serving.
+
+Decode attention is one query row against a long KV cache — the shape the
+training kernel is worst at: its grid walks kv blocks SEQUENTIALLY per
+(batch, kv-head) program, so a 32k cache is one long serial sweep and the
+MXU sees a single (G, block_kv) tile at a time.  This kernel splits the
+cache into ``num_splits`` independent grid programs per (batch, kv-head):
+
+- each split runs the usual online-softmax sweep over its own kv blocks
+  and emits UNNORMALISED partials — the f32 accumulator ``acc``, the
+  running row-max ``m`` and the running denominator ``l``;
+- a second (pure-JAX) stage, :func:`combine_splits`, merges the partials
+  with the standard log-sum-exp algebra: ``o = sum_s acc_s * exp(m_s -
+  m*) / sum_s l_s * exp(m_s - m*)``.  The merge is exactly associative
+  over splits, so the split count/order is a pure scheduling knob
+  (pinned by the parity suite and a hypothesis property).
+
+Ragged continuous batching: every row carries its own valid cache length
+``kv_len`` (SMEM scalar per program); blocks entirely past a row's
+length are SKIPPED dynamically, so short slots don't pay for the longest
+slot's cache.  GQA folds the G query heads of one kv head into the score
+matmul rows, like the training kernel.
+
+The (block_kv, num_splits) schedule is the ``DecodeBlocks`` autotune
+family (kind ``attn_dec``) on the shared per-device disk cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import autotune as autotune_lib
+from repro.kernels.autotune import resolve_interpret
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# schedule family
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeBlocks:
+    """Schedule for the decode kernel: kv tile size and the number of
+    independent cache splits (grid parallelism across the cache)."""
+    block_kv: int = 128
+    num_splits: int = 1
+
+
+def signature(batch: int, seq_kv: int, heads: int, kv_heads: int,
+              d_head: int, window: int, dtype=None):
+    """Hashable problem identity for one decode shape.  ``seq_kv`` is the
+    CACHE CAPACITY (the static T of the serving cache), not the live
+    ragged length — the schedule must be fixed at trace time."""
+    base = ("attn_dec", int(batch), int(seq_kv), int(heads), int(kv_heads),
+            int(d_head), int(window))
+    if dtype is None:
+        return base
+    return base + (autotune_lib.dtype_name(dtype),)
+
+
+_SIG_LEN = 7
+
+
+def default_blocks(sig) -> DecodeBlocks:
+    """Decode is bandwidth-bound: small caches stay single-split (the
+    combine has a fixed cost), long caches split every ~2k positions up
+    to 8 ways so the sweep depth per program stays bounded."""
+    T = sig[2]
+    return DecodeBlocks(block_kv=128 if T <= 2048 else 256,
+                        num_splits=max(1, min(8, T // 2048)))
+
+
+def candidate_blocks(sig) -> List[DecodeBlocks]:
+    """block_kv x num_splits sweep, deduplicated after clamping to the
+    cache capacity (a 256-cache measures one split count, not four
+    aliases of it)."""
+    T = sig[2]
+    cands, seen = [], set()
+    for bkv in (64, 128, 256, 512):
+        for ns in (1, 2, 4, 8):
+            eff_b = min(bkv, T)
+            n_blocks = -(-T // eff_b)
+            eff_s = min(ns, n_blocks)
+            if (eff_b, eff_s) in seen:
+                continue
+            seen.add((eff_b, eff_s))
+            cands.append(DecodeBlocks(block_kv=bkv, num_splits=ns))
+    return cands
+
+
+# ---------------------------------------------------------------------------
+# kernel
+# ---------------------------------------------------------------------------
+
+
+def _decode_kernel(kvlen_ref, q_ref, k_ref, v_ref, acc_out, m_out, l_out,
+                   acc_scr, m_scr, l_scr, *, scale: float, window: int,
+                   block_kv: int, blocks_per_split: int):
+    si = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    kv_len = kvlen_ref[0, 0]
+    k_start = (si * blocks_per_split + j) * block_kv
+
+    # dynamic block skip: nothing valid in this tile for this row.  The
+    # query sits at kv_len - 1, so "causal" is just kpos < kv_len; a
+    # sliding window additionally drops blocks entirely below it.
+    run = k_start < kv_len
+    if window:
+        run = jnp.logical_and(run, k_start + block_kv > kv_len - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0]                                # (G, D)
+        G, D = q.shape
+        k = k_ref[0, :, 0, :]                          # (bk, D)
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (G, bk)
+        kpos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (G, block_kv), 1)
+        mask = kpos < kv_len
+        if window:
+            mask &= kpos > kv_len - 1 - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                            # (G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        e = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(e, axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            e.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)        # (G, D)
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = m_new
+
+    @pl.when(j == blocks_per_split - 1)
+    def _finalize():
+        G, D = acc_scr.shape
+        # UNNORMALISED partials — the combine owns the normalisation.
+        # An entirely-skipped split writes (acc=0, m=NEG_INF, l=0), which
+        # the combine weights to exactly zero.
+        acc_out[...] = acc_scr[...].reshape(1, 1, 1, G, D)
+        m_out[...] = m_scr[:, 0].reshape(1, 1, 1, 1, G)
+        l_out[...] = l_scr[:, 0].reshape(1, 1, 1, 1, G)
+
+
+def combine_splits(acc, m, l):
+    """Merge per-split online-softmax partials (second decode stage).
+
+    acc: (..., S, G, D) unnormalised f32 accumulators; m, l: (..., S, G)
+    running max / denominator per split.  Returns the normalised
+    (..., G, D) attention output.  Pure log-sum-exp algebra — invariant
+    to how positions were partitioned into splits (hypothesis-pinned);
+    empty splits (l == 0, m == NEG_INF) contribute exactly nothing.
+    """
+    m_glob = jnp.max(m, axis=-2)                       # (..., G)
+    w = jnp.exp(m - m_glob[..., None, :])              # (..., S, G)
+    w = jnp.where(l > 0, w, 0.0)
+    l_glob = jnp.sum(l * w, axis=-2)                   # (..., G)
+    o = jnp.sum(acc * w[..., None], axis=-3)           # (..., G, D)
+    return o / jnp.maximum(l_glob, 1e-30)[..., None]
+
+
+def flash_decode(q, k, v, kv_len, *, window: int = 0,
+                 block_kv: Optional[int] = None,
+                 num_splits: Optional[int] = None,
+                 interpret: Optional[bool] = None):
+    """Single-query decode attention against a ragged KV cache.
+
+    q: (B, 1, H, D); k/v: (B, T, KH, D) cache at CAPACITY T; kv_len: (B,)
+    per-row valid lengths (the query lives at position kv_len - 1).
+    Returns (B, 1, H, D) in q's dtype.  Schedule from the shared autotune
+    registry unless (block_kv, num_splits) are forced (the parity suite
+    uses that to pin split-count numerics-freedom).
+    """
+    interpret = resolve_interpret(interpret)
+    B, S, H, D = q.shape
+    assert S == 1, f"flash_decode is single-query (got S={S})"
+    T, KH = k.shape[1], k.shape[2]
+    assert H % KH == 0, (H, KH)
+    G = H // KH
+    if block_kv is None or num_splits is None:
+        sched = autotune_lib.get_schedule(
+            signature(B, T, H, KH, D, window, k.dtype))
+        block_kv = block_kv or sched.block_kv
+        num_splits = num_splits or sched.num_splits
+    block_kv = max(1, min(block_kv, T))
+    n_blocks = -(-T // block_kv)
+    blocks_per_split = -(-n_blocks // max(1, num_splits))
+    n_splits = -(-n_blocks // blocks_per_split)
+    pad_t = n_splits * blocks_per_split * block_kv - T
+    if pad_t:
+        k = jnp.pad(k, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+
+    qg = q[:, 0].reshape(B, KH, G, D)
+    kvl = jnp.asarray(kv_len, jnp.int32).reshape(B, 1)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=1.0 / (D ** 0.5), window=window,
+        block_kv=block_kv, blocks_per_split=blocks_per_split)
+
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid=(B, KH, n_splits, blocks_per_split),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, s, j: (b, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, D), lambda b, h, s, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_kv, 1, D),
+                         lambda b, h, s, j, bps=blocks_per_split:
+                         (b, s * bps + j, h, 0)),
+            pl.BlockSpec((1, block_kv, 1, D),
+                         lambda b, h, s, j, bps=blocks_per_split:
+                         (b, s * bps + j, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, G, D), lambda b, h, s, j: (b, h, s, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1, G), lambda b, h, s, j: (b, h, s, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1, G), lambda b, h, s, j: (b, h, s, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KH, n_splits, G, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, KH, n_splits, 1, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, KH, n_splits, 1, G), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kvl, qg, k, v)
+
+    # (B, KH, S, 1, G) -> (B, KH, S, G); acc stays (B, KH, S, G, D)
+    m = m[:, :, :, 0, :]
+    l = l[:, :, :, 0, :]
+    o = combine_splits(acc, m, l)                      # (B, KH, G, D)
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# autotune wiring
+# ---------------------------------------------------------------------------
+
+
+def _build_problem(sig):
+    """Representative decode step: ragged kv_len staggered across the
+    batch (half-full to full cache), forward-only jitted run."""
+    import numpy as np
+
+    _, B, T, H, KH, D, window = sig[:_SIG_LEN]
+    dtype = jnp.dtype(sig[_SIG_LEN]) if len(sig) > _SIG_LEN else jnp.float32
+    kq, kk, kv = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(kq, (B, 1, H, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(kk, (B, T, KH, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(kv, (B, T, KH, D), jnp.float32).astype(dtype)
+    kvl = jnp.asarray(np.maximum(
+        1, np.linspace(T // 2, T, B).astype(np.int32)))
+    interpret = autotune_lib.default_interpret()
+
+    def make(blocks: DecodeBlocks):
+        return jax.jit(lambda q_, k_, v_, l_: flash_decode(
+            q_, k_, v_, l_, window=window, block_kv=blocks.block_kv,
+            num_splits=blocks.num_splits, interpret=interpret))
+
+    args = (q, k, v, kvl)
+
+    def run(blocks: DecodeBlocks, steps: int = 3, repeats: int = 3) -> float:
+        return autotune_lib.time_min_of_repeats(make(blocks), args, steps,
+                                                repeats)
+
+    return run
+
+
+def model_signatures(cfg, max_len: int, batch: int = 4, dtype=None) -> list:
+    """The decode signature one serving config hits: (slots, cache
+    capacity, attention geometry).  Hybrid archs decode through the
+    shared block, which runs at 2x width over the shared-attention ring."""
+    if cfg.family == "hybrid":
+        from repro.models.zamba import _SHARED_WINDOW, _shared_cfg
+        scfg = _shared_cfg(cfg)
+        cap = min(max_len, _SHARED_WINDOW)
+        return [signature(batch, cap, scfg.n_heads, scfg.n_kv_heads,
+                          scfg.d_head, 0, dtype)]
+    return [signature(batch, max_len, cfg.n_heads, cfg.n_kv_heads,
+                      cfg.d_head, 0, dtype)]
+
+
+autotune_lib.register_kernel(autotune_lib.KernelSpec(
+    family="flash_decode",
+    kinds=("attn_dec",),
+    schedule_cls=DecodeBlocks,
+    sig_len=_SIG_LEN,
+    default=default_blocks,
+    candidates=candidate_blocks,
+    build=_build_problem,
+))

@@ -176,6 +176,141 @@ def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
 
 
 # ---------------------------------------------------------------------------
+# chunked-prefill forward (serving): per-row query offset + ragged kv_len
+# ---------------------------------------------------------------------------
+
+
+def _flash_chunk_kernel(off_ref, kvl_ref, q_ref, k_ref, v_ref, o_ref,
+                        acc_ref, m_ref, l_ref, *, scale: float, window: int,
+                        block_q: int, block_kv: int):
+    """The forward online-softmax sweep, with the causal structure shifted
+    by a PER-ROW dynamic query offset (the slot's cache position) and the
+    kv extent bounded by a per-row dynamic ``kv_len`` instead of the
+    static cache capacity.  Forward-only: serving never differentiates
+    through the cache, so no LSE output."""
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    n_kv = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_off = off_ref[0, 0]
+    kv_len = kvl_ref[0, 0]
+    q_start = qi * block_q
+    k_start = ki * block_kv
+
+    # dynamic block skip: past the row's live cache, or entirely above the
+    # (offset-shifted) causal diagonal, or entirely below the window
+    run = jnp.logical_and(k_start < kv_len,
+                          k_start <= q_off + q_start + block_q - 1)
+    if window:
+        run = jnp.logical_and(
+            run, k_start + block_kv > q_off + q_start - window + 1)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0]                                   # (bq, G, D)
+        bq, G, D = q.shape
+        q2 = q.reshape(bq * G, D)
+        k = k_ref[0, :, 0, :]
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            q2, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq*G, bk)
+
+        rows = jax.lax.broadcasted_iota(jnp.int32, (bq * G, block_kv), 0)
+        qpos = q_off + q_start + rows // G
+        kpos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (bq * G, block_kv), 1)
+        mask = jnp.logical_and(kpos < kv_len, qpos >= kpos)
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        e = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(e, axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            e.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        bq, G, D = q_ref[0].shape
+        # fully-masked rows (inactive slots, padded chunk tail) have l = 0
+        # and finalize to exactly 0 — finite, never NaN
+        o = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = o.reshape(1, bq, G, D).astype(o_ref.dtype)
+
+
+def flash_attention_chunk(q, k, v, q_offset, kv_len, *, window: int = 0,
+                          block_q: int = 128, block_kv: int = 128,
+                          interpret: bool | None = None):
+    """Prompt-chunk attention against a ragged cache (serving prefill).
+
+    q: (B, C, H, D) — one chunk of C prompt positions per slot, whose
+    row i sits at absolute cache position ``q_offset[b] + i``; k/v:
+    (B, T, KH, D) cache at capacity T, already containing this chunk's
+    keys; kv_len: (B,) per-row total live length.  Rows past a slot's
+    live prompt (and entirely inactive slots, kv_len = 0) yield exact
+    zeros.  Returns (B, C, H, D) in q's dtype.
+    """
+    interpret = resolve_interpret(interpret)
+    B, C, H, D = q.shape
+    T, KH = k.shape[1], k.shape[2]
+    assert H % KH == 0, (H, KH)
+    G = H // KH
+    block_q = min(block_q, C)
+    block_kv = min(block_kv, T)
+    n_q = -(-C // block_q)
+    n_kv = -(-T // block_kv)
+    pad_c = n_q * block_q - C
+    pad_t = n_kv * block_kv - T
+    if pad_c:
+        q = jnp.pad(q, ((0, 0), (0, pad_c), (0, 0), (0, 0)))
+    if pad_t:
+        k = jnp.pad(k, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+    off = jnp.asarray(q_offset, jnp.int32).reshape(B, 1)
+    kvl = jnp.asarray(kv_len, jnp.int32).reshape(B, 1)
+
+    kernel = functools.partial(
+        _flash_chunk_kernel, scale=1.0 / (D ** 0.5), window=window,
+        block_q=block_q, block_kv=block_kv)
+
+    smem = pl.BlockSpec((1, 1), lambda b, h, qi, ki: (b, 0),
+                        memory_space=pltpu.SMEM)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KH, n_q, n_kv),
+        in_specs=[
+            smem, smem,
+            pl.BlockSpec((1, block_q, G, D), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, block_kv, 1, D), lambda b, h, qi, ki: (b, ki, h, 0)),
+            pl.BlockSpec((1, block_kv, 1, D), lambda b, h, qi, ki: (b, ki, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, G, D),
+                               lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, n_q * block_q, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q * G, D), jnp.float32),
+            pltpu.VMEM((block_q * G, 1), jnp.float32),
+            pltpu.VMEM((block_q * G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(off, kvl, q, k, v)
+    return out[:, :C]
+
+
+# ---------------------------------------------------------------------------
 # backward kernels (flash-2 recompute)
 # ---------------------------------------------------------------------------
 

@@ -29,11 +29,27 @@ from repro.models import api
 from repro.serve.engine import Request, ServeEngine
 
 
+def _resolve_pallas_routing(cfg, args):
+    """TPU-default kernel routing (satellite of the decode-kernel PR):
+    --pallas-attn/--pallas-ssm override, else REPRO_PALLAS_ATTN /
+    REPRO_PALLAS_SSM, else ON exactly on real TPUs.  Frozen into the
+    config here, so the decision is trace-time static."""
+    import dataclasses as _dc
+
+    from repro.kernels import autotune as autotune_lib
+    attn = (args.pallas_attn if args.pallas_attn is not None
+            else autotune_lib.default_use_pallas("REPRO_PALLAS_ATTN"))
+    ssm = (args.pallas_ssm if args.pallas_ssm is not None
+           else autotune_lib.default_use_pallas("REPRO_PALLAS_SSM"))
+    return _dc.replace(cfg, use_pallas_attn=attn, use_pallas_ssm=ssm)
+
+
 def serve_lm(args):
     cfg = (config_base.reduced_config(args.arch) if args.reduced
            else config_base.get_config(args.arch))
     if not cfg.decode_supported:
         raise SystemExit(f"{args.arch} does not support decode")
+    cfg = _resolve_pallas_routing(cfg, args)
     model = api.get_model(cfg)
     params = model.init(jax.random.key(args.seed), cfg)
     mesh = make_dev_mesh(data=len(jax.devices()))
@@ -170,6 +186,16 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--pallas-attn", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="route attention through the Pallas kernels "
+                         "(default: on on TPU, off elsewhere; env "
+                         "REPRO_PALLAS_ATTN overrides)")
+    ap.add_argument("--pallas-ssm", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="route SSM scans through the Pallas kernels "
+                         "(default: on on TPU, off elsewhere; env "
+                         "REPRO_PALLAS_SSM overrides)")
     # gan route
     ap.add_argument("--ckpt", default="",
                     help="generator checkpoint dir (launch/train --ckpt)")

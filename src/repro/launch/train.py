@@ -98,6 +98,8 @@ def train_gan(args, mesh, log: MetricLog):
 def train_lm(args, mesh, log: MetricLog):
     cfg = (config_base.reduced_config(args.arch) if args.reduced
            else config_base.get_config(args.arch))
+    from repro.launch.serve import _resolve_pallas_routing
+    cfg = _resolve_pallas_routing(cfg, args)
     model = api.get_model(cfg)
     policy = get_policy(args.policy or "f32")
     optimizer = opt_lib.adamw(opt_lib.warmup_cosine(args.lr, 20, args.steps))
@@ -186,6 +188,16 @@ def main():
                          "defers to --policy, then the config's "
                          "precision field (bf16)")
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--pallas-attn", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="LM archs: route attention through the Pallas "
+                         "kernels (default: on on TPU, off elsewhere; env "
+                         "REPRO_PALLAS_ATTN overrides)")
+    ap.add_argument("--pallas-ssm", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="LM archs: route SSM scans through the Pallas "
+                         "kernels (default: on on TPU, off elsewhere; env "
+                         "REPRO_PALLAS_SSM overrides)")
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--log", default="")
     ap.add_argument("--log-every", type=int, default=1,

@@ -30,6 +30,10 @@ class Model(NamedTuple):
     cache_logical_axes: Callable
     prefill: Callable
     decode_step: Callable
+    # chunked batched prefill for serving (KV-cache / recurrent-state archs
+    # that can ingest a prompt chunk in one launch); None -> the engine
+    # falls back to sequential token-by-token prefill
+    prefill_chunk: Optional[Callable] = None
 
 
 def get_model(cfg: ArchConfig) -> Model:
@@ -44,7 +48,8 @@ def get_model(cfg: ArchConfig) -> Model:
     else:
         raise ValueError(cfg.family)
     return Model(m.init, m.logical_axes, m.loss_fn, m.init_cache,
-                 m.cache_logical_axes, m.prefill, m.decode_step)
+                 m.cache_logical_axes, m.prefill, m.decode_step,
+                 getattr(m, "prefill_chunk", None))
 
 
 # ---------------------------------------------------------------------------

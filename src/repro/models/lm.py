@@ -326,9 +326,9 @@ def decode_step(params, tokens1, cache, pos, cfg, *, policy, positions=None,
         k = attn_lib.apply_rope(k, cos, sin) if cos is not None else k
         kc = _write(kc, k)
         vc = _write(vc, v)
-        o = attn_lib.dot_attention(
+        o = attn_lib.attend(
             q, kc.astype(q.dtype), vc.astype(q.dtype), causal=False,
-            kv_len=kv_len)
+            kv_len=kv_len, use_pallas=cfg.use_pallas_attn)
         o = layers.apply_dense(block_p["attn"]["wo"], o.reshape(B, 1, cfg.q_dim))
         h = h + o
         hn = layers.apply_norm(block_p["ln2"], h, cfg.norm_type)
@@ -342,6 +342,77 @@ def decode_step(params, tokens1, cache, pos, cfg, *, policy, positions=None,
                                          cache["k"], cache["v"]))
     h = layers.apply_norm(cparams["ln_f"], h, cfg.norm_type)
     logits = h @ _head_matrix(cparams, cfg).astype(h.dtype)
+    return logits.astype(jnp.float32), {"k": ks, "v": vs}
+
+
+def prefill_chunk(params, tokens, cache, pos, lens, cfg, *, policy,
+                  positions=None, mesh=None, window=0):
+    """Batched chunked prefill: run C prompt positions for every active
+    slot in ONE launch, writing K/V straight into each slot's cache region.
+
+    tokens: (B, C) prompt chunk per slot; pos: (B,) absolute cache
+    position of each slot's chunk start; lens: (B,) valid tokens of this
+    chunk per slot (0 = slot not prefilling — its cache row and logits
+    are left untouched / unused).  Requires pos + lens <= T (the engine
+    caps prompts at the cache capacity, so chunk writes never wrap the
+    ring).  Returns (last-valid-token logits (B, 1, V), cache).
+    """
+    cparams = policy.cast_to_compute(params)
+    x = layers.apply_embed(cparams["embed"], tokens, policy.compute_dtype)
+    B, C, _ = x.shape
+    T = cache["k"].shape[2]
+    pos = jnp.asarray(pos, jnp.int32)
+    lens = jnp.asarray(lens, jnp.int32)
+    kv_len = pos + lens                                      # (B,)
+    qpos = pos[:, None] + jnp.arange(C)[None]                # (B, C)
+    if positions is None:
+        positions = (jnp.broadcast_to(qpos[None], (3, B, C))
+                     if cfg.mrope else qpos)
+    cos, sin = _rope_for(cfg, positions, x.dtype)
+    x = sharding.constrain_batch(x, mesh, seq_dim=1)
+
+    t = jnp.arange(T)
+    write_mask = (t[None] >= pos[:, None]) & (t[None] < kv_len[:, None])
+    gather_idx = jnp.clip(t[None] - pos[:, None], 0, C - 1)  # (B, T)
+
+    def _write(c, new):
+        """Masked scatter of the chunk into [pos, pos+lens) per row — a
+        gather + where rather than dynamic_update_slice, so rows whose
+        chunk tail is padding (i >= lens) never touch the cache and
+        inactive rows (lens = 0) are bit-identical no-ops."""
+        g = jnp.take_along_axis(new.astype(c.dtype),
+                                gather_idx[:, :, None, None], axis=1)
+        return jnp.where(write_mask[:, :, None, None], g, c)
+
+    def body(h, xs):
+        block_p, kc, vc = xs
+        if mesh is not None:                      # H2: see apply_block
+            block_p = sharding.constrain_tree(block_p, block_axes(cfg),
+                                              mesh, sharding.TP_RULES)
+        hn = layers.apply_norm(block_p["ln1"], h, cfg.norm_type)
+        q, k, v = attn_lib.project_qkv(block_p["attn"], hn, cfg)
+        q = attn_lib.apply_rope(q, cos, sin) if cos is not None else q
+        k = attn_lib.apply_rope(k, cos, sin) if cos is not None else k
+        kc = _write(kc, k)
+        vc = _write(vc, v)
+        o = attn_lib.attend(
+            q, kc.astype(q.dtype), vc.astype(q.dtype), causal=True,
+            kv_len=kv_len, q_offset=pos, use_pallas=cfg.use_pallas_attn)
+        o = layers.apply_dense(block_p["attn"]["wo"], o.reshape(B, C, cfg.q_dim))
+        h = h + o
+        hn = layers.apply_norm(block_p["ln2"], h, cfg.norm_type)
+        if cfg.moe is not None:
+            f, _, _ = moe_lib.apply_moe(block_p["moe"], hn, cfg)
+        else:
+            f = layers.apply_ffn(block_p["ffn"], hn, cfg.ffn_type)
+        return h + f, (kc, vc)
+
+    h, (ks, vs) = jax.lax.scan(body, x, (cparams["blocks"],
+                                         cache["k"], cache["v"]))
+    h = layers.apply_norm(cparams["ln_f"], h, cfg.norm_type)
+    last = jnp.clip(lens - 1, 0, C - 1)                      # (B,)
+    h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)  # (B,1,d)
+    logits = h_last @ _head_matrix(cparams, cfg).astype(h.dtype)
     return logits.astype(jnp.float32), {"k": ks, "v": vs}
 
 

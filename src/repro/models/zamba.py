@@ -87,9 +87,10 @@ def _apply_shared(sp, x, x0, cfg, cos, sin, cache=None, pos=None):
             cb, nb, i, axis=0))(kc, k.astype(kc.dtype), idx)
         vc = jax.vmap(lambda cb, nb, i: jax.lax.dynamic_update_slice_in_dim(
             cb, nb, i, axis=0))(vc, v.astype(vc.dtype), idx)
-        o = attn_lib.dot_attention(q, kc.astype(q.dtype), vc.astype(q.dtype),
-                                   causal=False,
-                                   kv_len=jnp.broadcast_to(kv_len, (B,)))
+        o = attn_lib.attend(q, kc.astype(q.dtype), vc.astype(q.dtype),
+                            causal=False,
+                            kv_len=jnp.broadcast_to(kv_len, (B,)),
+                            use_pallas=cfg.use_pallas_attn)
         new_kv = (kc, vc)
     o = layers.apply_dense(sp["out"], o.reshape(B, S, scfg.q_dim))
     x = x + o
@@ -215,6 +216,113 @@ def decode_step(params, tokens1, cache, pos, cfg, *, policy, mesh=None, **_):
             si += 1
     h = layers.apply_norm(cparams["ln_f"], x, "rmsnorm")
     logits = h @ cparams["head"]["w"].astype(h.dtype)
+    new_cache = {
+        "mamba": ssm.Mamba2State(ssm=jnp.stack(new_m_ssm),
+                                 conv=jnp.stack(new_m_conv)),
+        "shared_k": sk, "shared_v": sv,
+    }
+    return logits.astype(jnp.float32), new_cache
+
+
+def _apply_shared_chunk(sp, x, x0, cfg, cos, sin, kc, vc, pos, kv_len,
+                        write_mask, gather_idx):
+    """Shared block over a prompt chunk against the per-slot KV ring:
+    masked-scatter the chunk's K/V into [pos, pos+lens) per row, then
+    offset-causal ragged attention (see models.lm.prefill_chunk)."""
+    scfg = _shared_cfg(cfg)
+    B, C, _ = x.shape
+    h = jnp.concatenate([x, x0], axis=-1)
+    h = layers.apply_norm(sp["ln"], h, "rmsnorm")
+    q, k, v = attn_lib.project_qkv(sp["attn"], h, scfg)
+    q, k = attn_lib.apply_rope(q, cos, sin), attn_lib.apply_rope(k, cos, sin)
+
+    def _write(c, new):
+        g = jnp.take_along_axis(new.astype(c.dtype),
+                                gather_idx[:, :, None, None], axis=1)
+        return jnp.where(write_mask[:, :, None, None], g, c)
+
+    kc, vc = _write(kc, k), _write(vc, v)
+    o = attn_lib.attend(q, kc.astype(q.dtype), vc.astype(q.dtype),
+                        causal=True, kv_len=kv_len, q_offset=pos,
+                        use_pallas=cfg.use_pallas_attn)
+    o = layers.apply_dense(sp["out"], o.reshape(B, C, scfg.q_dim))
+    x = x + o
+    hn = layers.apply_norm(sp["ln2"], x, "rmsnorm")
+    x = x + layers.apply_ffn(sp["ffn"], hn, cfg.ffn_type)
+    return x, (kc, vc)
+
+
+def prefill_chunk(params, tokens, cache, pos, lens, cfg, *, policy,
+                  mesh=None, **_):
+    """Batched chunked prefill for the hybrid arch.
+
+    tokens: (B, C); pos/lens: (B,) chunk start positions / valid lengths
+    (0 = inactive slot: its mamba state, KV ring rows and logits are
+    untouched).  Requires pos + lens <= win (the engine prefills from
+    pos 0 with prompts capped at capacity, so chunk writes never wrap
+    the shared ring).
+
+    The mamba recurrence is inherently sequential, but it is CHEAP per
+    position — the win here is running all C positions of all B slots
+    through ONE launch (a lax.scan of ``mamba2_step`` collecting the
+    per-position states) instead of C global decode steps.  Ragged tails
+    are handled by gathering each row's state at its own ``lens - 1``
+    position, so padded tokens never corrupt the recurrent state.
+    """
+    cparams = policy.cast_to_compute(params)
+    x = layers.apply_embed(cparams["embed"], tokens, policy.compute_dtype)
+    x0 = x
+    B, C, _ = x.shape
+    win = cache["shared_k"].shape[2]
+    pos = jnp.asarray(pos, jnp.int32)
+    lens = jnp.asarray(lens, jnp.int32)
+    kv_len = pos + lens
+    qpos = pos[:, None] + jnp.arange(C)[None]                # (B, C)
+    cos, sin = attn_lib.rope_cos_sin(qpos, _shared_cfg(cfg).d_head,
+                                     cfg.rope_theta, x.dtype)
+    t = jnp.arange(win)
+    write_mask = (t[None] >= pos[:, None]) & (t[None] < kv_len[:, None])
+    gather_idx = jnp.clip(t[None] - pos[:, None], 0, C - 1)  # (B, win)
+    sel = jnp.clip(lens - 1, 0, C - 1)                       # (B,)
+    active = lens > 0
+    rows = jnp.arange(B)
+
+    def _pick(stacked, old):
+        """Each row's state after ITS last valid token; inactive rows
+        keep their old state bit-identically."""
+        picked = stacked[sel, rows]                          # (B, ...)
+        m = active.reshape((B,) + (1,) * (picked.ndim - 1))
+        return jnp.where(m, picked.astype(old.dtype), old)
+
+    shared_ids = _shared_idx(cfg)
+    new_m_ssm, new_m_conv = [], []
+    sk, sv = cache["shared_k"], cache["shared_v"]
+    si = 0
+    for i in range(cfg.n_layers):
+        block = jax.tree.map(lambda t_: t_[i], cparams["mamba"])
+        st0 = ssm.Mamba2State(ssm=cache["mamba"].ssm[i],
+                              conv=cache["mamba"].conv[i])
+        hn = layers.apply_norm(block["ln"], x, "rmsnorm")
+
+        def step(st, x1, block=block):
+            y1, st2 = ssm.mamba2_step(block["m"], x1[:, None], st,
+                                      cfg.d_model, cfg.ssm)
+            return st2, (y1[:, 0], st2)
+
+        _, (ys, sts) = jax.lax.scan(step, st0, jnp.moveaxis(hn, 1, 0))
+        x = x + jnp.moveaxis(ys, 0, 1)
+        new_m_ssm.append(_pick(sts.ssm, st0.ssm))
+        new_m_conv.append(_pick(sts.conv, st0.conv))
+        if i in shared_ids:
+            x, (kc, vc) = _apply_shared_chunk(
+                cparams["shared"], x, x0, cfg, cos, sin, sk[si], sv[si],
+                pos, kv_len, write_mask, gather_idx)
+            sk = sk.at[si].set(kc)
+            sv = sv.at[si].set(vc)
+            si += 1
+    h = layers.apply_norm(cparams["ln_f"], x, "rmsnorm")
+    h_last = jnp.take_along_axis(h, sel[:, None, None], axis=1)  # (B,1,d)
+    logits = h_last @ cparams["head"]["w"].astype(h.dtype)
     new_cache = {
         "mamba": ssm.Mamba2State(ssm=jnp.stack(new_m_ssm),
                                  conv=jnp.stack(new_m_conv)),

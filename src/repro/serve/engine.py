@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import api
-from repro.serve.scheduler import Scheduler, SchedulerConfig
+from repro.serve.scheduler import Rejection, Scheduler, SchedulerConfig
 from repro.substrate.precision import get_policy
 from repro.train import steps as steps_lib
 
@@ -38,6 +38,10 @@ class Request:
     done: bool = False
     status: str = "queued"          # "queued" | "done" | "rejected"
     error: Optional[dict] = None
+    # absolute SLA deadline (engine clock), kept so in-flight slot
+    # requests can be expired mid-decode (the scheduler stops tracking a
+    # request once pop_next hands it to a slot)
+    _abs_deadline: Optional[float] = None
 
 
 class ServeEngine:
@@ -53,7 +57,8 @@ class ServeEngine:
     def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 512,
                  policy_name: str = "f32", mesh=None,
                  sched: Optional[SchedulerConfig] = None,
-                 clock=time.monotonic):
+                 clock=time.monotonic, prefill: str = "auto",
+                 prefill_chunk: int = 128):
         self.cfg = cfg
         self.model = api.get_model(cfg)
         self.policy = get_policy(policy_name)
@@ -64,6 +69,24 @@ class ServeEngine:
 
         self._decode = jax.jit(steps_lib.make_serve_step(
             self.model, cfg, self.policy, mesh=mesh))
+        # prompt ingestion: "chunked" runs C prompt tokens per slot in ONE
+        # batched prefill_chunk launch (token-identical to sequential —
+        # pinned by tests); "sequential" is the legacy token-by-token path
+        # every arch supports; "auto" picks chunked whenever the arch
+        # exports a prefill_chunk (recurrent-only archs like xlstm don't).
+        if prefill not in ("auto", "chunked", "sequential"):
+            raise ValueError(f"unknown prefill mode {prefill!r}")
+        if prefill == "auto":
+            prefill = "chunked" if self.model.prefill_chunk is not None \
+                else "sequential"
+        elif prefill == "chunked" and self.model.prefill_chunk is None:
+            raise ValueError(
+                f"arch family {cfg.family!r} has no chunked prefill path")
+        self.prefill_mode = prefill
+        self._chunk = max(1, min(prefill_chunk, max_len))
+        if prefill == "chunked":
+            self._prefill_fn = jax.jit(steps_lib.make_prefill_chunk_step(
+                self.model, cfg, self.policy, mesh=mesh))
         # per-slot state: one cache of batch=slots; per-slot positions.
         # The cache holds activations, so it lives in the policy's COMPUTE
         # dtype (bf16 under the bf16 policy, f32 under f32) — not a
@@ -86,6 +109,7 @@ class ServeEngine:
         req.tokens = []
         deadline = (self.clock() + float(req.deadline_s)
                     if req.deadline_s is not None else None)
+        req._abs_deadline = deadline
         res = self.scheduler.admit(req, rid=req.rid,
                                    n_events=req.max_new_tokens,
                                    priority=req.priority, deadline=deadline)
@@ -95,6 +119,7 @@ class ServeEngine:
     def run(self, max_steps: int = 10_000):
         """Drive until queue + slots drain (or max_steps)."""
         for _ in range(max_steps):
+            self._sweep_slot_deadlines()
             self._fill_slots()
             if all(r is None for r in self.slot_req):
                 break
@@ -108,15 +133,46 @@ class ServeEngine:
         req.error = rej.to_dict()
         self.rejected.append(req)
 
+    def _sweep_slot_deadlines(self):
+        """Expire IN-FLIGHT requests whose SLA deadline has passed.
+
+        ``scheduler.expire()`` only covers queued requests — once
+        ``pop_next`` hands a request to a slot the scheduler stops
+        tracking it, so without this sweep a request that blows its
+        deadline mid-decode would keep burning slot time to completion
+        and be delivered late anyway.  Finalized as a structured
+        deadline rejection, like a queue-side expiry."""
+        now = self.clock()
+        for s in range(self.slots):
+            req = self.slot_req[s]
+            if req is None or req._abs_deadline is None:
+                continue
+            if now > req._abs_deadline:
+                self._reject(req, Rejection(
+                    rid=req.rid, reason="deadline",
+                    detail=f"deadline exceeded mid-decode after "
+                           f"{len(req.tokens)} tokens", t=now,
+                    priority=req.priority))
+                req.done = True
+                self.slot_req[s] = None
+
     def _fill_slots(self):
         for item, rej in self.scheduler.expire():
             self._reject(item, rej)
+        newly = []
         for s in range(self.slots):
             if self.slot_req[s] is None:
                 req = self.scheduler.pop_next()
                 if req is None:
                     break
                 self.slot_req[s] = req
+                newly.append((s, req))
+        if not newly:
+            return
+        if self.prefill_mode == "chunked":
+            self._prefill_chunked(newly)
+        else:
+            for s, req in newly:
                 self._prefill_slot(s, req)
 
     def _merge_slot(self, new_cache, old_cache, slot: int):
@@ -169,6 +225,54 @@ class ServeEngine:
         self.cache = self._merge_slot(self.cache, snapshot, s)
         # after the prompt, cur_tok[s] holds the model's first sampled token
         req.tokens.append(int(self.cur_tok[s, 0]))
+
+    def _prefill_chunked(self, pairs):
+        """Batched chunked prefill: ingest every newly-admitted prompt in
+        ceil(prompt_len / chunk) ``prefill_chunk`` launches TOTAL (all new
+        slots ride the same launch), instead of prompt_len global decode
+        steps PER slot.  The chunk step masks inactive rows (lens = 0)
+        inside the model — other slots' cache rows, recurrent state and
+        ``pos`` are untouched, so no snapshot/merge is needed (pinned by
+        the pos-freeze test).  Token-identical to ``_prefill_slot``."""
+        prompts = {}
+        for s, req in pairs:
+            self._zero_slot(s)
+            self.pos[s] = 0
+            prompts[s] = np.asarray(req.prompt, np.int32).reshape(-1)
+        C = self._chunk
+        offset = {s: 0 for s in prompts}
+        first_tok = {}
+        while any(offset[s] < len(prompts[s]) for s in prompts):
+            tokens = np.zeros((self.slots, C), np.int32)
+            lens = np.zeros((self.slots,), np.int32)
+            for s, p in prompts.items():
+                n = min(C, len(p) - offset[s])
+                if n > 0:
+                    tokens[s, :n] = p[offset[s]:offset[s] + n]
+                    lens[s] = n
+            extra = {}
+            if self.cfg.mrope:
+                qp = (self.pos[:, None] + np.arange(C)).astype(np.int32)
+                extra["positions"] = jnp.asarray(
+                    np.broadcast_to(qp[None], (3, self.slots, C)))
+            nxt, self.cache = self._prefill_fn(
+                self.params, jnp.asarray(tokens), self.cache,
+                jnp.asarray(self.pos, jnp.int32), jnp.asarray(lens), extra)
+            nxt = np.asarray(nxt)
+            for s in prompts:
+                n = int(lens[s])
+                if n == 0:
+                    continue
+                self.pos[s] += n
+                offset[s] += n
+                if offset[s] >= len(prompts[s]):
+                    first_tok[s] = int(nxt[s])
+        for s, req in pairs:
+            # empty prompt: no launch sampled anything — keep the slot's
+            # stale cur_tok, matching the sequential path's behavior
+            tok = first_tok.get(s, int(self.cur_tok[s, 0]))
+            self.cur_tok[s, 0] = tok
+            req.tokens.append(tok)
 
     def _step(self, active_slot: Optional[int] = None):
         """One global decode step (all slots advance; inactive slots are

@@ -192,14 +192,37 @@ def blockwise_attention(q, k, v, *, causal=True, window=0,
 
 
 def attend(q, k, v, *, causal=True, window=0, use_pallas=False,
-           seq_len=None):
-    """Training/prefill attention router shared by the model zoo.
+           seq_len=None, kv_len=None, q_offset=None):
+    """Training/prefill/decode attention router shared by the model zoo.
 
     ``use_pallas=True`` routes to the flash-attention Pallas kernels
     (forward AND backward; block sizes from the shared autotune
     registry).  The pure-JAX fallback picks ``dot_attention`` for short
     sequences and ``blockwise_attention`` beyond 1k, as before.
+
+    A non-None ``kv_len`` (per-row (B,) live cache lengths) selects the
+    SERVING branch: single-query calls (S=1, no ``q_offset``) hit the
+    split-KV flash-decode kernel; chunked prefill calls pass ``q_offset``
+    (per-row (B,) absolute position of the chunk's first query) and hit
+    the offset-aware chunk kernel.  The pure-JAX serving fallback is
+    ``dot_attention`` with the matching ragged masks.
     """
+    if kv_len is not None:
+        if use_pallas:
+            if q.shape[1] == 1 and q_offset is None:
+                from repro.kernels.flash_attention.decode import flash_decode
+                return flash_decode(q, k, v, kv_len, window=window)
+            from repro.kernels.flash_attention.flash_attention import (
+                flash_attention_chunk)
+            off = q_offset if q_offset is not None \
+                else jnp.maximum(kv_len - 1, 0)
+            return flash_attention_chunk(q, k, v, off, kv_len, window=window)
+        if q_offset is None:
+            return dot_attention(q, k, v, causal=False, window=window,
+                                 kv_len=kv_len)
+        qpos = q_offset[:, None] + jnp.arange(q.shape[1])[None]
+        return dot_attention(q, k, v, causal=causal, window=window,
+                             kv_len=kv_len, q_positions=qpos)
     S = q.shape[1] if seq_len is None else seq_len
     if use_pallas:
         from repro.kernels.flash_attention.ops import flash_attention

@@ -134,6 +134,21 @@ def make_serve_step(model, cfg, policy, mesh=None, window: int = 0):
     return serve_step
 
 
+def make_prefill_chunk_step(model, cfg, policy, mesh=None, window: int = 0):
+    """Chunked batched serving prefill: one launch ingests a (B, C)
+    prompt chunk per slot (ragged ``lens``; 0 = inactive slot) and
+    returns each active slot's next token sampled from its last valid
+    prompt position.  Only built for archs exporting ``prefill_chunk``."""
+    def prefill_chunk_step(params, tokens, cache, pos, lens, extra):
+        logits, cache = model.prefill_chunk(
+            params, tokens, cache, pos, lens, cfg, policy=policy, mesh=mesh,
+            window=window, positions=extra.get("positions"))
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return prefill_chunk_step
+
+
 def make_prefill_step(model, cfg, policy, mesh=None, window: int = 0):
     def prefill_step(params, batch):
         main = batch.get("audio_emb", batch.get("tokens"))

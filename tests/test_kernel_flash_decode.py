@@ -1,0 +1,254 @@
+"""Flash-decode Pallas kernel family (serving hot path): split-KV
+single-query parity vs the ragged dot_attention reference over kv_len /
+GQA / MQA / window, schedule (block_kv, num_splits) numerics-freedom,
+the chunked-prefill kernel's offset-causal parity, the no-score-matrix
+HLO guarantee of the decode route, and the DecodeBlocks autotune family.
+
+This is the decode third of the kernel tier-1 suite — CI runs it
+fail-fast alongside test_kernel_flash_attention.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune as autotune_lib
+from repro.kernels.flash_attention import decode as decode_lib
+from repro.kernels.flash_attention.decode import (combine_splits,
+                                                 flash_decode)
+from repro.kernels.flash_attention.flash_attention import (
+    flash_attention_chunk)
+from repro.substrate import attention as attn_lib
+
+RNG = np.random.default_rng(13)
+
+
+def _randn(shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.normal(0, 1, shape), dtype)
+
+
+def _case(B, T, H, KH, D, dtype=jnp.float32):
+    return (_randn((B, 1, H, D), dtype), _randn((B, T, KH, D), dtype),
+            _randn((B, T, KH, D), dtype))
+
+
+DECODE_CASES = [
+    # B, T, H, KH, D, kv_lens
+    (3, 96, 8, 2, 32, (1, 37, 96)),      # GQA, ragged
+    (2, 64, 4, 1, 16, (5, 64)),          # MQA
+    (1, 200, 4, 4, 64, (123,)),          # MHA, non-block T
+    (4, 128, 6, 3, 32, (128, 1, 64, 7)),  # 3-way GQA, full spread
+]
+
+
+# ---------------------------------------------------------------------------
+# single-query parity vs the ragged reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,T,H,KH,D,kv_lens", DECODE_CASES)
+def test_flash_decode_parity_ragged(B, T, H, KH, D, kv_lens):
+    q, k, v = _case(B, T, H, KH, D)
+    kvl = jnp.asarray(kv_lens, jnp.int32)
+    ref = attn_lib.dot_attention(q, k, v, causal=False, kv_len=kvl)
+    out = flash_decode(q, k, v, kvl, block_kv=32, num_splits=2)
+    assert out.shape == ref.shape and out.dtype == ref.dtype
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_flash_decode_window_parity():
+    """Sliding-window decode: the query sits at kv_len - 1, so the
+    reference is dot_attention with explicit q_positions."""
+    B, T, H, KH, D, w = 3, 128, 4, 2, 32, 48
+    q, k, v = _case(B, T, H, KH, D)
+    kvl = jnp.asarray([128, 60, 13], jnp.int32)
+    ref = attn_lib.dot_attention(q, k, v, causal=True, window=w, kv_len=kvl,
+                                 q_positions=(kvl - 1)[:, None])
+    out = flash_decode(q, k, v, kvl, window=w, block_kv=32, num_splits=2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("block_kv,num_splits",
+                         [(16, 1), (16, 4), (32, 2), (64, 8), (128, 1)])
+def test_flash_decode_schedule_is_numerics_free(block_kv, num_splits):
+    """Every (block_kv, num_splits) candidate is a pure scheduling choice
+    — the split-KV combine reproduces the single-sweep result."""
+    q, k, v = _case(2, 96, 8, 2, 32)
+    kvl = jnp.asarray([96, 41], jnp.int32)
+    ref = attn_lib.dot_attention(q, k, v, causal=False, kv_len=kvl)
+    out = flash_decode(q, k, v, kvl, block_kv=block_kv,
+                       num_splits=num_splits)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_flash_decode_bf16():
+    q32, k32, v32 = _case(2, 64, 4, 2, 32)
+    qb, kb, vb = (t.astype(jnp.bfloat16) for t in (q32, k32, v32))
+    kvl = jnp.asarray([64, 17], jnp.int32)
+    out = flash_decode(qb, kb, vb, kvl, block_kv=32, num_splits=2)
+    assert out.dtype == jnp.bfloat16
+    ref = attn_lib.dot_attention(q32, k32, v32, causal=False, kv_len=kvl)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               atol=3e-2)
+
+
+def test_attend_routes_decode_to_kernel():
+    """attend(kv_len=..., use_pallas=True) on a single query must match
+    the pure-JAX serving branch bit-for-tolerance."""
+    q, k, v = _case(2, 64, 4, 2, 32)
+    kvl = jnp.asarray([30, 64], jnp.int32)
+    ref = attn_lib.attend(q, k, v, causal=False, kv_len=kvl,
+                          use_pallas=False)
+    out = attn_lib.attend(q, k, v, causal=False, kv_len=kvl,
+                          use_pallas=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# combine_splits: the pure log-sum-exp merge
+# ---------------------------------------------------------------------------
+
+
+def test_combine_splits_matches_direct_softmax():
+    """Partition a score row into contiguous splits, build each split's
+    (acc, m, l) partials directly, and check the combine reproduces the
+    un-split softmax-weighted sum — including an EMPTY split."""
+    G, T, D, S = 4, 48, 16, 3
+    s = jnp.asarray(RNG.normal(0, 2, (G, T)), jnp.float32)
+    vv = jnp.asarray(RNG.normal(0, 1, (T, D)), jnp.float32)
+    direct = jax.nn.softmax(s, axis=-1) @ vv
+
+    bounds = [(0, 20), (20, 48), (48, 48)]          # last split empty
+    accs, ms, ls = [], [], []
+    for lo, hi in bounds:
+        if hi == lo:
+            accs.append(jnp.zeros((G, D)))
+            ms.append(jnp.full((G,), decode_lib.NEG_INF))
+            ls.append(jnp.zeros((G,)))
+            continue
+        blk = s[:, lo:hi]
+        m = jnp.max(blk, axis=-1)
+        e = jnp.exp(blk - m[:, None])
+        accs.append(e @ vv[lo:hi])
+        ms.append(m)
+        ls.append(jnp.sum(e, axis=-1))
+    out = combine_splits(jnp.stack(accs), jnp.stack(ms), jnp.stack(ls))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(direct),
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# chunked-prefill kernel: offset-causal ragged parity
+# ---------------------------------------------------------------------------
+
+
+def test_flash_chunk_parity_offset_causal():
+    B, C, T, H, KH, D = 3, 24, 96, 8, 2, 32
+    q = _randn((B, C, H, D))
+    k, v = _randn((B, T, KH, D)), _randn((B, T, KH, D))
+    off = jnp.asarray([0, 10, 40], jnp.int32)
+    lens = jnp.asarray([24, 24, 13], jnp.int32)
+    kvl = off + lens
+    qpos = off[:, None] + jnp.arange(C)[None]
+    ref = attn_lib.dot_attention(q, k, v, causal=True, kv_len=kvl,
+                                 q_positions=qpos)
+    out = flash_attention_chunk(q, k, v, off, kvl, block_q=16, block_kv=32)
+    for b in range(B):          # only rows inside each slot's live prompt
+        n = int(lens[b])
+        np.testing.assert_allclose(np.asarray(out[b, :n]),
+                                   np.asarray(ref[b, :n]), atol=2e-5)
+    assert bool(jnp.all(jnp.isfinite(out)))     # padded tail: exact zeros
+
+
+def test_flash_chunk_inactive_row_is_finite_zero():
+    B, C, T, H, KH, D = 2, 8, 32, 4, 2, 16
+    q = _randn((B, C, H, D))
+    k, v = _randn((B, T, KH, D)), _randn((B, T, KH, D))
+    off = jnp.asarray([0, 0], jnp.int32)
+    kvl = jnp.asarray([8, 0], jnp.int32)        # row 1 inactive
+    out = flash_attention_chunk(q, k, v, off, kvl, block_q=8, block_kv=16)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    np.testing.assert_array_equal(np.asarray(out[1]), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# no-score-matrix guarantee: the decode route must not materialize the
+# reference's (B, KH, G, 1, T) score tensor (no ref-oracle fallback)
+# ---------------------------------------------------------------------------
+
+
+def test_decode_hlo_has_no_materialized_scores():
+    B, T, H, KH, D = 2, 256, 8, 2, 32
+    q, k, v = _case(B, T, H, KH, D)
+    kvl = jnp.asarray([256, 100], jnp.int32)
+    tell = f"tensor<{B}x{KH}x{H // KH}x1x{T}xf32>"
+
+    # validity: the tell-tale is present in the REFERENCE decode lowering
+    ref_hlo = jax.jit(lambda a, b, c, l: attn_lib.dot_attention(
+        a, b, c, causal=False, kv_len=l)).lower(q, k, v, kvl).as_text()
+    assert tell in ref_hlo, "tell-tale string no longer matches the ref"
+
+    ker_hlo = jax.jit(lambda a, b, c, l: flash_decode(
+        a, b, c, l, block_kv=64, num_splits=2)).lower(
+        q, k, v, kvl).as_text()
+    assert tell not in ker_hlo, \
+        "flash_decode materialized the full score row (ref fallback?)"
+
+
+# ---------------------------------------------------------------------------
+# DecodeBlocks autotune family
+# ---------------------------------------------------------------------------
+
+
+def test_decode_schedule_registry_default_and_override():
+    sig = decode_lib.signature(4, 8192, 8, 2, 64, 0)
+    try:
+        d = autotune_lib.get_schedule(sig)
+        assert d == decode_lib.default_blocks(sig)
+        assert d.num_splits > 1     # long cache splits by default
+        autotune_lib.register_schedule(
+            sig, decode_lib.DecodeBlocks(block_kv=512, num_splits=4))
+        assert autotune_lib.get_schedule(sig).block_kv == 512
+        sigd = decode_lib.signature(4, 8192, 8, 2, 64, 0, jnp.bfloat16)
+        assert autotune_lib.get_schedule(sigd).block_kv == 512
+    finally:
+        autotune_lib.clear_registry()
+
+
+def test_decode_candidates_clamp_dedup():
+    sig = decode_lib.signature(4, 128, 8, 2, 64, 0)
+    cands = decode_lib.candidate_blocks(sig)
+    assert cands
+    effs = []
+    for c in cands:
+        eff_b = min(c.block_kv, 128)
+        effs.append((eff_b, min(c.num_splits, -(-128 // eff_b))))
+    assert len(effs) == len(set(effs)), "aliased effective schedules"
+
+
+def test_decode_registered_schedule_drives_the_wrapper():
+    q, k, v = _case(2, 96, 4, 2, 32)
+    kvl = jnp.asarray([96, 30], jnp.int32)
+    base = flash_decode(q, k, v, kvl)
+    sig = decode_lib.signature(2, 96, 4, 2, 32, 0, q.dtype)
+    try:
+        autotune_lib.register_schedule(
+            sig, decode_lib.DecodeBlocks(block_kv=16, num_splits=4))
+        out = flash_decode(q, k, v, kvl)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                                   atol=1e-5)
+    finally:
+        autotune_lib.clear_registry()
+
+
+def test_decode_model_signatures():
+    from repro.configs import base as config_base
+    from repro.models.zamba import _shared_cfg
+
+    cfg = config_base.reduced_config("qwen2-1.5b")
+    sigs = decode_lib.model_signatures(cfg, 256, batch=4)
+    assert sigs == [decode_lib.signature(4, 256, cfg.n_heads,
+                                         cfg.n_kv_heads, cfg.d_head, 0)]
+    hcfg = config_base.reduced_config("zamba2-1.2b")
+    scfg = _shared_cfg(hcfg)
+    (hsig,) = decode_lib.model_signatures(hcfg, 256, batch=4)
+    assert hsig[3:6] == (scfg.n_heads, scfg.n_kv_heads, scfg.d_head)

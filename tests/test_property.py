@@ -421,3 +421,50 @@ def test_autotune_manual_registration_beats_disk(data, tmp_path_factory):
         assert autotune_lib.get_schedule(sig) == manual
     finally:
         autotune_lib.clear_registry()
+
+
+# ---------------------------------------------------------------------------
+# flash-decode split-KV combine: invariant to the split partition
+# ---------------------------------------------------------------------------
+
+
+@given(data=st.data())
+@settings(**SETTINGS)
+def test_decode_combine_invariant_to_split_partition(data):
+    """For ANY contiguous partition of the KV axis (any split count, any
+    cut points, empty splits included) and ANY order of the splits, the
+    online-softmax combine equals the direct un-split softmax."""
+    from repro.kernels.flash_attention import decode as decode_lib
+
+    G = data.draw(st.integers(1, 4), label="groups")
+    T = data.draw(st.integers(1, 64), label="kv_len")
+    D = data.draw(st.integers(1, 8), label="d_head")
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31), "seed"))
+    s = jnp.asarray(rng.normal(0, 3, (G, T)), jnp.float32)
+    vv = jnp.asarray(rng.normal(0, 1, (T, D)), jnp.float32)
+    direct = jax.nn.softmax(s, axis=-1) @ vv
+
+    n_cuts = data.draw(st.integers(0, 6), label="n_cuts")
+    cuts = sorted(data.draw(st.lists(st.integers(0, T), min_size=n_cuts,
+                                     max_size=n_cuts), label="cuts"))
+    bounds = list(zip([0] + cuts, cuts + [T]))      # may contain empties
+    order = data.draw(st.permutations(range(len(bounds))), label="order")
+
+    accs, ms, ls = [], [], []
+    for i in order:
+        lo, hi = bounds[i]
+        if hi == lo:                                # empty split partial
+            accs.append(jnp.zeros((G, D)))
+            ms.append(jnp.full((G,), decode_lib.NEG_INF))
+            ls.append(jnp.zeros((G,)))
+        else:
+            blk = s[:, lo:hi]
+            m = jnp.max(blk, axis=-1)
+            e = jnp.exp(blk - m[:, None])
+            accs.append(e @ vv[lo:hi])
+            ms.append(m)
+            ls.append(jnp.sum(e, axis=-1))
+    out = decode_lib.combine_splits(jnp.stack(accs), jnp.stack(ms),
+                                    jnp.stack(ls))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(direct),
+                               atol=2e-5)

@@ -196,3 +196,103 @@ def test_ragged_engine_recurrent_state_isolation():
     together = {r.rid: r.tokens for r in eng.run()}
     for i in range(2):
         assert together[i] == solo[i], (i, together[i], solo[i])
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "zamba2-1.2b"])
+def test_chunked_prefill_matches_sequential(arch):
+    """The chunked batched prefill path must emit BIT-IDENTICAL tokens to
+    the legacy sequential prefill, including mid-run slot refills with
+    other slots actively decoding (5 requests through 3 slots)."""
+    cfg = config_base.reduced_config(arch)
+    model = api.get_model(cfg)
+    params = model.init(jax.random.key(0), cfg)
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, cfg.vocab, n, dtype=np.int32)
+               for n in (5, 12, 3, 9, 7)]
+
+    results = {}
+    for mode in ("sequential", "chunked"):
+        eng = ServeEngine(cfg, params, slots=3, max_len=64,
+                          prefill=mode, prefill_chunk=4)
+        assert eng.prefill_mode == mode
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=6))
+        results[mode] = {r.rid: r.tokens for r in eng.run()}
+    assert results["chunked"] == results["sequential"]
+
+
+def test_chunked_prefill_freezes_other_slots():
+    """A chunked prefill of a newly-filled slot must not advance the
+    decode position or next-token state of slots that are mid-decode."""
+    cfg = config_base.reduced_config("qwen2-1.5b")
+    model = api.get_model(cfg)
+    params = model.init(jax.random.key(0), cfg)
+    eng = ServeEngine(cfg, params, slots=2, max_len=64,
+                      prefill="chunked", prefill_chunk=4)
+    rng = np.random.default_rng(2)
+    eng.submit(Request(rid=0, prompt=rng.integers(0, cfg.vocab, 6,
+                                                  dtype=np.int32),
+                       max_new_tokens=10))
+    eng._fill_slots()
+    eng._step()
+    pos0, tok0 = int(eng.pos[0]), int(eng.cur_tok[0, 0])
+
+    eng.submit(Request(rid=1, prompt=rng.integers(0, cfg.vocab, 11,
+                                                  dtype=np.int32),
+                       max_new_tokens=10))
+    eng._fill_slots()            # chunked prefill of slot 1 only
+    assert int(eng.pos[0]) == pos0
+    assert int(eng.cur_tok[0, 0]) == tok0
+    assert int(eng.pos[1]) == 11
+    done = eng.run()
+    assert sorted(len(r.tokens) for r in done) == [10, 10]
+
+
+def test_chunked_prefill_mode_validation():
+    """auto falls back to sequential for archs without a chunked prefill
+    path; asking for chunked explicitly there is an error."""
+    cfg = config_base.reduced_config("xlstm-125m")
+    model = api.get_model(cfg)
+    params = model.init(jax.random.key(0), cfg)
+    eng = ServeEngine(cfg, params, slots=1, max_len=64, prefill="auto")
+    assert eng.prefill_mode == "sequential"
+    with pytest.raises(ValueError):
+        ServeEngine(cfg, params, slots=1, max_len=64, prefill="chunked")
+    kcfg = config_base.reduced_config("qwen2-1.5b")
+    kmodel = api.get_model(kcfg)
+    kparams = kmodel.init(jax.random.key(0), kcfg)
+    keng = ServeEngine(kcfg, kparams, slots=1, max_len=64)
+    assert keng.prefill_mode == "chunked"     # auto picks it up
+
+
+def test_engine_deadline_expires_in_flight_request():
+    """A request whose SLA deadline passes MID-DECODE is rejected with a
+    structured deadline rejection and frees its slot (regression: the
+    sweep used to cover only queued requests)."""
+    class _Clock:
+        t = 0.0
+
+        def __call__(self):
+            return self.t
+
+    clk = _Clock()
+    cfg = config_base.reduced_config("qwen2-1.5b")
+    model = api.get_model(cfg)
+    params = model.init(jax.random.key(0), cfg)
+    eng = ServeEngine(cfg, params, slots=1, max_len=64, clock=clk)
+    rng = np.random.default_rng(0)
+    eng.submit(Request(rid=0, prompt=rng.integers(0, cfg.vocab, 5,
+                                                  dtype=np.int32),
+                       max_new_tokens=20, deadline_s=5.0))
+    eng._fill_slots()
+    eng._step()
+    eng._step()
+    clk.t = 10.0                 # SLA blown with the request in a slot
+    eng._sweep_slot_deadlines()
+    assert eng.slot_req[0] is None
+    (req,) = eng.rejected
+    assert req.status == "rejected"
+    assert req.error["reason"] == "deadline"
+    assert "mid-decode" in req.error["detail"]
+    assert 0 < len(req.tokens) < 20
+    assert eng.run() == []       # engine is drained and idle again

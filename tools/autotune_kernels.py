@@ -15,6 +15,9 @@ and the benchmarks pick the tuned schedules up automatically.
   config at ``--seq-len``.
 - ``ssm``: the SSD-scan chunk signatures of a hybrid (Mamba2) config at
   ``--seq-len``.
+- ``decode``: the serving flash-decode (block_kv, num_splits) signatures
+  of an LM config AND a hybrid config at ``--max-len`` cache capacity
+  with ``--slots`` batch rows.
 
 The cache makes the sweep idempotent: a SECOND run performs ZERO
 measurements (every signature hits the cache), which is also this CLI's
@@ -22,9 +25,10 @@ self-check — it prints the measurement count and exits nonzero if
 ``--expect-cached`` is given but anything had to be measured.
 
   PYTHONPATH=src python tools/autotune_kernels.py \
-      [--families conv3d attn ssm] [--dtype float32 bfloat16] \
+      [--families conv3d attn ssm decode] [--dtype float32 bfloat16] \
       [--config bench|reduced|full] [--arch qwen2-1.5b] \
-      [--ssm-arch zamba2-1.2b] [--seq-len 128] [--train] [--steps 3] \
+      [--ssm-arch zamba2-1.2b] [--seq-len 128] [--max-len 256] \
+      [--slots 4] [--train] [--steps 3] \
       [--cache-dir results/autotune] [--expect-cached]
 """
 from __future__ import annotations
@@ -38,7 +42,7 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "src"))
 
-FAMILIES = ("conv3d", "attn", "ssm")
+FAMILIES = ("conv3d", "attn", "ssm", "decode")
 
 
 def _tune_signatures(sigs, steps, cache_dir):
@@ -90,6 +94,18 @@ def _ssm_report(args, dtype, cache_dir):
     return _tune_signatures(sigs, args.steps, cache_dir)
 
 
+def _decode_report(args, dtype, cache_dir):
+    from repro.configs import base as config_base
+    from repro.kernels.flash_attention import decode as decode_lib
+
+    sigs = []
+    for arch in (args.arch, args.ssm_arch):
+        cfg = config_base.reduced_config(arch)
+        sigs += decode_lib.model_signatures(cfg, args.max_len,
+                                            batch=args.slots, dtype=dtype)
+    return _tune_signatures(sigs, args.steps, cache_dir)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--families", nargs="+", default=list(FAMILIES),
@@ -104,6 +120,10 @@ def main(argv=None) -> int:
                     help="hybrid arch for the ssm family (reduced config)")
     ap.add_argument("--seq-len", type=int, default=128,
                     help="training sequence length for attn/ssm signatures")
+    ap.add_argument("--max-len", type=int, default=256,
+                    help="serving cache capacity for decode signatures")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="serving slot count (decode batch rows)")
     ap.add_argument("--train", action="store_true",
                     help="also tune the conv3d backward (dx/dw) signatures")
     ap.add_argument("--steps", type=int, default=3,
@@ -121,7 +141,7 @@ def main(argv=None) -> int:
     from repro.kernels import autotune as autotune_lib
 
     runners = {"conv3d": _conv3d_report, "attn": _attn_report,
-               "ssm": _ssm_report}
+               "ssm": _ssm_report, "decode": _decode_report}
     total = {"measured": 0, "cached": 0, "entries": []}
     for family in args.families:
         for dtype_name in args.dtype:
